@@ -1,0 +1,60 @@
+//! Figure-regeneration benches: one entry per paper table/figure.
+//! `cargo bench --bench figures` re-derives every evaluation artifact
+//! (quick parameterization) and times the harness itself.
+//!
+//! Full-resolution sweeps: `ooc-cholesky figure all` (CLI).
+
+use ooc_cholesky::figures;
+use ooc_cholesky::runtime::Runtime;
+use ooc_cholesky::util::bench::bench;
+
+fn main() {
+    println!("== paper figure harnesses (quick parameterization) ==\n");
+
+    bench("fig6_single_gpu_fp64", 0.0, 1, || {
+        let j = figures::fig6_single_gpu(&[16 * 1024, 96 * 1024, 160 * 1024]).unwrap();
+        figures::write_result("fig6_bench", &j).unwrap();
+    });
+
+    bench("fig7_traces", 0.0, 1, || {
+        let j = figures::fig7_traces(32 * 1024, 100).unwrap();
+        figures::write_result("fig7_bench", &j).unwrap();
+    });
+
+    bench("fig8_volumes", 0.0, 1, || {
+        let j = figures::fig8_volumes(&[64 * 1024]).unwrap();
+        figures::write_result("fig8_bench", &j).unwrap();
+    });
+
+    bench("fig9_multi_gpu", 0.0, 1, || {
+        let j = figures::fig9_multi_gpu(&[128 * 1024]).unwrap();
+        figures::write_result("fig9_bench", &j).unwrap();
+    });
+
+    match Runtime::open_default() {
+        Ok(rt) => {
+            bench("fig10_kl_divergence (real numerics)", 0.0, 1, || {
+                let j = figures::fig10_kl_divergence(&rt, &[512, 1024], 128).unwrap();
+                figures::write_result("fig10_bench", &j).unwrap();
+            });
+        }
+        Err(e) => println!("(skipping fig10: {e})"),
+    }
+
+    bench("fig11_mxp_perf", 0.0, 1, || {
+        let j = figures::fig11_mxp_perf(&[64 * 1024], 2048).unwrap();
+        figures::write_result("fig11_bench", &j).unwrap();
+    });
+
+    bench("fig12_mxp_volumes", 0.0, 1, || {
+        let j = figures::fig12_mxp_volumes(&[64 * 1024], 2048).unwrap();
+        figures::write_result("fig12_bench", &j).unwrap();
+    });
+
+    bench("fig13_mxp_traces", 0.0, 1, || {
+        let j = figures::fig13_mxp_traces(32 * 1024, 2048, 100).unwrap();
+        figures::write_result("fig13_bench", &j).unwrap();
+    });
+
+    println!("\nall figure harnesses completed; results under results/");
+}

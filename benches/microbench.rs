@@ -1,0 +1,147 @@
+//! L3 microbenchmarks: the coordinator's hot-path data structures plus
+//! real-mode kernel dispatch. Run with `cargo bench --bench microbench`.
+//!
+//! These are the §Perf profiling probes for the Rust layer: scheduler
+//! construction, progress-table ops, cache probe/insert/steal, precision
+//! quantization, covariance generation, DES throughput, and the PJRT
+//! per-call overhead that bounds real-mode task granularity.
+
+use std::sync::Arc;
+
+use ooc_cholesky::cache::CacheTable;
+use ooc_cholesky::config::{Mode, RunConfig, Version};
+use ooc_cholesky::metrics::Metrics;
+use ooc_cholesky::precision::Precision;
+use ooc_cholesky::sched::{ProgressTable, Schedule};
+use ooc_cholesky::util::bench::{bench, bench_throughput};
+use ooc_cholesky::util::rng::Rng;
+
+fn main() {
+    println!("== scheduler ==");
+    bench("schedule_build_left_looking_nt256", 0.5, 50, || {
+        let s = Schedule::left_looking(256, 4, 8);
+        assert!(s.total_jobs() > 0);
+        std::hint::black_box(&s);
+    });
+    bench("schedule_build_right_looking_nt128", 0.5, 50, || {
+        let s = Schedule::right_looking(128, 4, 8);
+        std::hint::black_box(&s);
+    });
+
+    println!("\n== progress table ==");
+    let pt = ProgressTable::new(512);
+    bench_throughput("progress_set+is_ready x 1e5", 0.5, 50, 100_000, || {
+        for k in 0..100_000usize {
+            let i = (k % 511) + 1;
+            pt.set_ready(i, k % i);
+            std::hint::black_box(pt.is_ready(i, k % i));
+        }
+    });
+
+    println!("\n== cache table ==");
+    let metrics = Metrics::new();
+    bench_throughput("cache_get_hit x 1e5", 0.5, 50, 100_000, || {
+        let mut c: CacheTable<u64> = CacheTable::new(u64::MAX, true);
+        for i in 0..64 {
+            c.insert((i, 0), 1, Arc::new(i as u64), &metrics);
+        }
+        for k in 0..100_000usize {
+            std::hint::black_box(c.get((k % 64, 0), &metrics));
+        }
+    });
+    bench_throughput("cache_insert_evict_churn x 1e4", 0.5, 50, 10_000, || {
+        let mut c: CacheTable<u64> = CacheTable::new(128, true);
+        for k in 0..10_000usize {
+            c.insert((k, k), 1, Arc::new(k as u64), &metrics);
+        }
+    });
+
+    println!("\n== precision emulation ==");
+    let mut rng = Rng::new(1);
+    let data: Vec<f64> = (0..256 * 256).map(|_| rng.normal()).collect();
+    for p in [Precision::F32, Precision::F16, Precision::F8] {
+        let mut buf = data.clone();
+        bench_throughput(
+            &format!("quantize_slice_{p}_256x256"),
+            0.3,
+            100,
+            (256 * 256) as u64,
+            || {
+                buf.copy_from_slice(&data);
+                std::hint::black_box(p.quantize_slice(&mut buf));
+            },
+        );
+    }
+
+    println!("\n== covariance generation ==");
+    bench("matern_build_2048_ts256", 1.0, 20, || {
+        let cfg = RunConfig { n: 2048, ts: 256, ..Default::default() };
+        std::hint::black_box(ooc_cholesky::ooc::build_matrix(&cfg));
+    });
+
+    println!("\n== DES throughput ==");
+    for (n, ts) in [(64 * 1024, 1024), (160 * 1024, 2048)] {
+        let cfg = RunConfig {
+            n,
+            ts,
+            version: Version::V3,
+            mode: Mode::Model,
+            streams_per_dev: 8,
+            ..Default::default()
+        };
+        let jobs = (cfg.nt() * (cfg.nt() + 1) / 2) as u64;
+        bench_throughput(&format!("des_v3_n{}k_ts{ts}", n / 1024), 1.0, 20, jobs, || {
+            std::hint::black_box(ooc_cholesky::ooc::factorize(&cfg, None).unwrap());
+        });
+    }
+
+    println!("\n== PJRT dispatch (real mode) ==");
+    match ooc_cholesky::runtime::Runtime::open_default() {
+        Ok(rt) => {
+            for ts in [64usize, 128, 256] {
+                let k = rt.kernel("gemm", ts, Precision::F64).unwrap();
+                let mut rng = Rng::new(2);
+                let t: Vec<f64> = (0..ts * ts).map(|_| rng.normal()).collect();
+                let (c, a, b) = (
+                    rt.upload(&t, ts).unwrap(),
+                    rt.upload(&t, ts).unwrap(),
+                    rt.upload(&t, ts).unwrap(),
+                );
+                let flops = 2 * (ts as u64).pow(3);
+                bench_throughput(&format!("pjrt_gemm_f64_ts{ts}"), 1.0, 200, flops, || {
+                    std::hint::black_box(k.run(&[&c, &a, &b]).unwrap());
+                });
+            }
+            // upload/download path
+            let ts = 256;
+            let mut rng = Rng::new(3);
+            let t: Vec<f64> = (0..ts * ts).map(|_| rng.normal()).collect();
+            bench("pjrt_upload_256", 0.5, 200, || {
+                std::hint::black_box(rt.upload(&t, ts).unwrap());
+            });
+            let buf = rt.upload(&t, ts).unwrap();
+            let mut out = vec![0.0; ts * ts];
+            bench("pjrt_download_256", 0.5, 200, || {
+                rt.download(&buf, &mut out).unwrap();
+            });
+        }
+        Err(e) => println!("(skipping PJRT benches: {e})"),
+    }
+
+    println!("\n== end-to-end real factorization ==");
+    if let Ok(rt) = ooc_cholesky::runtime::Runtime::open_default() {
+        for v in [Version::Async, Version::V1, Version::V3] {
+            let cfg = RunConfig {
+                n: 1024,
+                ts: 128,
+                version: v,
+                streams_per_dev: 4,
+                ..Default::default()
+            };
+            let flops = ooc_cholesky::util::cholesky_flops(1024) as u64;
+            bench_throughput(&format!("real_factorize_1024_{}", v.name()), 2.0, 10, flops, || {
+                std::hint::black_box(ooc_cholesky::ooc::factorize(&cfg, Some(&rt)).unwrap());
+            });
+        }
+    }
+}

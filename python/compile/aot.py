@@ -1,0 +1,128 @@
+"""AOT compile path: lower every tile kernel to HLO *text* artifacts.
+
+HLO text (not `.serialize()`d protos) is the interchange format: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1
+(the XLA the published `xla` 0.1.6 crate links) rejects; the text parser
+reassigns ids and round-trips cleanly.  See /opt/xla-example/README.md.
+
+Run once via `make artifacts`; the Rust binary is self-contained after.
+
+Artifacts (all operands f64 on the wire, logical precision by quantization):
+
+  potrf_{ts}_{p}.hlo.txt      (C)        -> chol(C) quantized to p
+  trsm_{ts}_{p}.hlo.txt       (L, B)     -> solve X L^T = B, quantized
+  gemm_{ts}_{p}.hlo.txt       (C, A, B)  -> C - A B^T, quantized
+  syrk_{ts}_{p}.hlo.txt       (C, A)     -> C - A A^T, quantized
+  quantize_{ts}_{p}.hlo.txt   (X)        -> round-to-grid
+  potrf_full_{n}.hlo.txt      (A)        -> whole-matrix POTRF (in-core baseline)
+
+plus manifest.json mapping logical names -> {file, op, ts, prec, args}.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+from jax._src.lib import xla_client as xc  # noqa: E402
+
+from .kernels import (  # noqa: E402
+    PRECISIONS,
+    gemm_fn,
+    potrf_fn,
+    potrf_full_fn,
+    quantize_fn,
+    syrk_fn,
+    trsm_fn,
+)
+
+DEFAULT_TILE_SIZES = (32, 64, 128, 256)
+DEFAULT_FULL_SIZES = (256, 512, 1024)
+
+
+def to_hlo_text(fn, *arg_specs) -> str:
+    """jit -> lower -> stablehlo -> XlaComputation -> HLO text."""
+    lowered = jax.jit(fn).lower(*arg_specs)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    # return_tuple=False: each kernel returns a bare array, so the Rust
+    # runtime can feed one kernel's output PjRtBuffer straight into the
+    # next execute_b call — tile accumulators stay on-device across the
+    # whole update loop (the paper's V1 residency) with no host round trip.
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=False
+    )
+    text = comp.as_hlo_text()
+    assert "custom-call" not in text.lower(), (
+        f"{fn.__name__}: lowering produced a custom-call; xla_extension "
+        "0.5.1 cannot execute it (typed-FFI) — kernel must be plain HLO"
+    )
+    return text
+
+
+def spec(ts: int):
+    return jax.ShapeDtypeStruct((ts, ts), jnp.float64)
+
+
+def build(out_dir: pathlib.Path, tile_sizes, full_sizes, block: int | None,
+          verbose: bool = True) -> dict:
+    out_dir.mkdir(parents=True, exist_ok=True)
+    manifest: dict[str, dict] = {}
+
+    def emit(name: str, fn, nargs: int, ts: int, op: str, prec: str):
+        path = out_dir / f"{name}.hlo.txt"
+        text = to_hlo_text(fn, *([spec(ts)] * nargs))
+        path.write_text(text)
+        manifest[name] = {
+            "file": path.name,
+            "op": op,
+            "ts": ts,
+            "prec": prec,
+            "nargs": nargs,
+        }
+        if verbose:
+            print(f"  {name}: {len(text)} chars")
+
+    for ts in tile_sizes:
+        for p in PRECISIONS:
+            emit(f"potrf_{ts}_{p}", potrf_fn(ts, p), 1, ts, "potrf", p)
+            emit(f"trsm_{ts}_{p}", trsm_fn(ts, p), 2, ts, "trsm", p)
+            emit(f"gemm_{ts}_{p}", gemm_fn(ts, p, block), 3, ts, "gemm", p)
+            emit(f"syrk_{ts}_{p}", syrk_fn(ts, p, block), 2, ts, "syrk", p)
+        for p in PRECISIONS[1:]:  # quantize to f64 is the identity
+            emit(f"quantize_{ts}_{p}", quantize_fn(p), 1, ts, "quantize", p)
+
+    for n in full_sizes:
+        emit(f"potrf_full_{n}", potrf_full_fn(n), 1, n, "potrf_full", "f64")
+
+    (out_dir / "manifest.json").write_text(json.dumps(manifest, indent=1, sort_keys=True))
+    return manifest
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact directory")
+    ap.add_argument("--tile-sizes", type=int, nargs="*", default=list(DEFAULT_TILE_SIZES))
+    ap.add_argument("--full-sizes", type=int, nargs="*", default=list(DEFAULT_FULL_SIZES))
+    ap.add_argument(
+        "--block", type=int, default=None,
+        help="Pallas VMEM block edge for GEMM/SYRK (default: full tile, the "
+        "fastest layout for the CPU PJRT backend; use 128 for the MXU-shaped "
+        "schedule)",
+    )
+    args = ap.parse_args()
+    out = pathlib.Path(args.out).resolve()
+    print(f"emitting artifacts to {out}")
+    manifest = build(out, args.tile_sizes, args.full_sizes, args.block)
+    print(f"wrote {len(manifest)} artifacts + manifest.json")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

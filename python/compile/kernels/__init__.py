@@ -1,0 +1,30 @@
+"""L1/L2 tile kernels for the OOC mixed-precision Cholesky.
+
+GEMM/SYRK are Pallas kernels (the compute hot-spot); POTRF/TRSM are
+fori_loop jnp sweeps (sequential by nature, and they must avoid the LAPACK
+typed-FFI custom-calls xla_extension 0.5.1 rejects).  Everything lowers to
+plain HLO ops.
+"""
+
+from .gemm import gemm_fn, gemm_update
+from .potrf import potrf, potrf_fn, potrf_full_fn
+from .quantize import EPS, PRECISIONS, WIDTH, quantize, quantize_fn
+from .syrk import syrk_fn, syrk_update
+from .trsm import trsm, trsm_fn
+
+__all__ = [
+    "EPS",
+    "PRECISIONS",
+    "WIDTH",
+    "gemm_fn",
+    "gemm_update",
+    "potrf",
+    "potrf_fn",
+    "potrf_full_fn",
+    "quantize",
+    "quantize_fn",
+    "syrk_fn",
+    "syrk_update",
+    "trsm",
+    "trsm_fn",
+]

@@ -1,0 +1,81 @@
+"""L1 Pallas kernel: tile GEMM update  C <- quantize(C - A @ B^T, prec).
+
+This is the hot spot of the left-looking Cholesky (the off-diagonal update,
+Algorithm 2 line 21).  The CUDA version runs it on tensor cores with
+threadblock tiling into shared memory; the TPU-shaped Pallas mapping is:
+
+  threadblock (bm x bn) tile      -> BlockSpec output block (bm, bn)
+  shared-memory staging of A/B    -> VMEM blocks selected by index_map
+  k-loop over shared-mem tiles    -> third grid dimension with accumulation
+  WMMA fragment product           -> jnp.dot on MXU-friendly 128-multiples
+
+The kernel accumulates C - sum_k A_ik B_jk^T across the k grid dimension
+(sequential on TPU as the minormost grid axis) and applies the output
+quantization exactly once, on the last k step — emulating the down-cast the
+paper performs before storing a low-precision tile.
+
+Lowered with interpret=True so the emitted HLO is plain ops executable by
+any PJRT backend (the CPU plugin cannot run Mosaic custom-calls).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .quantize import quantize
+
+
+def _gemm_kernel(c_ref, a_ref, b_ref, o_ref, *, nk: int, prec: str):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = c_ref[...]
+
+    o_ref[...] = o_ref[...] - jnp.dot(a_ref[...], b_ref[...].T)
+
+    if prec != "f64":
+
+        @pl.when(k == nk - 1)
+        def _cast():
+            o_ref[...] = quantize(o_ref[...], prec)
+
+
+def gemm_update(c, a, b, *, prec: str = "f64", block: int | None = None):
+    """quantize(C - A @ B^T, prec) for square (ts, ts) f64 tiles.
+
+    ``block`` sets the VMEM block edge (bm = bn = bk).  None picks the full
+    tile (single grid step) which is the fastest layout for the CPU PJRT
+    backend; 128 matches the MXU systolic array for the TPU estimate.
+    """
+    ts = c.shape[0]
+    assert c.shape == a.shape == b.shape == (ts, ts)
+    bs = block or ts
+    assert ts % bs == 0, f"tile {ts} not divisible by block {bs}"
+    ng = ts // bs
+
+    kernel = functools.partial(_gemm_kernel, nk=ng, prec=prec)
+    return pl.pallas_call(
+        kernel,
+        grid=(ng, ng, ng),
+        in_specs=[
+            pl.BlockSpec((bs, bs), lambda i, j, k: (i, j)),  # C: output block
+            pl.BlockSpec((bs, bs), lambda i, j, k: (i, k)),  # A: row-block i
+            pl.BlockSpec((bs, bs), lambda i, j, k: (j, k)),  # B: row-block j
+        ],
+        out_specs=pl.BlockSpec((bs, bs), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((ts, ts), c.dtype),
+        interpret=True,
+    )(c, a, b)
+
+
+def gemm_fn(ts: int, prec: str, block: int | None = None):
+    """(C, A, B) -> (gemm_update,) closure for AOT lowering at tile size ts."""
+
+    def fn(c, a, b):
+        return (gemm_update(c, a, b, prec=prec, block=block),)
+
+    fn.__name__ = f"gemm_{ts}_{prec}"
+    return fn

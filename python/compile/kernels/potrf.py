@@ -1,0 +1,68 @@
+"""L2 kernel: unblocked tile Cholesky (POTRF), plain-HLO only.
+
+jax >= 0.8 lowers lax.linalg.cholesky to a typed-FFI LAPACK custom-call
+(API_VERSION_TYPED_FFI) that xla_extension 0.5.1 — the XLA the `xla` crate
+links — refuses to compile.  So POTRF is hand-written as a
+``lax.fori_loop`` column sweep whose body uses only full-row masked
+arithmetic (static shapes, no gather/scatter), producing a compact HLO
+while-loop the CPU PJRT backend runs natively.
+
+Per column j:
+    d        = sqrt(A[j,j] - sum_{k<j} A[j,k]^2)
+    A[i>j,j] = (A[i,j] - sum_{k<j} A[i,k] A[j,k]) / d
+
+The masked full-row formulation does O(n^2) work per step (n^3 total, the
+same order as POTRF itself) while keeping every intermediate a fixed-shape
+(n,) or (n,n) tensor that XLA fuses into a handful of loops.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .quantize import quantize
+
+
+def potrf(a, *, prec: str = "f64"):
+    """Lower-triangular Cholesky factor of a SPD (ts, ts) f64 tile.
+
+    The factor is quantized to ``prec`` before being returned (the paper
+    down-casts a finished tile to its assigned precision before the D2H
+    copy).  Strictly-upper entries are zeroed.
+    """
+    n = a.shape[0]
+    idx = jnp.arange(n)
+
+    def body(j, a):
+        colmask = idx < j
+        row_j = jnp.where(colmask, a[j, :], 0.0)
+        d = jnp.sqrt(a[j, j] - jnp.dot(row_j, row_j))
+        dots = a @ row_j
+        col = (a[:, j] - dots) / d
+        col = jnp.where(idx > j, col, a[:, j])
+        col = col.at[j].set(d)
+        return a.at[:, j].set(col)
+
+    a = lax.fori_loop(0, n, body, a)
+    return quantize(jnp.tril(a), prec)
+
+
+def potrf_fn(ts: int, prec: str):
+    """(A,) -> (potrf(A),) closure for AOT lowering at tile size ts."""
+
+    def fn(a):
+        return (potrf(a, prec=prec),)
+
+    fn.__name__ = f"potrf_{ts}_{prec}"
+    return fn
+
+
+def potrf_full_fn(n: int):
+    """Whole-matrix unblocked POTRF — the in-core "vendor library" baseline
+    (cuSOLVER analog): one opaque factorization call, no OOC support."""
+
+    def fn(a):
+        return (potrf(a, prec="f64"),)
+
+    fn.__name__ = f"potrf_full_{n}"
+    return fn

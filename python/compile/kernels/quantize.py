@@ -1,0 +1,95 @@
+"""Precision-grid quantization (the MxP emulation primitive).
+
+Tiles are *stored* as f64 on the wire (PJRT literals), but a tile tagged
+with a lower precision only ever holds values representable in that
+precision's grid.  Quantization is a saturating round-trip cast:
+
+  f32 : IEEE binary32           (eps = 2^-24, max ~3.4e38 — no clamp needed)
+  f16 : IEEE binary16           (eps = 2^-11, clamp to +-65504)
+  f8  : FP8 E4M3 (fn variant)   (eps = 2^-3,  clamp to +-448; jax's cast
+                                 yields NaN past the max because E4M3FN has
+                                 no inf encoding — hardware saturates, so we
+                                 clamp first)
+
+This mirrors how the paper's tensor-core pipeline loses trailing mantissa
+bits on down-cast while the byte width (8/4/2/1) drives data-movement cost.
+"""
+
+import jax.numpy as jnp
+
+F16_MAX = 65504.0
+F8_MAX = 448.0
+
+#: unit roundoff per logical precision (used by tests and docs; the Rust
+#: side has its own copy in precision/mod.rs — keep in sync)
+EPS = {
+    "f64": 2.0 ** -53,
+    "f32": 2.0 ** -24,
+    "f16": 2.0 ** -11,
+    "f8": 2.0 ** -3,
+}
+
+#: bytes per word per logical precision
+WIDTH = {"f64": 8, "f32": 4, "f16": 2, "f8": 1}
+
+PRECISIONS = ("f64", "f32", "f16", "f8")
+
+
+#: (mantissa bits, min normal exponent, max finite) per emulated grid
+_GRID = {
+    "f16": (10, -14, F16_MAX),
+    "f8": (3, -6, F8_MAX),
+}
+
+
+def _round_to_grid(x, mant_bits: int, emin: int, maxv: float):
+    """Arithmetic round-to-nearest-even onto a binary grid.
+
+    Implemented with bit ops + jnp.round (banker's rounding) instead of a
+    dtype cast: XLA's convert(f64->f8e4m3) double-rounds through an
+    intermediate precision on some backends (observed on xla_extension
+    0.5.1: -53.99 -> -56 instead of -52), which would break bit-parity
+    with the numpy/ml_dtypes oracle and the Rust emulation.  This lowers
+    to plain HLO ops and performs exactly one rounding, mirroring
+    `rust/src/precision/mod.rs::Precision::quantize`.
+    """
+    import jax
+
+    c = jnp.clip(x, -maxv, maxv)
+    bits = jax.lax.bitcast_convert_type(c, jnp.uint64)
+    e = ((bits >> 52) & jnp.uint64(0x7FF)).astype(jnp.int32) - 1023
+    q_exp = jnp.maximum(e, emin) - mant_bits
+    # exact power of two via exponent-field construction (jnp.exp2 is an
+    # approximation and its ~1 ulp error breaks exactness of c / quantum)
+    quantum = jax.lax.bitcast_convert_type(
+        (q_exp + 1023).astype(jnp.uint64) << 52, jnp.float64
+    )
+    r = jnp.round(c / quantum) * quantum  # jnp.round == round-half-even
+    r = jnp.clip(r, -maxv, maxv)
+    return jnp.where(c == 0.0, c, r)
+
+
+def quantize(x, prec: str):
+    """Round ``x`` (f64) onto the grid of logical precision ``prec``.
+
+    Saturating: values beyond the target's max round to +-max, never NaN.
+    Idempotent: quantize(quantize(x, p), p) == quantize(x, p).
+    """
+    if prec == "f64":
+        return x
+    if prec == "f32":
+        # single rounding; XLA's f64->f32 convert is exact RNE
+        return x.astype(jnp.float32).astype(jnp.float64)
+    if prec in _GRID:
+        return _round_to_grid(x, *_GRID[prec])
+    raise ValueError(f"unknown precision {prec!r}")
+
+
+def quantize_fn(prec: str):
+    """A unary jax function (x,) -> (quantize(x),) for AOT lowering."""
+
+    def fn(x):
+        return (quantize(x, prec),)
+
+    fn.__name__ = f"quantize_{prec}"
+    return fn

@@ -1,0 +1,92 @@
+"""Pure-numpy oracles for every kernel — the build-time correctness signal.
+
+No jax in this module: these are the independent references the pytest
+suite (and hypothesis sweeps) compare the Pallas/jnp kernels against.
+"""
+
+import numpy as np
+
+try:  # ml_dtypes ships with jaxlib; used only for the f8 grid
+    import ml_dtypes
+
+    _F8 = ml_dtypes.float8_e4m3fn
+except ImportError:  # pragma: no cover
+    _F8 = None
+
+F16_MAX = 65504.0
+F8_MAX = 448.0
+
+
+def ref_quantize(x: np.ndarray, prec: str) -> np.ndarray:
+    x = np.asarray(x, dtype=np.float64)
+    if prec == "f64":
+        return x.copy()
+    if prec == "f32":
+        return x.astype(np.float32).astype(np.float64)
+    if prec == "f16":
+        return np.clip(x, -F16_MAX, F16_MAX).astype(np.float16).astype(np.float64)
+    if prec == "f8":
+        assert _F8 is not None, "ml_dtypes required for f8 reference"
+        return np.clip(x, -F8_MAX, F8_MAX).astype(_F8).astype(np.float64)
+    raise ValueError(prec)
+
+
+def ref_gemm_update(c, a, b, prec: str = "f64") -> np.ndarray:
+    return ref_quantize(c - a @ b.T, prec)
+
+
+def ref_syrk_update(c, a, prec: str = "f64") -> np.ndarray:
+    return ref_quantize(c - a @ a.T, prec)
+
+
+def ref_potrf(a, prec: str = "f64") -> np.ndarray:
+    return ref_quantize(np.linalg.cholesky(a), prec)
+
+
+def ref_trsm(l, b, prec: str = "f64") -> np.ndarray:
+    # X L^T = B  =>  L X^T = B^T  (forward substitution on the left)
+    import scipy.linalg as sla
+
+    x = sla.solve_triangular(l, b.T, lower=True, trans="N").T
+    return ref_quantize(x, prec)
+
+
+def ref_tile_cholesky(a: np.ndarray, ts: int, prec_map=None) -> np.ndarray:
+    """Left-looking tile Cholesky over an (n, n) SPD matrix, numpy-only.
+
+    ``prec_map[(i, j)]`` optionally assigns a logical precision per tile
+    (default f64 everywhere).  This is the oracle for the L2 model graph
+    AND for the Rust coordinator's end-to-end tests (rust/tests compare
+    against values produced by this routine via golden files).
+    """
+    n = a.shape[0]
+    assert n % ts == 0
+    nt = n // ts
+    a = a.copy()
+
+    def tile(i, j):
+        return a[i * ts : (i + 1) * ts, j * ts : (j + 1) * ts]
+
+    def prec(i, j):
+        return prec_map.get((i, j), "f64") if prec_map else "f64"
+
+    # quantize input tiles to their assigned storage precision first
+    if prec_map:
+        for i in range(nt):
+            for j in range(i + 1):
+                tile(i, j)[:] = ref_quantize(tile(i, j), prec(i, j))
+
+    for k in range(nt):
+        for m in range(k, nt):
+            if m == k:
+                for nn in range(k):
+                    tile(k, k)[:] = ref_syrk_update(tile(k, k), tile(k, nn), prec(k, k))
+                tile(k, k)[:] = ref_potrf(tile(k, k), prec(k, k))
+            else:
+                for nn in range(k):
+                    tile(m, k)[:] = ref_gemm_update(
+                        tile(m, k), tile(m, nn), tile(k, nn), prec(m, k)
+                    )
+                tile(m, k)[:] = ref_trsm(tile(k, k), tile(m, k), prec(m, k))
+
+    return np.tril(a)

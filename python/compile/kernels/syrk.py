@@ -1,0 +1,66 @@
+"""L1 Pallas kernel: tile SYRK update  C <- quantize(C - A @ A^T, prec).
+
+The diagonal-tile update of the left-looking Cholesky (Algorithm 2 line 9).
+Same BlockSpec schedule as the GEMM kernel with B == A; we compute the full
+(ts, ts) block rather than only the lower triangle — the surface-to-volume
+argument in the paper applies to the off-diagonal GEMMs, and keeping the
+tile square avoids masked MXU work (a triangular epilogue saves <= 2x flops
+on exactly Nt of the O(Nt^2/2) tiles, i.e. noise).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .quantize import quantize
+
+
+def _syrk_kernel(c_ref, a_ref, at_ref, o_ref, *, nk: int, prec: str):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = c_ref[...]
+
+    o_ref[...] = o_ref[...] - jnp.dot(a_ref[...], at_ref[...].T)
+
+    if prec != "f64":
+
+        @pl.when(k == nk - 1)
+        def _cast():
+            o_ref[...] = quantize(o_ref[...], prec)
+
+
+def syrk_update(c, a, *, prec: str = "f64", block: int | None = None):
+    """quantize(C - A @ A^T, prec) for square (ts, ts) f64 tiles."""
+    ts = c.shape[0]
+    assert c.shape == a.shape == (ts, ts)
+    bs = block or ts
+    assert ts % bs == 0
+    ng = ts // bs
+
+    kernel = functools.partial(_syrk_kernel, nk=ng, prec=prec)
+    return pl.pallas_call(
+        kernel,
+        grid=(ng, ng, ng),
+        in_specs=[
+            pl.BlockSpec((bs, bs), lambda i, j, k: (i, j)),
+            pl.BlockSpec((bs, bs), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bs, bs), lambda i, j, k: (j, k)),
+        ],
+        out_specs=pl.BlockSpec((bs, bs), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((ts, ts), c.dtype),
+        interpret=True,
+    )(c, a, a)
+
+
+def syrk_fn(ts: int, prec: str, block: int | None = None):
+    """(C, A) -> (syrk_update,) closure for AOT lowering at tile size ts."""
+
+    def fn(c, a):
+        return (syrk_update(c, a, prec=prec, block=block),)
+
+    fn.__name__ = f"syrk_{ts}_{prec}"
+    return fn

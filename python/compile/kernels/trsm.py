@@ -1,0 +1,46 @@
+"""L2 kernel: tile TRSM  X = quantize(A_mk @ L_kk^-T, prec), plain-HLO only.
+
+Solves X @ L^T = B for X (right-side, lower-triangular, transposed — the
+off-diagonal factorization step of Algorithm 2 line 24).  Like POTRF this
+avoids the LAPACK custom-call by a ``lax.fori_loop`` forward substitution
+over columns of X, using masked full-row arithmetic so every intermediate
+keeps a static shape:
+
+    X[:, j] = (B[:, j] - X @ masked_{k<j}(L[j, :])) / L[j, j]
+
+Total work O(n^3), identical order to the BLAS trsm.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .quantize import quantize
+
+
+def trsm(l, b, *, prec: str = "f64"):
+    """X such that X @ L^T == B, quantized to ``prec``.
+
+    ``l`` is the (ts, ts) lower-triangular Cholesky factor of the diagonal
+    tile; ``b`` the (ts, ts) updated off-diagonal tile.
+    """
+    n = l.shape[0]
+    idx = jnp.arange(n)
+
+    def body(j, x):
+        lrow = jnp.where(idx < j, l[j, :], 0.0)
+        col = (b[:, j] - x @ lrow) / l[j, j]
+        return x.at[:, j].set(col)
+
+    x = lax.fori_loop(0, n, body, jnp.zeros_like(b))
+    return quantize(x, prec)
+
+
+def trsm_fn(ts: int, prec: str):
+    """(L, B) -> (trsm(L, B),) closure for AOT lowering at tile size ts."""
+
+    def fn(l, b):
+        return (trsm(l, b, prec=prec),)
+
+    fn.__name__ = f"trsm_{ts}_{prec}"
+    return fn

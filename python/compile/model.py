@@ -1,0 +1,79 @@
+"""L2 model: the full left-looking tile Cholesky as one JAX graph.
+
+This is the validation graph that proves the three kernels compose into the
+paper's Algorithm 1: for a static (Nt, ts) it unrolls the left-looking
+traversal in python, calling the L1 Pallas GEMM/SYRK and the L2 POTRF/TRSM
+on views of a single (n, n) operand.  It is exercised two ways:
+
+  * pytest compares it against numpy.linalg.cholesky and ref_tile_cholesky
+    (with and without a mixed-precision tile map);
+  * aot.py can lower it at small fixed sizes as the in-core single-call
+    baseline artifact (`incore_{n}_{ts}`), the OOC-free "vendor library"
+    analog used by Figure 6.
+
+The *runtime* factorization never uses this graph — the Rust coordinator
+sequences per-tile artifact executions itself; that is the paper's
+contribution and it lives at L3.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .kernels import gemm_update, potrf, quantize, syrk_update, trsm
+
+
+def tile_cholesky(a, ts: int, prec_map=None, block: int | None = None):
+    """Left-looking tile Cholesky of an (n, n) SPD matrix as a JAX graph.
+
+    ``prec_map[(i, j)] -> str`` optionally tags tiles with a logical
+    precision (quantizing the input tile and every value written back to
+    it), mirroring the MxP semantics of the Rust coordinator.
+    """
+    n = a.shape[0]
+    assert n % ts == 0, f"matrix {n} not divisible by tile {ts}"
+    nt = n // ts
+
+    def prec(i, j):
+        return prec_map.get((i, j), "f64") if prec_map else "f64"
+
+    # materialize tiles (lower triangle only), quantized to storage precision
+    tiles = {}
+    for i in range(nt):
+        for j in range(i + 1):
+            t = a[i * ts : (i + 1) * ts, j * ts : (j + 1) * ts]
+            tiles[(i, j)] = quantize(t, prec(i, j))
+
+    for k in range(nt):
+        for m in range(k, nt):
+            if m == k:
+                for c in range(k):
+                    tiles[(k, k)] = syrk_update(
+                        tiles[(k, k)], tiles[(k, c)], prec=prec(k, k), block=block
+                    )
+                tiles[(k, k)] = potrf(tiles[(k, k)], prec=prec(k, k))
+            else:
+                for c in range(k):
+                    tiles[(m, k)] = gemm_update(
+                        tiles[(m, k)], tiles[(m, c)], tiles[(k, c)],
+                        prec=prec(m, k), block=block,
+                    )
+                tiles[(m, k)] = trsm(tiles[(k, k)], tiles[(m, k)], prec=prec(m, k))
+
+    # reassemble the lower-triangular factor
+    rows = []
+    for i in range(nt):
+        row = [tiles[(i, j)] for j in range(i + 1)]
+        row += [jnp.zeros((ts, ts), a.dtype)] * (nt - i - 1)
+        rows.append(jnp.concatenate(row, axis=1))
+    return jnp.concatenate(rows, axis=0)
+
+
+def incore_fn(n: int, ts: int):
+    """(A,) -> (tile_cholesky(A),) closure for AOT lowering (in-core baseline)."""
+
+    def fn(a):
+        return (tile_cholesky(a, ts),)
+
+    fn.__name__ = f"incore_{n}_{ts}"
+    return fn

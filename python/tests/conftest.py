@@ -1,0 +1,29 @@
+import jax
+import numpy as np
+import pytest
+
+jax.config.update("jax_enable_x64", True)
+
+
+def make_spd(n: int, seed: int = 0, cond_boost: float | None = None) -> np.ndarray:
+    """Random well-conditioned SPD matrix: X X^T + n I (plus optional boost)."""
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((n, n))
+    a = x @ x.T + n * np.eye(n)
+    if cond_boost:
+        a += cond_boost * np.eye(n)
+    return a
+
+
+def make_matern(n: int, beta: float = 0.1, nugget: float = 1e-6, seed: int = 0) -> np.ndarray:
+    """Exponential-kernel (Matérn ν=0.5) covariance over random 2-D sites —
+    the paper's geospatial test matrix shape."""
+    rng = np.random.default_rng(seed)
+    pts = rng.uniform(size=(n, 2))
+    d = np.sqrt(((pts[:, None, :] - pts[None, :, :]) ** 2).sum(-1))
+    return np.exp(-d / beta) + nugget * np.eye(n)
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(1234)

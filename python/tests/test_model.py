@@ -1,0 +1,72 @@
+"""L2 full-model graph vs numpy: the kernels compose into Algorithm 1."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels.ref import ref_tile_cholesky
+from compile.model import tile_cholesky
+from .conftest import make_matern, make_spd
+
+
+@pytest.mark.parametrize("n,ts", [(32, 8), (64, 16), (64, 64), (128, 32)])
+def test_model_matches_numpy_cholesky(n, ts):
+    a = make_spd(n, seed=n + ts)
+    l = np.asarray(tile_cholesky(jnp.asarray(a), ts))
+    want = np.linalg.cholesky(a)
+    np.testing.assert_allclose(l, want, rtol=1e-10, atol=1e-10)
+
+
+@pytest.mark.parametrize("n,ts", [(48, 16), (64, 32)])
+def test_model_matches_ref_tile_cholesky(n, ts):
+    a = make_spd(n, seed=3)
+    got = np.asarray(tile_cholesky(jnp.asarray(a), ts))
+    want = ref_tile_cholesky(a, ts)
+    np.testing.assert_allclose(got, want, rtol=1e-12, atol=1e-12)
+
+
+def test_model_single_tile_equals_potrf():
+    from compile.kernels import potrf
+
+    a = make_spd(32, seed=5)
+    got = np.asarray(tile_cholesky(jnp.asarray(a), 32))
+    want = np.asarray(potrf(jnp.asarray(a)))
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("prec_low", ["f32", "f16"])
+def test_model_mxp_matches_ref(prec_low):
+    """Mixed-precision tile maps give bit-identical results to the numpy
+    reference implementation of the same MxP semantics."""
+    n, ts = 64, 16
+    nt = n // ts
+    a = make_matern(n, beta=0.1, nugget=1e-3, seed=11)
+    # off-diagonal tiles below the first sub-diagonal get the low precision
+    pm = {}
+    for i in range(nt):
+        for j in range(i + 1):
+            pm[(i, j)] = prec_low if i - j >= 2 else "f64"
+    got = np.asarray(tile_cholesky(jnp.asarray(a), ts, prec_map=pm))
+    want = ref_tile_cholesky(a, ts, prec_map=pm)
+    np.testing.assert_allclose(got, want, rtol=1e-11, atol=1e-11)
+
+
+def test_model_mxp_error_scales_with_precision():
+    """Lower precision on far-off-diagonal tiles => larger but bounded
+    reconstruction error; f64-only must be near machine eps."""
+    n, ts = 96, 16
+    nt = n // ts
+    a = make_matern(n, beta=0.05, nugget=1e-2, seed=2)
+    norm = np.linalg.norm(a)
+
+    def err(pm):
+        l = np.asarray(tile_cholesky(jnp.asarray(a), ts, prec_map=pm))
+        return np.linalg.norm(l @ l.T - a) / norm
+
+    full = err(None)
+    pm32 = {(i, j): ("f32" if i != j else "f64") for i in range(nt) for j in range(i + 1)}
+    pm16 = {(i, j): ("f16" if i != j else "f64") for i in range(nt) for j in range(i + 1)}
+    e32, e16 = err(pm32), err(pm16)
+    assert full < 1e-13
+    assert full < e32 < e16
+    assert e16 < 1e-2  # still a usable factorization

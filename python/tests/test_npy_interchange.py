@@ -1,0 +1,44 @@
+"""Cross-language interchange: the Rust coordinator exports factors as
+.npy (`ooc-cholesky export`); numpy must read them and the factor must
+reconstruct the covariance.
+
+The Rust binary is exercised directly when it has been built (skipped
+otherwise, so `pytest` works before `cargo build`)."""
+
+import pathlib
+import subprocess
+
+import numpy as np
+import pytest
+
+REPO = pathlib.Path(__file__).resolve().parents[2]
+BINARY = REPO / "target" / "release" / "ooc-cholesky"
+
+
+@pytest.mark.skipif(not BINARY.exists(), reason="cargo build --release first")
+def test_exported_factor_validates_in_numpy(tmp_path):
+    out = tmp_path / "factor.npy"
+    subprocess.run(
+        [
+            str(BINARY),
+            "export",
+            "--n", "256",
+            "--ts", "64",
+            "--version", "v3",
+            "--seed", "7",
+            "--out", str(out),
+        ],
+        check=True,
+        cwd=REPO,
+        capture_output=True,
+    )
+    L = np.load(out)
+    assert L.shape == (256, 256)
+    # lower triangular with positive diagonal
+    assert np.allclose(np.tril(L), L)
+    assert (np.diag(L) > 0).all()
+    # L L^T must be SPD with unit-ish diagonal (sigma^2=1 + nugget)
+    A = L @ L.T
+    assert np.allclose(np.diag(A), 1.0 + 1e-4, atol=1e-6)
+    # and symmetric positive definite
+    np.linalg.cholesky(A)

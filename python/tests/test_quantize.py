@@ -1,0 +1,69 @@
+"""Quantize kernel vs numpy/ml_dtypes oracle + grid properties."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import EPS, PRECISIONS, WIDTH, quantize
+from compile.kernels.ref import F8_MAX, F16_MAX, ref_quantize
+
+
+@pytest.mark.parametrize("prec", PRECISIONS)
+def test_matches_reference(prec, rng):
+    x = rng.standard_normal((64, 64)) * 10.0
+    got = np.asarray(quantize(jnp.asarray(x), prec))
+    want = ref_quantize(x, prec)
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("prec", PRECISIONS)
+def test_idempotent(prec, rng):
+    x = jnp.asarray(rng.standard_normal((32, 32)))
+    q1 = quantize(x, prec)
+    q2 = quantize(q1, prec)
+    np.testing.assert_array_equal(np.asarray(q1), np.asarray(q2))
+
+
+@pytest.mark.parametrize(
+    "prec,maxval", [("f16", F16_MAX), ("f8", F8_MAX)]
+)
+def test_saturates_no_nan(prec, maxval):
+    x = jnp.asarray([1e30, -1e30, float(maxval) * 2, np.inf, -np.inf])
+    q = np.asarray(quantize(x, prec))
+    assert not np.isnan(q).any()
+    assert (np.abs(q) <= maxval).all()
+
+
+@pytest.mark.parametrize("prec", ["f32", "f16", "f8"])
+def test_relative_error_bounded_by_eps(prec, rng):
+    # values inside the normal range of every grid
+    x = jnp.asarray(rng.uniform(0.5, 2.0, size=1024))
+    q = np.asarray(quantize(x, prec))
+    rel = np.abs(q - np.asarray(x)) / np.abs(np.asarray(x))
+    assert rel.max() <= EPS[prec]
+
+
+def test_zero_and_signs():
+    x = jnp.asarray([0.0, -0.0, 1.0, -1.0])
+    for p in PRECISIONS:
+        q = np.asarray(quantize(x, p))
+        np.testing.assert_array_equal(q, np.asarray(x))
+
+
+def test_widths_monotone():
+    assert WIDTH["f64"] > WIDTH["f32"] > WIDTH["f16"] > WIDTH["f8"]
+    assert EPS["f64"] < EPS["f32"] < EPS["f16"] < EPS["f8"]
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    st.lists(st.floats(-1e4, 1e4, allow_nan=False), min_size=1, max_size=64),
+    st.sampled_from(["f32", "f16", "f8"]),
+)
+def test_hypothesis_matches_reference(vals, prec):
+    x = np.asarray(vals)
+    got = np.asarray(quantize(jnp.asarray(x), prec))
+    want = ref_quantize(x, prec)
+    np.testing.assert_array_equal(got, want)

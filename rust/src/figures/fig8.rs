@@ -1,0 +1,102 @@
+//! Figure 8: volume of data communication (H2D "G2C", D2H "C2G", total)
+//! per implementation per GPU. These are **exact counts** from the
+//! coordinator, not modeled quantities.
+
+use anyhow::Result;
+
+use crate::config::{HwProfile, Mode, RunConfig, Version};
+use crate::util::json::Json;
+
+pub fn fig8_volumes(sizes: &[usize]) -> Result<Json> {
+    let mut out = Vec::new();
+    for hw_name in HwProfile::ALL_NAMES {
+        let hw = HwProfile::by_name(hw_name).unwrap();
+        let ts = super::fig6::tile_size_for(&hw);
+        println!("\n=== Fig 8: {} (volumes, GB) ===", hw.name);
+        println!(
+            "{:>10} {:>9} {:>24} {:>24} {:>24} {:>24} {:>24} {:>24}",
+            "n", "", "cusolver", "sync", "async", "v1", "v2", "v3"
+        );
+        for &n in sizes {
+            let n = super::fig6::round_to(n, ts);
+            let mut row = vec![("n", Json::num(n as f64))];
+            let mut cells = Vec::new();
+            for v in [
+                Version::InCore,
+                Version::Sync,
+                Version::Async,
+                Version::V1,
+                Version::V2,
+                Version::V3,
+            ] {
+                let cfg = RunConfig {
+                    n,
+                    ts,
+                    version: v,
+                    mode: Mode::Model,
+                    hw: hw.clone(),
+                    streams_per_dev: if v == Version::Sync { 1 } else { 8 },
+                    ..Default::default()
+                };
+                match crate::ooc::factorize(&cfg, None) {
+                    Ok(r) => {
+                        let (h, d) = (r.metrics.h2d_bytes, r.metrics.d2h_bytes);
+                        cells.push(format!(
+                            "{:>7.1}/{:>6.1}/{:>7.1}",
+                            h as f64 / 1e9,
+                            d as f64 / 1e9,
+                            (h + d) as f64 / 1e9
+                        ));
+                        row.push((
+                            v.name(),
+                            Json::obj(vec![
+                                ("h2d_bytes", Json::num(h as f64)),
+                                ("d2h_bytes", Json::num(d as f64)),
+                                ("total_bytes", Json::num((h + d) as f64)),
+                            ]),
+                        ));
+                    }
+                    Err(_) => {
+                        cells.push(format!("{:>22}", "OOM"));
+                        row.push((v.name(), Json::Null));
+                    }
+                }
+            }
+            println!("{n:>10} {:>9} {}", "h2d/d2h/t", cells.join(" "));
+            out.push(Json::obj(
+                [("hw", Json::str(hw.name.clone()))].into_iter().chain(row).collect(),
+            ));
+        }
+    }
+    Ok(Json::obj(vec![("figure", Json::str("fig8_volumes")), ("rows", Json::Arr(out))]))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn volume_ordering_v3_le_v2_le_v1_lt_async() {
+        let j = fig8_volumes(&[64 * 1024]).unwrap();
+        for row in j.get("rows").as_arr().unwrap() {
+            let vol = |v: &str| row.get(v).get("total_bytes").as_f64().unwrap();
+            assert!(vol("v3") <= vol("v2"), "{row}");
+            assert!(vol("v2") <= vol("v1"), "{row}");
+            assert!(vol("v1") < vol("async"), "{row}");
+        }
+    }
+
+    #[test]
+    fn d2h_is_half_matrix_for_v123() {
+        // §V-A3: D2H of V1–V3 ≈ half the matrix (triangular part only)
+        let j = fig8_volumes(&[32 * 1024]).unwrap();
+        let row = &j.get("rows").as_arr().unwrap()[0];
+        let n = row.get("n").as_f64().unwrap();
+        let matrix_bytes = n * n * 8.0;
+        for v in ["v1", "v2", "v3"] {
+            let d2h = row.get(v).get("d2h_bytes").as_f64().unwrap();
+            let ratio = d2h / matrix_bytes;
+            assert!((0.45..0.60).contains(&ratio), "{v}: d2h/matrix = {ratio}");
+        }
+    }
+}

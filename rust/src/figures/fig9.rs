@@ -1,0 +1,85 @@
+//! Figure 9: multi-GPU FP64 Cholesky TFlop/s with OOC support, 1–4 GPUs,
+//! on A100-PCIe4 / H100-PCIe5 / GH200-NVLink-C2C (V3 implementation).
+
+use anyhow::Result;
+
+use crate::config::{HwProfile, Mode, RunConfig, Version};
+use crate::util::json::Json;
+
+pub fn fig9_multi_gpu(sizes: &[usize]) -> Result<Json> {
+    let mut profiles = Vec::new();
+    for hw_name in HwProfile::ALL_NAMES {
+        let hw = HwProfile::by_name(hw_name).unwrap();
+        let ts = super::fig6::tile_size_for(&hw);
+        println!("\n=== Fig 9: {} (FP64 V3, 1-4 GPUs, TFlop/s) ===", hw.name);
+        println!("{:>10} {:>10} {:>10} {:>10} {:>10}", "n", "1 GPU", "2 GPUs", "3 GPUs", "4 GPUs");
+        let mut rows = Vec::new();
+        for &n in sizes {
+            let n = super::fig6::round_to(n, ts);
+            print!("{n:>10}");
+            let mut row = vec![("n", Json::num(n as f64))];
+            for ndev in 1..=4usize {
+                let cfg = RunConfig {
+                    n,
+                    ts,
+                    version: Version::V3,
+                    mode: Mode::Model,
+                    hw: hw.clone(),
+                    ndev,
+                    streams_per_dev: 8,
+                    ..Default::default()
+                };
+                let r = crate::ooc::factorize(&cfg, None)?;
+                print!(" {:>10.1}", r.tflops);
+                row.push((
+                    match ndev {
+                        1 => "gpus1",
+                        2 => "gpus2",
+                        3 => "gpus3",
+                        _ => "gpus4",
+                    },
+                    Json::num(r.tflops),
+                ));
+            }
+            println!();
+            rows.push(Json::obj(row));
+        }
+        profiles.push(Json::obj(vec![
+            ("hw", Json::str(hw.name.clone())),
+            ("ts", Json::num(ts as f64)),
+            ("rows", Json::Arr(rows)),
+        ]));
+    }
+    Ok(Json::obj(vec![
+        ("figure", Json::str("fig9_multi_gpu_fp64")),
+        ("profiles", Json::Arr(profiles)),
+    ]))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn multi_gpu_monotone_scaling() {
+        let j = fig9_multi_gpu(&[128 * 1024]).unwrap();
+        for p in j.get("profiles").as_arr().unwrap() {
+            let row = &p.get("rows").as_arr().unwrap()[0];
+            let t: Vec<f64> = (1..=4)
+                .map(|d| row.get(&format!("gpus{d}")).as_f64().unwrap())
+                .collect();
+            assert!(t[1] > t[0] && t[2] > t[1] && t[3] > t[2], "{t:?}");
+        }
+    }
+
+    #[test]
+    fn gh200_scales_near_linearly() {
+        // §V-B: "scale almost linearly on four GH200 superchips"
+        let j = fig9_multi_gpu(&[192 * 1024]).unwrap();
+        let gh = &j.get("profiles").as_arr().unwrap()[2];
+        let row = &gh.get("rows").as_arr().unwrap()[0];
+        let t1 = row.get("gpus1").as_f64().unwrap();
+        let t4 = row.get("gpus4").as_f64().unwrap();
+        assert!(t4 / t1 > 3.0, "4-GPU speedup only {:.2}x", t4 / t1);
+    }
+}

@@ -1,0 +1,32 @@
+//! Figure harnesses: one generator per table/figure of the paper's
+//! evaluation (§V). Each returns a JSON document with the series the
+//! figure plots and prints a human-readable table. See DESIGN.md §6 for
+//! the experiment index and EXPERIMENTS.md for recorded outputs.
+
+pub mod ablation;
+pub mod fig10;
+pub mod fig6;
+pub mod fig7;
+pub mod fig8;
+pub mod fig9;
+
+pub use ablation::{ablation_all, ablation_eviction, ablation_looking, ablation_streams};
+pub use fig10::fig10_kl_divergence;
+pub use fig6::fig6_single_gpu;
+pub use fig7::fig7_traces;
+pub use fig8::fig8_volumes;
+pub use fig9::fig9_multi_gpu;
+
+mod mxp;
+pub use mxp::{fig11_mxp_perf, fig12_mxp_volumes, fig13_mxp_traces};
+
+use crate::util::json::Json;
+
+/// Write a figure's JSON result under `results/` and return the path.
+pub fn write_result(name: &str, j: &Json) -> std::io::Result<std::path::PathBuf> {
+    let dir = std::path::Path::new("results");
+    std::fs::create_dir_all(dir)?;
+    let path = dir.join(format!("{name}.json"));
+    std::fs::write(&path, j.pretty())?;
+    Ok(path)
+}

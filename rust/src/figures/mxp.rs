@@ -1,0 +1,187 @@
+//! Figures 11–13: mixed-precision performance, data volumes, and traces
+//! on the GH200 profile for the three spatial-correlation regimes.
+
+use anyhow::Result;
+
+use crate::config::{HwProfile, Mode, RunConfig, Version};
+use crate::precision::ALL_PRECISIONS;
+use crate::util::json::Json;
+
+use super::fig10::{ACCURACIES, BETAS};
+
+fn mxp_cfg(n: usize, ts: usize, beta: f64, accuracy: Option<f64>) -> RunConfig {
+    RunConfig {
+        n,
+        ts,
+        version: Version::V3,
+        mode: Mode::Model,
+        hw: HwProfile::gh200_nvlc2c(),
+        beta,
+        nugget: 1e-4,
+        streams_per_dev: 8,
+        precisions: match accuracy {
+            Some(_) => ALL_PRECISIONS.to_vec(),
+            None => vec![crate::precision::Precision::F64],
+        },
+        accuracy: accuracy.unwrap_or(1e-8),
+        ..Default::default()
+    }
+}
+
+/// Figure 11: MxP TFlop/s on one GH200 vs matrix size per accuracy level
+/// (plus the FP64-only reference line).
+pub fn fig11_mxp_perf(sizes: &[usize], ts: usize) -> Result<Json> {
+    let mut panels = Vec::new();
+    for (beta, label) in BETAS {
+        println!("\n=== Fig 11: MxP perf on GH200, beta={beta} ({label}) ===");
+        print!("{:>10} {:>10}", "n", "fp64");
+        for acc in ACCURACIES {
+            print!(" {acc:>10.0e}");
+        }
+        println!();
+        let mut rows = Vec::new();
+        for &n in sizes {
+            let n = super::fig6::round_to(n, ts);
+            print!("{n:>10}");
+            let r64 = crate::ooc::factorize(&mxp_cfg(n, ts, beta, None), None)?;
+            print!(" {:>10.1}", r64.tflops);
+            let mut row =
+                vec![("n", Json::num(n as f64)), ("fp64", Json::num(r64.tflops))];
+            for acc in ACCURACIES {
+                let r = crate::ooc::factorize(&mxp_cfg(n, ts, beta, Some(acc)), None)?;
+                print!(" {:>10.1}", r.tflops);
+                row.push((
+                    Box::leak(format!("acc_{acc:.0e}").into_boxed_str()),
+                    Json::num(r.tflops),
+                ));
+            }
+            println!();
+            rows.push(Json::obj(row));
+        }
+        panels.push(Json::obj(vec![
+            ("beta", Json::num(beta)),
+            ("correlation", Json::str(label)),
+            ("rows", Json::Arr(rows)),
+        ]));
+    }
+    Ok(Json::obj(vec![
+        ("figure", Json::str("fig11_mxp_perf_gh200")),
+        ("ts", Json::num(ts as f64)),
+        ("panels", Json::Arr(panels)),
+    ]))
+}
+
+/// Figure 12: MxP data-movement volume per correlation level (exact counts).
+pub fn fig12_mxp_volumes(sizes: &[usize], ts: usize) -> Result<Json> {
+    let mut panels = Vec::new();
+    for (beta, label) in BETAS {
+        println!("\n=== Fig 12: MxP volumes (GB) on GH200, beta={beta} ({label}) ===");
+        print!("{:>10} {:>10}", "n", "fp64");
+        for acc in ACCURACIES {
+            print!(" {acc:>10.0e}");
+        }
+        println!();
+        let mut rows = Vec::new();
+        for &n in sizes {
+            let n = super::fig6::round_to(n, ts);
+            print!("{n:>10}");
+            let r64 = crate::ooc::factorize(&mxp_cfg(n, ts, beta, None), None)?;
+            print!(" {:>10.1}", r64.metrics.total_bytes() as f64 / 1e9);
+            let mut row = vec![
+                ("n", Json::num(n as f64)),
+                ("fp64_bytes", Json::num(r64.metrics.total_bytes() as f64)),
+            ];
+            for acc in ACCURACIES {
+                let r = crate::ooc::factorize(&mxp_cfg(n, ts, beta, Some(acc)), None)?;
+                print!(" {:>10.1}", r.metrics.total_bytes() as f64 / 1e9);
+                row.push((
+                    Box::leak(format!("bytes_{acc:.0e}").into_boxed_str()),
+                    Json::num(r.metrics.total_bytes() as f64),
+                ));
+            }
+            println!();
+            rows.push(Json::obj(row));
+        }
+        panels.push(Json::obj(vec![
+            ("beta", Json::num(beta)),
+            ("correlation", Json::str(label)),
+            ("rows", Json::Arr(rows)),
+        ]));
+    }
+    Ok(Json::obj(vec![
+        ("figure", Json::str("fig12_mxp_volumes")),
+        ("panels", Json::Arr(panels)),
+    ]))
+}
+
+/// Figure 13: MxP event traces at fixed accuracy (1e-5) per correlation.
+pub fn fig13_mxp_traces(n: usize, ts: usize, width: usize) -> Result<Json> {
+    let mut out = Vec::new();
+    for (beta, label) in BETAS {
+        let mut cfg = mxp_cfg(super::fig6::round_to(n, ts), ts, beta, Some(1e-5));
+        cfg.trace = true;
+        let r = crate::ooc::factorize(&cfg, None)?;
+        let trace = r.trace.as_ref().unwrap();
+        println!("\n--- Fig 13: GH200 MxP trace, beta={beta} ({label}), acc=1e-5 ---");
+        print!("{}", trace.render_ascii(width));
+        println!("precision histogram [f8,f16,f32,f64] = {:?}", r.precision_histogram);
+        out.push(Json::obj(vec![
+            ("beta", Json::num(beta)),
+            ("correlation", Json::str(label)),
+            ("elapsed_s", Json::num(r.elapsed_s)),
+            ("work_utilization", Json::num(r.work_utilization)),
+            (
+                "precision_histogram",
+                Json::arr(r.precision_histogram.iter().map(|&c| Json::num(c as f64))),
+            ),
+            ("ascii", Json::str(trace.render_ascii(width))),
+        ]));
+    }
+    Ok(Json::obj(vec![("figure", Json::str("fig13_mxp_traces")), ("traces", Json::Arr(out))]))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mxp_speedup_decreases_with_correlation() {
+        // Fig 11: weak correlation admits more low-precision tiles =>
+        // higher TFlop/s at accuracy 1e-5
+        let j = fig11_mxp_perf(&[64 * 1024], 2048).unwrap();
+        let panels = j.get("panels").as_arr().unwrap();
+        let perf = |p: &Json| p.get("rows").as_arr().unwrap()[0].get("acc_1e-5").as_f64().unwrap();
+        let weak = perf(&panels[0]);
+        let strong = perf(&panels[2]);
+        assert!(weak > strong, "weak {weak} !> strong {strong}");
+        // and MxP beats FP64-only under weak correlation (§V-C: up to 3x)
+        let f64_only =
+            panels[0].get("rows").as_arr().unwrap()[0].get("fp64").as_f64().unwrap();
+        assert!(weak > 1.5 * f64_only, "MxP {weak} vs FP64 {f64_only}");
+    }
+
+    #[test]
+    fn mxp_volume_shrinks_with_lower_accuracy() {
+        // Fig 12: accuracy 1e-5 moves fewer bytes than 1e-8
+        let j = fig12_mxp_volumes(&[64 * 1024], 2048).unwrap();
+        for p in j.get("panels").as_arr().unwrap() {
+            let row = &p.get("rows").as_arr().unwrap()[0];
+            let lo = row.get("bytes_1e-5").as_f64().unwrap();
+            let hi = row.get("bytes_1e-8").as_f64().unwrap();
+            assert!(lo <= hi, "{row}");
+        }
+    }
+
+    #[test]
+    fn fig13_runs_and_reports_histograms() {
+        let j = fig13_mxp_traces(32 * 1024, 2048, 60).unwrap();
+        let traces = j.get("traces").as_arr().unwrap();
+        assert_eq!(traces.len(), 3);
+        // weak correlation uses more low-precision tiles than strong
+        let low = |t: &Json| {
+            let h = t.get("precision_histogram").as_arr().unwrap();
+            h[0].as_f64().unwrap() + h[1].as_f64().unwrap()
+        };
+        assert!(low(&traces[0]) >= low(&traces[2]));
+    }
+}

@@ -1,0 +1,35 @@
+//! # ooc-cholesky
+//!
+//! Reproduction of *“Accelerating Mixed-Precision Out-of-Core Cholesky
+//! Factorization with Static Task Scheduling”* (Ren, Ltaief, Abdulah,
+//! Keyes; 2024) as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the paper's contribution: a static task
+//!   scheduler for the left-looking tile Cholesky with out-of-core tile
+//!   caching (V1/V2/V3), multi-stream overlap, mixed-precision tile
+//!   management, and multi-device distribution.
+//! * **L2/L1 (python/, build-time only)** — JAX tile graph + Pallas
+//!   GEMM/SYRK kernels, AOT-lowered to HLO text artifacts.
+//! * **runtime** — PJRT CPU client loading those artifacts; Python never
+//!   runs on the request path.
+//!
+//! See DESIGN.md for the system inventory and EXPERIMENTS.md for the
+//! paper-vs-measured record.
+
+pub mod baseline;
+pub mod cache;
+pub mod config;
+pub mod exec;
+pub mod figures;
+pub mod matern;
+pub mod metrics;
+pub mod mle;
+pub mod ooc;
+pub mod precision;
+pub mod refine;
+pub mod runtime;
+pub mod sched;
+pub mod tiles;
+pub mod trace;
+pub mod tune;
+pub mod util;

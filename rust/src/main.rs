@@ -1,0 +1,327 @@
+//! `ooc-cholesky` — CLI for the mixed-precision out-of-core Cholesky
+//! coordinator.
+//!
+//! Subcommands (hand-rolled parser; clap is unavailable offline):
+//!
+//! ```text
+//! ooc-cholesky factorize [--n 2048] [--ts 128] [--version v3] [--mode real|model]
+//!                        [--ndev 1] [--streams 4] [--vmem-mib M] [--hw gh200]
+//!                        [--precisions f8,f16,f32,f64] [--accuracy 1e-6]
+//!                        [--beta 0.078809] [--trace] [--verify] [--config file.json]
+//! ooc-cholesky figure <6|7|8|9|10|11|12|13|all> [--quick]
+//! ooc-cholesky mle     [--n 1024] [--ts 128] [--beta ...]    # end-to-end MLE demo
+//! ooc-cholesky kl      [--n 1024] [--ts 128]                 # KL accuracy sweep
+//! ooc-cholesky artifacts                                      # list compiled kernels
+//! ```
+
+use std::collections::VecDeque;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use ooc_cholesky::config::{HwProfile, Mode, RunConfig, Version};
+use ooc_cholesky::precision::Precision;
+use ooc_cholesky::runtime::Runtime;
+use ooc_cholesky::{figures, mle, ooc};
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> Result<()> {
+    let mut args: VecDeque<String> = std::env::args().skip(1).collect();
+    let cmd = args.pop_front().unwrap_or_else(|| "help".into());
+    match cmd.as_str() {
+        "factorize" => cmd_factorize(args),
+        "figure" => cmd_figure(args),
+        "mle" => cmd_mle(args),
+        "kl" => cmd_kl(args),
+        "export" => cmd_export(args),
+        "tune" => cmd_tune(args),
+        "ablation" => cmd_ablation(args),
+        "artifacts" => cmd_artifacts(),
+        "help" | "--help" | "-h" => {
+            print!("{}", HELP);
+            Ok(())
+        }
+        other => bail!("unknown command {other:?}; see `ooc-cholesky help`"),
+    }
+}
+
+const HELP: &str = "\
+ooc-cholesky — mixed-precision out-of-core tile Cholesky (static scheduling)
+
+USAGE:
+  ooc-cholesky factorize [flags]     run one factorization (real or model)
+  ooc-cholesky figure <id> [--quick] regenerate a paper figure (6..13 or all)
+  ooc-cholesky mle [flags]           end-to-end geospatial MLE demo
+  ooc-cholesky kl [flags]            MxP KL-divergence accuracy sweep
+  ooc-cholesky export [flags]        factorize and write the factor as .npy
+  ooc-cholesky tune [flags]          autotune the tile size (model mode)
+  ooc-cholesky ablation [flags]      eviction/traversal/stream ablations
+  ooc-cholesky artifacts             list AOT kernel artifacts
+
+FACTORIZE FLAGS:
+  --n N              matrix size (default 1024)
+  --ts T             tile size: 32|64|128|256 real mode, any for model
+  --version V        sync|async|v1|v2|v3|incore|rightlooking (default v3)
+  --mode M           real|model (default real)
+  --ndev D           number of (simulated) devices
+  --streams S        streams per device
+  --vmem-mib M       device memory budget (forces OOC at small scale)
+  --hw H             a100|h100|gh200 hardware profile (model mode)
+  --precisions P,... subset of f8,f16,f32,f64 (default f64)
+  --accuracy A       MxP threshold epsilon_high (default 1e-8)
+  --beta B           Matern spatial range (default 0.078809)
+  --seed S           workload seed
+  --prefetch         lookahead operand prefetch into the tile cache
+  --trace            record + print the event timeline
+  --verify           check the factor against the host oracle (n<=8192)
+  --config FILE      JSON config (flags override)
+";
+
+/// Parse `--key value` / `--flag` pairs into the config.
+fn parse_cfg(mut args: VecDeque<String>) -> Result<RunConfig> {
+    let mut cfg = RunConfig::default();
+    let next = |args: &mut VecDeque<String>, key: &str| -> Result<String> {
+        args.pop_front().ok_or_else(|| anyhow!("{key} needs a value"))
+    };
+    while let Some(a) = args.pop_front() {
+        match a.as_str() {
+            "--config" => {
+                let path = next(&mut args, "--config")?;
+                let text = std::fs::read_to_string(&path)
+                    .with_context(|| format!("reading {path}"))?;
+                let j = ooc_cholesky::util::json::parse(&text).map_err(|e| anyhow!(e))?;
+                cfg.apply_json(&j).map_err(|e| anyhow!(e))?;
+            }
+            "--n" => cfg.n = next(&mut args, "--n")?.parse()?,
+            "--ts" => cfg.ts = next(&mut args, "--ts")?.parse()?,
+            "--version" => {
+                cfg.version = Version::parse(&next(&mut args, "--version")?)
+                    .context("bad --version")?
+            }
+            "--mode" => {
+                cfg.mode = match next(&mut args, "--mode")?.as_str() {
+                    "real" => Mode::Real,
+                    "model" | "sim" => Mode::Model,
+                    m => bail!("bad --mode {m}"),
+                }
+            }
+            "--ndev" => cfg.ndev = next(&mut args, "--ndev")?.parse()?,
+            "--streams" => cfg.streams_per_dev = next(&mut args, "--streams")?.parse()?,
+            "--vmem-mib" => {
+                cfg.vmem_bytes =
+                    Some(next(&mut args, "--vmem-mib")?.parse::<u64>()? * 1024 * 1024)
+            }
+            "--hw" => {
+                cfg.hw = HwProfile::by_name(&next(&mut args, "--hw")?).context("bad --hw")?
+            }
+            "--precisions" => {
+                cfg.precisions = next(&mut args, "--precisions")?
+                    .split(',')
+                    .map(|p| Precision::parse(p).ok_or_else(|| anyhow!("bad precision {p}")))
+                    .collect::<Result<_>>()?;
+            }
+            "--accuracy" => cfg.accuracy = next(&mut args, "--accuracy")?.parse()?,
+            "--beta" => cfg.beta = next(&mut args, "--beta")?.parse()?,
+            "--nu" => cfg.nu = next(&mut args, "--nu")?.parse()?,
+            "--nugget" => cfg.nugget = next(&mut args, "--nugget")?.parse()?,
+            "--seed" => cfg.seed = next(&mut args, "--seed")?.parse()?,
+            "--prefetch" => cfg.prefetch = true,
+            "--trace" => cfg.trace = true,
+            "--verify" => cfg.verify = true,
+            other => bail!("unknown flag {other:?}"),
+        }
+    }
+    if cfg.version == Version::Sync {
+        cfg.streams_per_dev = 1;
+    }
+    Ok(cfg)
+}
+
+fn open_runtime_if(cfg: &RunConfig) -> Result<Option<Runtime>> {
+    Ok(if cfg.mode == Mode::Real { Some(Runtime::open_default()?) } else { None })
+}
+
+fn cmd_factorize(args: VecDeque<String>) -> Result<()> {
+    let cfg = parse_cfg(args)?;
+    let rt = open_runtime_if(&cfg)?;
+    let report = ooc::factorize(&cfg, rt.as_ref())?;
+    println!("{}", report.summary_line());
+    if let Some(tr) = &report.trace {
+        print!("{}", tr.render_ascii(100));
+        let path = figures::write_result("trace_chrome", &tr.to_chrome_json())?;
+        println!("(chrome://tracing timeline at {path:?})");
+    }
+    println!("{}", report.to_json().pretty());
+    Ok(())
+}
+
+fn cmd_figure(mut args: VecDeque<String>) -> Result<()> {
+    let id = args.pop_front().context("figure needs an id: 6..13 or all")?;
+    let quick = args.iter().any(|a| a == "--quick");
+    let run_one = |id: &str| -> Result<()> {
+        let j = match id {
+            "6" => {
+                let sizes: &[usize] = if quick {
+                    &[16 * 1024, 96 * 1024, 160 * 1024]
+                } else {
+                    &figures::fig6::SIZES
+                };
+                figures::fig6_single_gpu(sizes)?
+            }
+            "7" => figures::fig7_traces(if quick { 32 * 1024 } else { 160 * 1024 }, 100)?,
+            "8" => figures::fig8_volumes(if quick {
+                &[64 * 1024]
+            } else {
+                &[64 * 1024, 128 * 1024, 160 * 1024]
+            })?,
+            "9" => {
+                let sizes: &[usize] = if quick {
+                    &[128 * 1024]
+                } else {
+                    &[64 * 1024, 128 * 1024, 192 * 1024, 256 * 1024]
+                };
+                figures::fig9_multi_gpu(sizes)?
+            }
+            "10" => {
+                let rt = Runtime::open_default()?;
+                let sizes: &[usize] = if quick { &[512, 1024] } else { &[1024, 2048, 4096] };
+                figures::fig10_kl_divergence(&rt, sizes, 128)?
+            }
+            "11" => {
+                let sizes: &[usize] = if quick {
+                    &[64 * 1024]
+                } else {
+                    &[32 * 1024, 64 * 1024, 128 * 1024, 192 * 1024]
+                };
+                figures::fig11_mxp_perf(sizes, 2048)?
+            }
+            "12" => {
+                let sizes: &[usize] =
+                    if quick { &[64 * 1024] } else { &[64 * 1024, 128 * 1024, 192 * 1024] };
+                figures::fig12_mxp_volumes(sizes, 2048)?
+            }
+            "13" => {
+                figures::fig13_mxp_traces(if quick { 32 * 1024 } else { 100 * 1024 }, 2048, 100)?
+            }
+            other => bail!("unknown figure {other:?}"),
+        };
+        let path = figures::write_result(&format!("fig{id}"), &j)?;
+        println!("\nwrote {path:?}");
+        Ok(())
+    };
+    if id == "all" {
+        for id in ["6", "7", "8", "9", "10", "11", "12", "13"] {
+            run_one(id)?;
+        }
+        Ok(())
+    } else {
+        run_one(&id)
+    }
+}
+
+fn cmd_mle(args: VecDeque<String>) -> Result<()> {
+    let mut cfg = parse_cfg(args)?;
+    cfg.mode = Mode::Real;
+    let rt = Runtime::open_default()?;
+
+    // synthesize y ~ N(0, Sigma) from an FP64 factor, then evaluate the
+    // log-likelihood with the requested (possibly MxP) factorization
+    let matrix = ooc::build_matrix(&cfg);
+    let f64_cfg = RunConfig { precisions: vec![Precision::F64], ..cfg.clone() };
+    ooc::assign_precisions(&f64_cfg, &matrix);
+    ooc_cholesky::exec::real::run(&f64_cfg, &rt, &matrix)?;
+    let y = mle::sample_observations(&matrix, cfg.seed ^ 77);
+    let ll_exact = mle::log_likelihood(&matrix, &y);
+
+    let matrix2 = ooc::build_matrix(&cfg);
+    let hist = ooc::assign_precisions(&cfg, &matrix2);
+    let report = ooc_cholesky::exec::real::run(&cfg, &rt, &matrix2)?;
+    let ll = mle::log_likelihood(&matrix2, &y);
+
+    println!("{}", report.summary_line());
+    println!("precision histogram [f8,f16,f32,f64] = {hist:?}");
+    println!("log-likelihood (this run)  = {ll:.6}");
+    println!("log-likelihood (fp64 ref)  = {ll_exact:.6}");
+    println!("abs difference             = {:.3e}", (ll - ll_exact).abs());
+    Ok(())
+}
+
+fn cmd_kl(args: VecDeque<String>) -> Result<()> {
+    let cfg = parse_cfg(args)?;
+    let rt = Runtime::open_default()?;
+    let j = figures::fig10_kl_divergence(&rt, &[cfg.n], cfg.ts)?;
+    let path = figures::write_result("kl_sweep", &j)?;
+    println!("\nwrote {path:?}");
+    Ok(())
+}
+
+/// Factorize (real mode) and dump the lower-triangular factor as a NumPy
+/// `.npy` file — load it with `numpy.load` and check `L @ L.T` directly.
+fn cmd_export(mut args: VecDeque<String>) -> Result<()> {
+    // peel off --out before the config parser sees it
+    let mut out = std::path::PathBuf::from("factor.npy");
+    let mut rest = VecDeque::new();
+    while let Some(a) = args.pop_front() {
+        if a == "--out" {
+            out = args.pop_front().context("--out needs a path")?.into();
+        } else {
+            rest.push_back(a);
+        }
+    }
+    let mut cfg = parse_cfg(rest)?;
+    cfg.mode = Mode::Real;
+    let rt = Runtime::open_default()?;
+    let matrix = ooc::build_matrix(&cfg);
+    let hist = ooc::assign_precisions(&cfg, &matrix);
+    let report = ooc_cholesky::exec::real::run(&cfg, &rt, &matrix)?;
+    let dense = matrix.to_dense_lower();
+    ooc_cholesky::util::npy::write_npy_f64(&out, &dense, &[cfg.n, cfg.n])?;
+    println!("{}", report.summary_line());
+    println!("precision histogram [f8,f16,f32,f64] = {hist:?}");
+    println!("wrote factor to {out:?} — validate with numpy:");
+    println!("  python -c \"import numpy as np; L=np.load('{}'); print(np.allclose(np.tril(L), L))\"", out.display());
+    Ok(())
+}
+
+fn cmd_tune(args: VecDeque<String>) -> Result<()> {
+    let cfg = parse_cfg(args)?;
+    println!("tuning tile size for {} at n={} ({})", cfg.hw.name, cfg.n, cfg.version.name());
+    let r = ooc_cholesky::tune::tune_tile_size(&cfg, &ooc_cholesky::tune::CANDIDATES)?;
+    println!("{:>8} {:>12}", "ts", "TFlop/s");
+    for (ts, tf) in &r.curve {
+        let marker = if *ts == r.best_ts { "  <-- best" } else { "" };
+        println!("{ts:>8} {tf:>12.1}{marker}");
+    }
+    let path = figures::write_result("tune", &r.to_json())?;
+    println!("wrote {path:?}");
+    Ok(())
+}
+
+fn cmd_ablation(args: VecDeque<String>) -> Result<()> {
+    let cfg = parse_cfg(args)?;
+    let n = if cfg.n > 4096 { cfg.n } else { 96 * 1024 };
+    let ts = if cfg.ts >= 512 { cfg.ts } else { 2048 };
+    let j = figures::ablation_all(n, ts)?;
+    let path = figures::write_result("ablation", &j)?;
+    println!("\nwrote {path:?}");
+    Ok(())
+}
+
+fn cmd_artifacts() -> Result<()> {
+    let rt = Runtime::open_default()?;
+    let reg = rt.registry();
+    println!("artifact dir: {:?}", reg.dir());
+    for name in reg.names() {
+        let m = reg.meta(&name).unwrap();
+        println!(
+            "  {name:<22} op={:<10} ts={:<5} prec={:<4} nargs={}",
+            m.op, m.ts, m.prec, m.nargs
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,225 @@
+//! Data-movement & compute accounting (the currency of Figures 8 and 12).
+//!
+//! Volumes are **exact counts** — every H2D/D2H the coordinator issues
+//! adds the logical byte width of the moved tile — so Figure 8/12 shapes
+//! are reproduced by construction, not by modeling.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::precision::Precision;
+
+/// Thread-safe counters for one run.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    /// host→device bytes (the paper's "G2C" row is the reverse naming;
+    /// we follow H2D/D2H and map to the figure labels at render time)
+    pub h2d_bytes: AtomicU64,
+    pub d2h_bytes: AtomicU64,
+    /// per logical precision H2D byte split [f8, f16, f32, f64]
+    pub h2d_by_prec: [AtomicU64; 4],
+    pub h2d_transfers: AtomicU64,
+    pub d2h_transfers: AtomicU64,
+    /// cache behaviour
+    pub cache_hits: AtomicU64,
+    pub cache_misses: AtomicU64,
+    pub cache_evictions: AtomicU64,
+    /// task counts
+    pub n_potrf: AtomicU64,
+    pub n_trsm: AtomicU64,
+    pub n_gemm: AtomicU64,
+    pub n_syrk: AtomicU64,
+    /// device allocations (the async-version overhead the paper calls out)
+    pub device_allocs: AtomicU64,
+    pub device_frees: AtomicU64,
+    /// total useful flops
+    pub flops: AtomicU64,
+}
+
+fn prec_slot(p: Precision) -> usize {
+    match p {
+        Precision::F8 => 0,
+        Precision::F16 => 1,
+        Precision::F32 => 2,
+        Precision::F64 => 3,
+    }
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record_h2d(&self, bytes: u64, prec: Precision) {
+        self.h2d_bytes.fetch_add(bytes, Ordering::Relaxed);
+        self.h2d_by_prec[prec_slot(prec)].fetch_add(bytes, Ordering::Relaxed);
+        self.h2d_transfers.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_d2h(&self, bytes: u64) {
+        self.d2h_bytes.fetch_add(bytes, Ordering::Relaxed);
+        self.d2h_transfers.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_task(&self, op: TaskOp, ts: usize) {
+        let t = ts as u64;
+        let flops = match op {
+            TaskOp::Potrf => t * t * t / 3,
+            TaskOp::Trsm => t * t * t,
+            TaskOp::Gemm => 2 * t * t * t,
+            TaskOp::Syrk => t * t * t,
+        };
+        self.flops.fetch_add(flops, Ordering::Relaxed);
+        match op {
+            TaskOp::Potrf => &self.n_potrf,
+            TaskOp::Trsm => &self.n_trsm,
+            TaskOp::Gemm => &self.n_gemm,
+            TaskOp::Syrk => &self.n_syrk,
+        }
+        .fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        MetricsSnapshot {
+            h2d_bytes: self.h2d_bytes.load(Ordering::Relaxed),
+            d2h_bytes: self.d2h_bytes.load(Ordering::Relaxed),
+            h2d_by_prec: [
+                self.h2d_by_prec[0].load(Ordering::Relaxed),
+                self.h2d_by_prec[1].load(Ordering::Relaxed),
+                self.h2d_by_prec[2].load(Ordering::Relaxed),
+                self.h2d_by_prec[3].load(Ordering::Relaxed),
+            ],
+            h2d_transfers: self.h2d_transfers.load(Ordering::Relaxed),
+            d2h_transfers: self.d2h_transfers.load(Ordering::Relaxed),
+            cache_hits: self.cache_hits.load(Ordering::Relaxed),
+            cache_misses: self.cache_misses.load(Ordering::Relaxed),
+            cache_evictions: self.cache_evictions.load(Ordering::Relaxed),
+            n_potrf: self.n_potrf.load(Ordering::Relaxed),
+            n_trsm: self.n_trsm.load(Ordering::Relaxed),
+            n_gemm: self.n_gemm.load(Ordering::Relaxed),
+            n_syrk: self.n_syrk.load(Ordering::Relaxed),
+            device_allocs: self.device_allocs.load(Ordering::Relaxed),
+            device_frees: self.device_frees.load(Ordering::Relaxed),
+            flops: self.flops.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Operation kind for accounting/scheduling.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum TaskOp {
+    Potrf,
+    Trsm,
+    Gemm,
+    Syrk,
+}
+
+impl TaskOp {
+    pub fn name(self) -> &'static str {
+        match self {
+            TaskOp::Potrf => "potrf",
+            TaskOp::Trsm => "trsm",
+            TaskOp::Gemm => "gemm",
+            TaskOp::Syrk => "syrk",
+        }
+    }
+}
+
+/// Plain-data view of [`Metrics`].
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct MetricsSnapshot {
+    pub h2d_bytes: u64,
+    pub d2h_bytes: u64,
+    pub h2d_by_prec: [u64; 4],
+    pub h2d_transfers: u64,
+    pub d2h_transfers: u64,
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    pub cache_evictions: u64,
+    pub n_potrf: u64,
+    pub n_trsm: u64,
+    pub n_gemm: u64,
+    pub n_syrk: u64,
+    pub device_allocs: u64,
+    pub device_frees: u64,
+    pub flops: u64,
+}
+
+impl MetricsSnapshot {
+    pub fn total_bytes(&self) -> u64 {
+        self.h2d_bytes + self.d2h_bytes
+    }
+
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        Json::obj(vec![
+            ("h2d_bytes", Json::num(self.h2d_bytes as f64)),
+            ("d2h_bytes", Json::num(self.d2h_bytes as f64)),
+            ("total_bytes", Json::num(self.total_bytes() as f64)),
+            (
+                "h2d_by_prec",
+                Json::arr(self.h2d_by_prec.iter().map(|&b| Json::num(b as f64))),
+            ),
+            ("h2d_transfers", Json::num(self.h2d_transfers as f64)),
+            ("d2h_transfers", Json::num(self.d2h_transfers as f64)),
+            ("cache_hits", Json::num(self.cache_hits as f64)),
+            ("cache_misses", Json::num(self.cache_misses as f64)),
+            ("cache_evictions", Json::num(self.cache_evictions as f64)),
+            ("n_potrf", Json::num(self.n_potrf as f64)),
+            ("n_trsm", Json::num(self.n_trsm as f64)),
+            ("n_gemm", Json::num(self.n_gemm as f64)),
+            ("n_syrk", Json::num(self.n_syrk as f64)),
+            ("device_allocs", Json::num(self.device_allocs as f64)),
+            ("flops", Json::num(self.flops as f64)),
+        ])
+    }
+}
+
+/// Expected task counts for an Nt-tile left-looking Cholesky — used by
+/// invariants in tests: POTRF = Nt, TRSM = Nt(Nt−1)/2,
+/// SYRK = Nt(Nt−1)/2, GEMM = Nt(Nt−1)(Nt−2)/6.
+pub fn expected_task_counts(nt: u64) -> (u64, u64, u64, u64) {
+    (
+        nt,
+        nt * (nt - 1) / 2,
+        nt * (nt - 1) / 2,
+        nt * (nt.saturating_sub(1)) * (nt.saturating_sub(2)) / 6,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counts_accumulate() {
+        let m = Metrics::new();
+        m.record_h2d(100, Precision::F16);
+        m.record_h2d(50, Precision::F64);
+        m.record_d2h(30, );
+        m.record_task(TaskOp::Gemm, 64);
+        m.record_task(TaskOp::Potrf, 64);
+        let s = m.snapshot();
+        assert_eq!(s.h2d_bytes, 150);
+        assert_eq!(s.h2d_by_prec[1], 100);
+        assert_eq!(s.h2d_by_prec[3], 50);
+        assert_eq!(s.d2h_bytes, 30);
+        assert_eq!(s.total_bytes(), 180);
+        assert_eq!(s.n_gemm, 1);
+        assert_eq!(s.flops, 2 * 64 * 64 * 64 + 64 * 64 * 64 / 3);
+    }
+
+    #[test]
+    fn expected_counts() {
+        assert_eq!(expected_task_counts(1), (1, 0, 0, 0));
+        assert_eq!(expected_task_counts(4), (4, 6, 6, 4));
+        assert_eq!(expected_task_counts(8), (8, 28, 28, 56));
+    }
+
+    #[test]
+    fn json_has_fields() {
+        let s = MetricsSnapshot::default();
+        let j = s.to_json();
+        assert!(j.get("total_bytes").as_f64().is_some());
+        assert_eq!(j.get("h2d_by_prec").as_arr().unwrap().len(), 4);
+    }
+}

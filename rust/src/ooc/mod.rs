@@ -1,0 +1,317 @@
+//! Factorization drivers: generate the workload, assign precisions, and
+//! dispatch to the real or model executor.
+//!
+//! This is the library's front door:
+//!
+//! ```no_run
+//! use ooc_cholesky::{config::RunConfig, ooc, runtime::Runtime};
+//! let cfg = RunConfig { n: 2048, ts: 128, ..Default::default() };
+//! let rt = Runtime::open_default().unwrap();
+//! let report = ooc::factorize(&cfg, Some(&rt)).unwrap();
+//! println!("{}", report.summary_line());
+//! ```
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::config::{Mode, RunConfig, Version};
+use crate::exec::RunReport;
+use crate::matern::{build_covariance, Locations, MaternParams};
+use crate::precision::{select_precisions, Precision};
+use crate::runtime::Runtime;
+use crate::tiles::{sampled_tile_norms, MatrixShape, TileMatrix};
+
+/// Build the run's covariance matrix from the config's Matérn θ.
+pub fn build_matrix(cfg: &RunConfig) -> TileMatrix {
+    let loc = Locations::synthetic(cfg.n, cfg.seed);
+    let p = MaternParams::new(cfg.sigma2, cfg.beta, cfg.nu).with_nugget(cfg.nugget);
+    build_covariance(&loc, &p, cfg.n, cfg.ts)
+}
+
+/// Assign per-tile precisions (Higham–Mary, §IV-C) and quantize the
+/// matrix onto the chosen grids. Returns the histogram [f8,f16,f32,f64].
+pub fn assign_precisions(cfg: &RunConfig, matrix: &TileMatrix) -> [usize; 4] {
+    let pm = if cfg.precisions.len() <= 1 {
+        crate::precision::PrecisionMap::uniform(matrix.nt, Precision::F64)
+    } else {
+        let norms = matrix.tile_norms();
+        select_precisions(matrix.nt, &norms, cfg.accuracy, &cfg.precisions)
+    };
+    matrix.apply_precision(&pm);
+    pm.histogram()
+}
+
+/// Shape-only pipeline for model mode: precision selection uses sampled
+/// tile norms so paper-scale matrices (160k+) need no payload memory.
+pub fn build_shape(cfg: &RunConfig) -> MatrixShape {
+    if cfg.precisions.len() <= 1 {
+        return MatrixShape::uniform(cfg.n, cfg.ts, Precision::F64);
+    }
+    let loc = Locations::synthetic(cfg.n, cfg.seed);
+    let p = MaternParams::new(cfg.sigma2, cfg.beta, cfg.nu).with_nugget(cfg.nugget);
+    let norms = sampled_tile_norms(&loc, &p, cfg.n, cfg.ts, 256, cfg.seed ^ 0x5eed);
+    let pm = select_precisions(cfg.nt(), &norms, cfg.accuracy, &cfg.precisions);
+    MatrixShape::with_map(cfg.n, cfg.ts, pm)
+}
+
+/// Full pipeline: matrix → precision map → factorize → (verify).
+pub fn factorize(cfg: &RunConfig, rt: Option<&Runtime>) -> Result<RunReport> {
+    cfg.validate().map_err(|e| anyhow!("config: {e}"))?;
+
+    if cfg.mode == Mode::Model {
+        let shape = build_shape(cfg);
+        let mut report = crate::exec::model::run(cfg, &shape)?;
+        report.precision_histogram = shape.histogram();
+        return Ok(report);
+    }
+
+    let matrix = build_matrix(cfg);
+    let hist = assign_precisions(cfg, &matrix);
+    // keep a pristine copy for the residual check
+    let original = if cfg.verify {
+        anyhow::ensure!(cfg.n <= 8192, "verify is O(n^3) on the host; use n <= 8192");
+        Some(matrix.to_dense_sym())
+    } else {
+        None
+    };
+
+    let rt = rt.context("real mode needs a PJRT runtime (artifacts)")?;
+    let mut report = if cfg.version == Version::InCore {
+        run_incore_real(cfg, rt, &matrix)?
+    } else {
+        crate::exec::real::run(cfg, rt, &matrix)?
+    };
+    report.precision_histogram = hist;
+
+    if let Some(a) = original {
+        let l = matrix.to_dense_lower();
+        report.residual = Some(crate::baseline::factorization_residual(&l, &a, cfg.n));
+    }
+    Ok(report)
+}
+
+/// The in-core "vendor library" baseline (cuSOLVER analog): one opaque
+/// whole-matrix POTRF call; the full matrix crosses the interconnect both
+/// ways and there is no OOC support at all (fails if it does not fit).
+fn run_incore_real(cfg: &RunConfig, rt: &Runtime, matrix: &TileMatrix) -> Result<RunReport> {
+    let n = cfg.n;
+    let full_bytes = (n * n * 8) as u64;
+    anyhow::ensure!(
+        full_bytes <= cfg.device_vmem(),
+        "in-core baseline: matrix ({}) exceeds device memory ({}) — no OOC support",
+        crate::util::human_bytes(full_bytes),
+        crate::util::human_bytes(cfg.device_vmem()),
+    );
+    let kernel = rt
+        .kernel_by_name(&format!("potrf_full_{n}"))
+        .with_context(|| format!("in-core baseline needs a potrf_full_{n} artifact"))?;
+
+    let metrics = crate::metrics::Metrics::new();
+    let trace = crate::trace::Trace::new(cfg.trace);
+    let dense = matrix.to_dense_sym();
+    let t0 = std::time::Instant::now();
+
+    let buf = rt.upload(&dense, n)?;
+    metrics.record_h2d(full_bytes, Precision::F64);
+    let t_up = t0.elapsed().as_secs_f64();
+    trace.record(crate::trace::Event {
+        device: 0,
+        stream: 0,
+        kind: crate::trace::EventKind::H2D,
+        label: "h2d(full)".into(),
+        t0: 0.0,
+        t1: t_up,
+    });
+
+    let out = kernel.run(&[&buf])?;
+    metrics.record_task(crate::metrics::TaskOp::Potrf, n);
+    let t_f = t0.elapsed().as_secs_f64();
+    trace.record(crate::trace::Event {
+        device: 0,
+        stream: 0,
+        kind: crate::trace::EventKind::Work,
+        label: "potrf(full)".into(),
+        t0: t_up,
+        t1: t_f,
+    });
+
+    let mut l = vec![0.0; n * n];
+    rt.download(&out, &mut l)?;
+    metrics.record_d2h(full_bytes);
+    let t_d = t0.elapsed().as_secs_f64();
+    trace.record(crate::trace::Event {
+        device: 0,
+        stream: 0,
+        kind: crate::trace::EventKind::D2H,
+        label: "d2h(full)".into(),
+        t0: t_f,
+        t1: t_d,
+    });
+
+    // write the factor back into the tile store
+    let ts = cfg.ts;
+    let nt = cfg.nt();
+    let mut tile = vec![0.0; ts * ts];
+    for i in 0..nt {
+        for j in 0..=i {
+            for r in 0..ts {
+                for c in 0..ts {
+                    let (gr, gc) = (i * ts + r, j * ts + c);
+                    tile[r * ts + c] = if gr >= gc { l[gr * n + gc] } else { 0.0 };
+                }
+            }
+            matrix.write_tile(i, j, &tile);
+        }
+    }
+
+    let elapsed = t0.elapsed().as_secs_f64();
+    let snapshot = metrics.snapshot();
+    Ok(RunReport {
+        cfg: cfg.clone(),
+        elapsed_s: elapsed,
+        tflops: snapshot.flops as f64 / elapsed / 1e12,
+        work_utilization: trace.work_utilization(),
+        trace: if cfg.trace { Some(std::sync::Arc::new(trace)) } else { None },
+        metrics: snapshot,
+        residual: None,
+        precision_histogram: [0; 4],
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn runtime() -> Runtime {
+        Runtime::open_default().expect("artifacts")
+    }
+
+    fn base_cfg(version: Version) -> RunConfig {
+        RunConfig {
+            n: 256,
+            ts: 64,
+            version,
+            streams_per_dev: if version == Version::Sync { 1 } else { 2 },
+            verify: true,
+            nugget: 1e-3,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn v3_factorizes_correctly() {
+        let rt = runtime();
+        let report = factorize(&base_cfg(Version::V3), Some(&rt)).unwrap();
+        assert!(report.residual.unwrap() < 1e-12, "residual {:?}", report.residual);
+        // every tile written back exactly once: D2H = triangle bytes
+        let tri_bytes = (256 / 64) * (256 / 64 + 1) / 2 * 64 * 64 * 8;
+        assert_eq!(report.metrics.d2h_bytes, tri_bytes as u64);
+    }
+
+    #[test]
+    fn all_versions_agree_with_oracle() {
+        let rt = runtime();
+        for v in [Version::Sync, Version::Async, Version::V1, Version::V2, Version::RightLooking] {
+            let report = factorize(&base_cfg(v), Some(&rt)).unwrap();
+            assert!(
+                report.residual.unwrap() < 1e-12,
+                "{}: residual {:?}",
+                v.name(),
+                report.residual
+            );
+        }
+    }
+
+    #[test]
+    fn incore_baseline_matches() {
+        let rt = runtime();
+        let mut cfg = base_cfg(Version::InCore);
+        cfg.n = 256;
+        cfg.ts = 64;
+        let report = factorize(&cfg, Some(&rt)).unwrap();
+        assert!(report.residual.unwrap() < 1e-12);
+        // full matrix both ways (no OOC): H2D = D2H = n^2 * 8
+        assert_eq!(report.metrics.h2d_bytes, 256 * 256 * 8);
+        assert_eq!(report.metrics.d2h_bytes, 256 * 256 * 8);
+    }
+
+    #[test]
+    fn incore_oom_fails() {
+        let rt = runtime();
+        let mut cfg = base_cfg(Version::InCore);
+        cfg.vmem_bytes = Some(256 * 256 * 8 - 1);
+        assert!(factorize(&cfg, Some(&rt)).is_err());
+    }
+
+    #[test]
+    fn mxp_factorization_bounded_error() {
+        let rt = runtime();
+        let mut cfg = base_cfg(Version::V3);
+        cfg.n = 512;
+        cfg.beta = 0.02627; // weak correlation -> aggressive downcasts
+        cfg.precisions = crate::precision::ALL_PRECISIONS.to_vec();
+        cfg.accuracy = 1e-5;
+        let report = factorize(&cfg, Some(&rt)).unwrap();
+        let hist = report.precision_histogram;
+        assert!(hist[3] >= 8, "diagonals stay f64: {hist:?}");
+        assert!(hist[0] + hist[1] + hist[2] > 0, "some tiles downcast: {hist:?}");
+        let resid = report.residual.unwrap();
+        assert!(resid < 1e-3, "MxP residual too large: {resid}");
+        assert!(resid > 1e-14, "MxP residual suspiciously exact: {resid}");
+    }
+
+    #[test]
+    fn data_volume_ordering_matches_paper() {
+        // Fig. 8: volume(V3) <= volume(V2) <= volume(V1) < volume(async)
+        let rt = runtime();
+        let mut vols = std::collections::HashMap::new();
+        for v in [Version::Async, Version::V1, Version::V2, Version::V3] {
+            let mut cfg = base_cfg(v);
+            cfg.n = 512;
+            cfg.verify = false;
+            // small vmem to put pressure on the cache (but >= job working set)
+            cfg.vmem_bytes = Some((64 * 64 * 8) as u64 * 24);
+            let report = factorize(&cfg, Some(&rt)).unwrap();
+            vols.insert(v.name(), report.metrics.total_bytes());
+        }
+        assert!(vols["v3"] <= vols["v2"], "{vols:?}");
+        assert!(vols["v2"] <= vols["v1"], "{vols:?}");
+        assert!(vols["v1"] < vols["async"], "{vols:?}");
+    }
+
+    #[test]
+    fn multi_device_correctness() {
+        let rt = runtime();
+        let mut cfg = base_cfg(Version::V3);
+        cfg.n = 512;
+        cfg.ndev = 3;
+        cfg.streams_per_dev = 2;
+        let report = factorize(&cfg, Some(&rt)).unwrap();
+        assert!(report.residual.unwrap() < 1e-12);
+    }
+
+    #[test]
+    fn forced_eviction_still_correct() {
+        // vmem just above the per-stream working set: constant cache churn
+        let rt = runtime();
+        let mut cfg = base_cfg(Version::V3);
+        cfg.n = 512;
+        cfg.streams_per_dev = 2;
+        cfg.vmem_bytes = Some((64 * 64 * 8) as u64 * 12);
+        let report = factorize(&cfg, Some(&rt)).unwrap();
+        assert!(report.residual.unwrap() < 1e-12);
+        assert!(report.metrics.cache_evictions > 0, "expected eviction pressure");
+    }
+
+    #[test]
+    fn single_tile_matrix() {
+        let rt = runtime();
+        let mut cfg = base_cfg(Version::V3);
+        cfg.n = 64;
+        cfg.ts = 64;
+        cfg.streams_per_dev = 1;
+        let report = factorize(&cfg, Some(&rt)).unwrap();
+        assert!(report.residual.unwrap() < 1e-13);
+        assert_eq!(report.metrics.n_potrf, 1);
+        assert_eq!(report.metrics.n_gemm, 0);
+    }
+}

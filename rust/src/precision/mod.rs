@@ -1,0 +1,258 @@
+//! Logical tile precisions and their emulation on f64 storage.
+//!
+//! Tiles are stored as f64 on the wire; a tile tagged `F16` only ever
+//! holds values representable on the IEEE binary16 grid. Quantization is
+//! a saturating round-to-nearest-even onto the target grid — exactly what
+//! `python/compile/kernels/quantize.py` does at the JAX layer (the two are
+//! cross-checked by the `runtime_quantize_parity` integration test).
+//!
+//! Byte accounting (the paper's data-movement economics) uses the logical
+//! width: transferring an FP8 tile moves ts²·1 bytes, not ts²·8.
+
+mod select;
+
+pub use select::{select_precisions, PrecisionMap};
+
+/// The paper's four precisions (§IV-C).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Precision {
+    /// FP8 E4M3 (fn variant: no inf, saturates at ±448)
+    F8,
+    /// IEEE binary16
+    F16,
+    /// IEEE binary32
+    F32,
+    /// IEEE binary64 (reference / storage precision)
+    F64,
+}
+
+pub const ALL_PRECISIONS: [Precision; 4] =
+    [Precision::F8, Precision::F16, Precision::F32, Precision::F64];
+
+impl Precision {
+    /// Unit roundoff (machine epsilon / 2 convention: eps = 2^-mant_bits-... —
+    /// we follow the paper/Higham-Mary convention eps = 2^-(p) where p is
+    /// the number of stored mantissa bits + 1 implied... concretely:
+    /// f64: 2^-53, f32: 2^-24, f16: 2^-11, f8(E4M3): 2^-3).
+    pub fn eps(self) -> f64 {
+        match self {
+            Precision::F64 => 2f64.powi(-53),
+            Precision::F32 => 2f64.powi(-24),
+            Precision::F16 => 2f64.powi(-11),
+            Precision::F8 => 2f64.powi(-3),
+        }
+    }
+
+    /// Bytes per word at this logical precision.
+    pub fn width(self) -> u64 {
+        match self {
+            Precision::F64 => 8,
+            Precision::F32 => 4,
+            Precision::F16 => 2,
+            Precision::F8 => 1,
+        }
+    }
+
+    /// Canonical lowercase name, matching the artifact manifest keys.
+    pub fn name(self) -> &'static str {
+        match self {
+            Precision::F64 => "f64",
+            Precision::F32 => "f32",
+            Precision::F16 => "f16",
+            Precision::F8 => "f8",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Precision> {
+        match s {
+            "f64" | "fp64" | "double" => Some(Precision::F64),
+            "f32" | "fp32" | "single" => Some(Precision::F32),
+            "f16" | "fp16" | "half" => Some(Precision::F16),
+            "f8" | "fp8" => Some(Precision::F8),
+            _ => None,
+        }
+    }
+
+    /// Largest finite value on this grid.
+    pub fn max_val(self) -> f64 {
+        match self {
+            Precision::F64 => f64::MAX,
+            Precision::F32 => f32::MAX as f64,
+            Precision::F16 => 65504.0,
+            Precision::F8 => 448.0,
+        }
+    }
+
+    /// Stored mantissa bits (excluding the implied leading 1).
+    fn mant_bits(self) -> u32 {
+        match self {
+            Precision::F64 => 52,
+            Precision::F32 => 23,
+            Precision::F16 => 10,
+            Precision::F8 => 3,
+        }
+    }
+
+    /// Minimum normal exponent.
+    fn emin(self) -> i32 {
+        match self {
+            Precision::F64 => -1022,
+            Precision::F32 => -126,
+            Precision::F16 => -14,
+            Precision::F8 => -6,
+        }
+    }
+
+    /// Round one f64 value onto this grid (saturating, round-to-nearest-even,
+    /// subnormal-aware). Mirrors numpy's `clip(...).astype(dtype).astype(f64)`.
+    pub fn quantize(self, x: f64) -> f64 {
+        if self == Precision::F64 || x == 0.0 || x.is_nan() {
+            return x;
+        }
+        if self == Precision::F32 {
+            // hardware does this exactly (RNE, saturate via clamp first)
+            return x.clamp(-self.max_val(), self.max_val()) as f32 as f64;
+        }
+        let max = self.max_val();
+        let c = x.clamp(-max, max);
+        // exponent of |c|
+        let e = {
+            let bits = c.abs().to_bits();
+            ((bits >> 52) as i32) - 1023
+        };
+        let q_exp = if e < self.emin() {
+            self.emin() - self.mant_bits() as i32 // subnormal quantum
+        } else {
+            e - self.mant_bits() as i32
+        };
+        // exact power of two via exponent-field construction — ~10x faster
+        // than powi and exact by construction (q_exp is always normal)
+        let quantum = f64::from_bits(((q_exp + 1023) as u64) << 52);
+        let r = (c / quantum).round_ties_even() * quantum;
+        // rounding can push past max (e.g. 447.9 -> 448 is fine, but values
+        // just under a clamp boundary round upward to a representable value,
+        // never beyond: max is always a grid point)
+        r.clamp(-max, max)
+    }
+
+    /// Quantize a slice in place; returns the max |x - q(x)| seen (handy in
+    /// tests and diagnostics).
+    pub fn quantize_slice(self, xs: &mut [f64]) -> f64 {
+        if self == Precision::F64 {
+            return 0.0;
+        }
+        let mut max_err = 0f64;
+        for x in xs.iter_mut() {
+            let q = self.quantize(*x);
+            max_err = max_err.max((*x - q).abs());
+            *x = q;
+        }
+        max_err
+    }
+}
+
+impl std::fmt::Display for Precision {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f32_matches_cast() {
+        let mut r = crate::util::rng::Rng::new(1);
+        for _ in 0..10_000 {
+            let x = r.normal() * 10f64.powf(r.range(-30.0, 30.0));
+            assert_eq!(Precision::F32.quantize(x), x as f32 as f64, "x={x}");
+        }
+    }
+
+    #[test]
+    fn f16_known_values() {
+        // (input, binary16 result) pairs, from numpy float16 semantics
+        let cases = [
+            (1.0, 1.0),
+            (1.0 + 2f64.powi(-11), 1.0),            // half-quantum tie -> even (down)
+            (1.0 + 3.0 * 2f64.powi(-11), 1.0 + 2.0 * 2f64.powi(-10)), // 1.5q tie -> even (up)
+            (2048.0 + 1.0, 2048.0),                 // quantum is 2 at e=11
+            (2048.0 + 3.0, 2048.0 + 4.0),
+            (65504.0, 65504.0),
+            (1e9, 65504.0),                         // saturate
+            (-1e9, -65504.0),
+            (300.0, 300.0),
+            (2f64.powi(-24), 2f64.powi(-24)),       // smallest f16 subnormal
+            (2f64.powi(-26), 0.0),                  // below half-subnormal -> 0
+        ];
+        for (x, want) in cases {
+            assert_eq!(Precision::F16.quantize(x), want, "x={x}");
+        }
+    }
+
+    #[test]
+    fn f8_known_values() {
+        // FP8 E4M3FN: 3 mantissa bits, emin=-6, max=448
+        let cases = [
+            (1.0, 1.0),
+            (1.05, 1.0),           // quantum 0.125 at e=0 -> 1.0
+            (1.1, 1.125),
+            (448.0, 448.0),
+            (500.0, 448.0),        // saturate (paper/hardware semantics)
+            (-500.0, -448.0),
+            (300.0, 288.0),        // quantum 32 at e=8; 300 -> 288 (RNE: 300/32=9.375 -> 9)
+            (0.0625, 0.0625),      // 2^-4 normal
+            (2f64.powi(-9), 2f64.powi(-9)),  // subnormal grid: quantum 2^-9
+            (2f64.powi(-11), 0.0), // below half of smallest subnormal
+        ];
+        for (x, want) in cases {
+            assert_eq!(Precision::F8.quantize(x), want, "x={x}");
+        }
+    }
+
+    #[test]
+    fn quantize_is_idempotent() {
+        let mut r = crate::util::rng::Rng::new(9);
+        for p in ALL_PRECISIONS {
+            for _ in 0..2000 {
+                let x = r.normal() * 10f64.powf(r.range(-10.0, 5.0));
+                let q = p.quantize(x);
+                assert_eq!(p.quantize(q), q, "p={p} x={x}");
+                assert!(!q.is_nan());
+                assert!(q.abs() <= p.max_val());
+            }
+        }
+    }
+
+    #[test]
+    fn relative_error_bounded() {
+        let mut r = crate::util::rng::Rng::new(4);
+        for p in [Precision::F32, Precision::F16, Precision::F8] {
+            for _ in 0..5000 {
+                let x = r.range(0.5, 2.0); // inside normal range of all grids
+                let q = p.quantize(x);
+                assert!(((q - x) / x).abs() <= p.eps(), "p={p} x={x} q={q}");
+            }
+        }
+    }
+
+    #[test]
+    fn ordering_and_widths() {
+        assert!(Precision::F8 < Precision::F16);
+        assert!(Precision::F16 < Precision::F32);
+        assert!(Precision::F32 < Precision::F64);
+        assert_eq!(Precision::F64.width(), 8);
+        assert_eq!(Precision::F8.width(), 1);
+        assert!(Precision::F8.eps() > Precision::F16.eps());
+    }
+
+    #[test]
+    fn parse_names() {
+        for p in ALL_PRECISIONS {
+            assert_eq!(Precision::parse(p.name()), Some(p));
+        }
+        assert_eq!(Precision::parse("fp16"), Some(Precision::F16));
+        assert_eq!(Precision::parse("bogus"), None);
+    }
+}

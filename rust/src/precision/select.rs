@@ -1,0 +1,191 @@
+//! Adaptive per-tile precision selection (§IV-C, after Higham & Mary).
+//!
+//! A tile A_ij may be stored at a precision with unit roundoff ε_low when
+//!
+//! ```text
+//! Nt · ‖A_ij‖_F / ‖A‖_F  ≤  ε_high / ε_low
+//! ```
+//!
+//! where ε_high is the user's accuracy threshold (1e-5 … 1e-8 in the
+//! paper's Figures 10–12) and Nt the number of tiles per column block.
+//! We pick the *lowest* precision satisfying the bound, restricted to the
+//! enabled precision set (Fig. 4 shows 1-/2-/3-/4-precision variants).
+//! Diagonal tiles always stay FP64: POTRF stability dominates and the
+//! paper's Figure 4 renders the diagonal at full precision.
+
+use super::Precision;
+
+/// Per-tile precision assignment for the lower triangle of an Nt×Nt tile
+/// matrix. Indexed by the packed lower-triangular index.
+#[derive(Debug, Clone)]
+pub struct PrecisionMap {
+    nt: usize,
+    map: Vec<Precision>,
+}
+
+impl PrecisionMap {
+    pub fn uniform(nt: usize, p: Precision) -> Self {
+        PrecisionMap { nt, map: vec![p; nt * (nt + 1) / 2] }
+    }
+
+    #[inline]
+    fn idx(&self, i: usize, j: usize) -> usize {
+        debug_assert!(j <= i && i < self.nt);
+        i * (i + 1) / 2 + j
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> Precision {
+        self.map[self.idx(i, j)]
+    }
+
+    pub fn set(&mut self, i: usize, j: usize, p: Precision) {
+        let k = self.idx(i, j);
+        self.map[k] = p;
+    }
+
+    pub fn nt(&self) -> usize {
+        self.nt
+    }
+
+    /// Histogram over the four precisions: [f8, f16, f32, f64] tile counts.
+    pub fn histogram(&self) -> [usize; 4] {
+        let mut h = [0usize; 4];
+        for p in &self.map {
+            let k = match p {
+                Precision::F8 => 0,
+                Precision::F16 => 1,
+                Precision::F32 => 2,
+                Precision::F64 => 3,
+            };
+            h[k] += 1;
+        }
+        h
+    }
+
+    /// Total bytes of the lower triangle at the assigned precisions.
+    pub fn total_bytes(&self, ts: usize) -> u64 {
+        self.map.iter().map(|p| (ts * ts) as u64 * p.width()).sum()
+    }
+}
+
+/// Apply the Higham–Mary criterion given per-tile Frobenius norms.
+///
+/// * `tile_norms[i*(i+1)/2+j]` — ‖A_ij‖_F over the lower triangle;
+/// * `accuracy` — the ε_high threshold (e.g. 1e-5 … 1e-8);
+/// * `enabled` — which precisions may be used (must contain F64); e.g.
+///   `[F64]`, `[F32, F64]`, `[F16, F32, F64]`, `[F8, F16, F32, F64]`
+///   reproducing Fig. 4's one- to four-precision variants.
+pub fn select_precisions(
+    nt: usize,
+    tile_norms: &[f64],
+    accuracy: f64,
+    enabled: &[Precision],
+) -> PrecisionMap {
+    assert_eq!(tile_norms.len(), nt * (nt + 1) / 2);
+    assert!(enabled.contains(&Precision::F64), "F64 must always be enabled");
+    let matrix_norm = tile_norms.iter().map(|x| x * x).sum::<f64>().sqrt();
+    let mut pm = PrecisionMap::uniform(nt, Precision::F64);
+    if matrix_norm == 0.0 {
+        return pm;
+    }
+
+    let mut sorted: Vec<Precision> = enabled.to_vec();
+    sorted.sort(); // lowest first (F8 < F16 < F32 < F64)
+
+    for i in 0..nt {
+        for j in 0..=i {
+            if i == j {
+                continue; // diagonal stays F64
+            }
+            let ratio = nt as f64 * tile_norms[i * (i + 1) / 2 + j] / matrix_norm;
+            let mut chosen = Precision::F64;
+            for &p in &sorted {
+                if ratio <= accuracy / p.eps() {
+                    chosen = p;
+                    break;
+                }
+            }
+            pm.set(i, j, chosen);
+        }
+    }
+    pm
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::precision::ALL_PRECISIONS;
+
+    fn norms_decaying(nt: usize, decay: f64) -> Vec<f64> {
+        // off-diagonal norm decays with distance from the diagonal, like a
+        // correlation matrix from spatial data
+        let mut v = Vec::new();
+        for i in 0..nt {
+            for j in 0..=i {
+                v.push(if i == j { 100.0 } else { 100.0 * decay.powi((i - j) as i32) });
+            }
+        }
+        v
+    }
+
+    #[test]
+    fn diagonal_always_f64() {
+        let pm = select_precisions(8, &norms_decaying(8, 0.01), 1e-5, &ALL_PRECISIONS);
+        for i in 0..8 {
+            assert_eq!(pm.get(i, i), Precision::F64);
+        }
+    }
+
+    #[test]
+    fn fast_decay_uses_low_precision() {
+        let pm = select_precisions(8, &norms_decaying(8, 1e-3), 1e-5, &ALL_PRECISIONS);
+        // far off-diagonal tiles are tiny -> FP8
+        assert_eq!(pm.get(7, 0), Precision::F8);
+        // near-diagonal tiles are larger -> strictly higher precision
+        assert!(pm.get(1, 0) > Precision::F8);
+    }
+
+    #[test]
+    fn tighter_accuracy_raises_precision() {
+        let norms = norms_decaying(16, 0.1);
+        let loose = select_precisions(16, &norms, 1e-5, &ALL_PRECISIONS);
+        let tight = select_precisions(16, &norms, 1e-8, &ALL_PRECISIONS);
+        let mut some_strictly_higher = false;
+        for i in 0..16 {
+            for j in 0..=i {
+                assert!(tight.get(i, j) >= loose.get(i, j), "({i},{j})");
+                if tight.get(i, j) > loose.get(i, j) {
+                    some_strictly_higher = true;
+                }
+            }
+        }
+        assert!(some_strictly_higher);
+    }
+
+    #[test]
+    fn restricted_precision_sets() {
+        let norms = norms_decaying(8, 1e-4);
+        let two = select_precisions(8, &norms, 1e-5, &[Precision::F32, Precision::F64]);
+        for i in 0..8 {
+            for j in 0..=i {
+                assert!(matches!(two.get(i, j), Precision::F32 | Precision::F64));
+            }
+        }
+        let one = select_precisions(8, &norms, 1e-5, &[Precision::F64]);
+        assert_eq!(one.histogram(), [0, 0, 0, 36]);
+    }
+
+    #[test]
+    fn histogram_and_bytes() {
+        let pm = PrecisionMap::uniform(4, Precision::F16);
+        assert_eq!(pm.histogram(), [0, 10, 0, 0]);
+        assert_eq!(pm.total_bytes(32), 10 * 32 * 32 * 2);
+    }
+
+    #[test]
+    fn zero_matrix_stays_f64() {
+        let pm = select_precisions(4, &vec![0.0; 10], 1e-5, &ALL_PRECISIONS);
+        assert_eq!(pm.histogram(), [0, 0, 0, 10]);
+    }
+}

@@ -1,0 +1,313 @@
+//! PJRT runtime: loads the AOT-compiled HLO artifacts and executes tile
+//! kernels on device buffers.
+//!
+//! This is the only place the `xla` crate is touched. The flow per kernel
+//! (see /opt/xla-example/load_hlo for the reference wiring):
+//!
+//!   HLO text  --HloModuleProto::from_text_file-->  XlaComputation
+//!             --PjRtClient::compile-->             PjRtLoadedExecutable
+//!
+//! and per call: host slice --buffer_from_host_buffer--> [`DevBuf`]
+//! --execute_b--> output [`DevBuf`] --copy_raw_to_host_sync--> host.
+//!
+//! Because artifacts are lowered with `return_tuple=False`, a kernel's
+//! output buffer feeds the next kernel's input directly: the accumulator
+//! tile of the left-looking update loop never leaves the device — which
+//! is precisely the paper's V1 data-residency optimization, expressed in
+//! PJRT instead of CUDA.
+
+mod registry;
+
+pub use registry::{ArtifactMeta, Registry};
+
+use std::sync::Arc;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::precision::Precision;
+
+/// A device-resident tile (PJRT buffer handle).
+///
+/// SAFETY: `PjRtBuffer` wraps a raw pointer into the PJRT CPU client,
+/// which is documented thread-safe (TfrtCpuClient; the PJRT C API
+/// requires thread-safe clients). The `xla` crate simply never declared
+/// the auto-traits. We pin buffers behind `Arc` and never mutate through
+/// shared references.
+pub struct DevBuf(pub xla::PjRtBuffer);
+unsafe impl Send for DevBuf {}
+unsafe impl Sync for DevBuf {}
+
+/// Shared handle to the PJRT client + compiled-executable cache.
+#[derive(Clone)]
+pub struct Runtime {
+    inner: Arc<RuntimeInner>,
+}
+
+struct RuntimeInner {
+    client: ClientBox,
+    registry: Registry,
+}
+
+struct ClientBox(xla::PjRtClient);
+// SAFETY: see DevBuf — the PJRT CPU client is thread-safe.
+unsafe impl Send for ClientBox {}
+unsafe impl Sync for ClientBox {}
+
+/// A compiled tile kernel, cached by the registry.
+pub struct Kernel {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+    pub nargs: usize,
+    pub ts: usize,
+}
+// SAFETY: see DevBuf.
+unsafe impl Send for Kernel {}
+unsafe impl Sync for Kernel {}
+
+impl Runtime {
+    /// Open the artifact directory (must contain `manifest.json`) and
+    /// connect to the PJRT CPU client.
+    pub fn open(artifact_dir: &std::path::Path) -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+        let registry = Registry::open(artifact_dir)?;
+        Ok(Runtime { inner: Arc::new(RuntimeInner { client: ClientBox(client), registry }) })
+    }
+
+    /// Default artifact dir: `$OOC_ARTIFACTS` or `<crate>/artifacts`.
+    pub fn open_default() -> Result<Runtime> {
+        let dir = std::env::var("OOC_ARTIFACTS")
+            .map(std::path::PathBuf::from)
+            .unwrap_or_else(|_| std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts"));
+        Self::open(&dir)
+    }
+
+    pub fn registry(&self) -> &Registry {
+        &self.inner.registry
+    }
+
+    /// Compile (or fetch from cache) the kernel `op_ts_prec`, e.g.
+    /// ("gemm", 256, F16) -> `gemm_256_f16`.
+    pub fn kernel(&self, op: &str, ts: usize, prec: Precision) -> Result<Arc<Kernel>> {
+        let name = format!("{op}_{ts}_{}", prec.name());
+        self.kernel_by_name(&name)
+    }
+
+    /// Compile (or fetch) by full artifact name.
+    pub fn kernel_by_name(&self, name: &str) -> Result<Arc<Kernel>> {
+        self.inner.registry.get_or_compile(name, |path, meta| {
+            let proto = xla::HloModuleProto::from_text_file(path)
+                .map_err(|e| anyhow!("parse {name}: {e:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .inner
+                .client
+                .0
+                .compile(&comp)
+                .map_err(|e| anyhow!("compile {name}: {e:?}"))?;
+            Ok(Kernel { exe, name: name.to_string(), nargs: meta.nargs, ts: meta.ts })
+        })
+    }
+
+    /// H2D: upload a ts×ts f64 tile to the device.
+    pub fn upload(&self, data: &[f64], ts: usize) -> Result<DevBuf> {
+        let buf = self
+            .inner
+            .client
+            .0
+            .buffer_from_host_buffer::<f64>(data, &[ts, ts], None)
+            .map_err(|e| anyhow!("h2d upload: {e:?}"))?;
+        Ok(DevBuf(buf))
+    }
+
+    /// D2H: copy a device tile back into a host slice.
+    ///
+    /// Goes through a `Literal` — xla_extension 0.5.1's CPU client does
+    /// not implement `CopyRawToHost`, so `to_literal_sync` is the D2H path.
+    pub fn download(&self, buf: &DevBuf, out: &mut [f64]) -> Result<()> {
+        let lit = buf.0.to_literal_sync().map_err(|e| anyhow!("d2h to_literal: {e:?}"))?;
+        let v = lit.to_vec::<f64>().map_err(|e| anyhow!("d2h to_vec: {e:?}"))?;
+        anyhow::ensure!(v.len() == out.len(), "d2h size mismatch: {} vs {}", v.len(), out.len());
+        out.copy_from_slice(&v);
+        Ok(())
+    }
+}
+
+impl Kernel {
+    /// Run the kernel on device-resident inputs; returns the output tile
+    /// buffer (still on device).
+    pub fn run(&self, args: &[&DevBuf]) -> Result<DevBuf> {
+        anyhow::ensure!(
+            args.len() == self.nargs,
+            "{}: expected {} args, got {}",
+            self.name,
+            self.nargs,
+            args.len()
+        );
+        let bufs: Vec<&xla::PjRtBuffer> = args.iter().map(|b| &b.0).collect();
+        let mut out = self
+            .exe
+            .execute_b(&bufs)
+            .map_err(|e| anyhow!("execute {}: {e:?}", self.name))?;
+        let replica = out.pop().context("no replica output")?;
+        let buf = replica.into_iter().next().context("no output buffer")?;
+        Ok(DevBuf(buf))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::precision::Precision;
+
+    fn runtime() -> Runtime {
+        Runtime::open_default().expect("runtime (run `make artifacts` first)")
+    }
+
+    #[test]
+    fn upload_download_roundtrip() {
+        let rt = runtime();
+        let ts = 32;
+        let data: Vec<f64> = (0..ts * ts).map(|i| i as f64 * 0.5).collect();
+        let buf = rt.upload(&data, ts).unwrap();
+        let mut out = vec![0.0; ts * ts];
+        rt.download(&buf, &mut out).unwrap();
+        assert_eq!(data, out);
+    }
+
+    #[test]
+    fn gemm_kernel_matches_host() {
+        let rt = runtime();
+        let ts = 32;
+        let mut rng = crate::util::rng::Rng::new(1);
+        let c: Vec<f64> = (0..ts * ts).map(|_| rng.normal()).collect();
+        let a: Vec<f64> = (0..ts * ts).map(|_| rng.normal()).collect();
+        let b: Vec<f64> = (0..ts * ts).map(|_| rng.normal()).collect();
+        let k = rt.kernel("gemm", ts, Precision::F64).unwrap();
+        let (cb, ab, bb) =
+            (rt.upload(&c, ts).unwrap(), rt.upload(&a, ts).unwrap(), rt.upload(&b, ts).unwrap());
+        let out = k.run(&[&cb, &ab, &bb]).unwrap();
+        let mut got = vec![0.0; ts * ts];
+        rt.download(&out, &mut got).unwrap();
+        // host reference: C - A B^T
+        for i in 0..ts {
+            for j in 0..ts {
+                let mut s = c[i * ts + j];
+                for kk in 0..ts {
+                    s -= a[i * ts + kk] * b[j * ts + kk];
+                }
+                assert!((got[i * ts + j] - s).abs() < 1e-10, "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn potrf_trsm_kernels_match_baseline() {
+        let rt = runtime();
+        let ts = 32;
+        // SPD tile
+        let mut rng = crate::util::rng::Rng::new(2);
+        let x: Vec<f64> = (0..ts * ts).map(|_| rng.normal()).collect();
+        let mut a = vec![0.0; ts * ts];
+        for i in 0..ts {
+            for j in 0..ts {
+                let mut s = if i == j { ts as f64 } else { 0.0 };
+                for k in 0..ts {
+                    s += x[i * ts + k] * x[j * ts + k];
+                }
+                a[i * ts + j] = s;
+            }
+        }
+        let kp = rt.kernel("potrf", ts, Precision::F64).unwrap();
+        let ab = rt.upload(&a, ts).unwrap();
+        let lb = kp.run(&[&ab]).unwrap();
+        let mut l = vec![0.0; ts * ts];
+        rt.download(&lb, &mut l).unwrap();
+        let want = crate::baseline::dense_cholesky(&a, ts).unwrap();
+        assert!(crate::baseline::max_abs_diff(&l, &want) < 1e-9);
+
+        // TRSM: random B, X L^T = B
+        let b: Vec<f64> = (0..ts * ts).map(|_| rng.normal()).collect();
+        let kt = rt.kernel("trsm", ts, Precision::F64).unwrap();
+        let bb = rt.upload(&b, ts).unwrap();
+        let xb = kt.run(&[&lb, &bb]).unwrap();
+        let mut xs = vec![0.0; ts * ts];
+        rt.download(&xb, &mut xs).unwrap();
+        // check X L^T == B
+        for i in 0..ts {
+            for j in 0..ts {
+                let mut s = 0.0;
+                for k in 0..=j {
+                    s += xs[i * ts + k] * l[j * ts + k];
+                }
+                assert!((s - b[i * ts + j]).abs() < 1e-8, "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn quantize_kernel_matches_rust_emulation() {
+        // cross-layer parity: the JAX/Pallas quantizer and the Rust
+        // precision emulation must agree bit-for-bit
+        let rt = runtime();
+        let ts = 32;
+        let mut rng = crate::util::rng::Rng::new(3);
+        let x: Vec<f64> =
+            (0..ts * ts).map(|_| rng.normal() * 10f64.powf(rng.range(-6.0, 6.0))).collect();
+        for prec in [Precision::F32, Precision::F16, Precision::F8] {
+            let k = rt.kernel("quantize", ts, prec).unwrap();
+            let xb = rt.upload(&x, ts).unwrap();
+            let qb = k.run(&[&xb]).unwrap();
+            let mut got = vec![0.0; ts * ts];
+            rt.download(&qb, &mut got).unwrap();
+            let want: Vec<f64> = x.iter().map(|&v| prec.quantize(v)).collect();
+            for i in 0..ts * ts {
+                assert_eq!(got[i], want[i], "prec={prec} x={} i={i}", x[i]);
+            }
+        }
+    }
+
+    #[test]
+    fn chained_device_side_updates() {
+        // accumulator stays on device across several GEMMs (V1 semantics)
+        let rt = runtime();
+        let ts = 32;
+        let mut rng = crate::util::rng::Rng::new(4);
+        let c0: Vec<f64> = (0..ts * ts).map(|_| rng.normal()).collect();
+        let k = rt.kernel("gemm", ts, Precision::F64).unwrap();
+        let mut acc = rt.upload(&c0, ts).unwrap();
+        let mut host = c0.clone();
+        for _round in 0..4 {
+            let a: Vec<f64> = (0..ts * ts).map(|_| rng.normal()).collect();
+            let b: Vec<f64> = (0..ts * ts).map(|_| rng.normal()).collect();
+            let (ab, bb) = (rt.upload(&a, ts).unwrap(), rt.upload(&b, ts).unwrap());
+            acc = k.run(&[&acc, &ab, &bb]).unwrap();
+            for i in 0..ts {
+                for j in 0..ts {
+                    let mut s = host[i * ts + j];
+                    for kk in 0..ts {
+                        s -= a[i * ts + kk] * b[j * ts + kk];
+                    }
+                    host[i * ts + j] = s;
+                }
+            }
+        }
+        let mut got = vec![0.0; ts * ts];
+        rt.download(&acc, &mut got).unwrap();
+        assert!(crate::baseline::max_abs_diff(&got, &host) < 1e-8);
+    }
+
+    #[test]
+    fn missing_kernel_errors() {
+        let rt = runtime();
+        assert!(rt.kernel_by_name("nonexistent_kernel").is_err());
+    }
+
+    #[test]
+    fn wrong_arity_rejected() {
+        let rt = runtime();
+        let ts = 32;
+        let k = rt.kernel("gemm", ts, Precision::F64).unwrap();
+        let x = rt.upload(&vec![0.0; ts * ts], ts).unwrap();
+        assert!(k.run(&[&x]).is_err());
+    }
+}

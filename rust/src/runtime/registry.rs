@@ -1,0 +1,138 @@
+//! Artifact registry: manifest.json → lazily compiled kernel cache.
+//!
+//! `make artifacts` writes one HLO-text file per (op, tile-size,
+//! precision) plus `manifest.json`; this registry maps logical names to
+//! files and memoizes PJRT compilation so each executable is built once
+//! per process no matter how many streams request it.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json;
+
+/// Manifest entry for one artifact.
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub file: PathBuf,
+    pub op: String,
+    pub ts: usize,
+    pub prec: String,
+    pub nargs: usize,
+}
+
+/// Loaded manifest + compiled-kernel memo table.
+pub struct Registry {
+    dir: PathBuf,
+    manifest: HashMap<String, ArtifactMeta>,
+    cache: Mutex<HashMap<String, Arc<super::Kernel>>>,
+}
+
+impl Registry {
+    pub fn open(dir: &Path) -> Result<Registry> {
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("reading {manifest_path:?} — run `make artifacts`"))?;
+        let root = json::parse(&text).map_err(|e| anyhow!("manifest parse: {e}"))?;
+        let obj = root.as_obj().context("manifest root must be an object")?;
+        let mut manifest = HashMap::new();
+        for (name, meta) in obj {
+            manifest.insert(
+                name.clone(),
+                ArtifactMeta {
+                    file: dir.join(meta.get("file").as_str().context("file")?),
+                    op: meta.get("op").as_str().context("op")?.to_string(),
+                    ts: meta.get("ts").as_u64().context("ts")? as usize,
+                    prec: meta.get("prec").as_str().context("prec")?.to_string(),
+                    nargs: meta.get("nargs").as_u64().context("nargs")? as usize,
+                },
+            );
+        }
+        anyhow::ensure!(!manifest.is_empty(), "manifest at {manifest_path:?} is empty");
+        Ok(Registry { dir: dir.to_path_buf(), manifest, cache: Mutex::new(HashMap::new()) })
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn meta(&self, name: &str) -> Option<&ArtifactMeta> {
+        self.manifest.get(name)
+    }
+
+    /// All artifact names (sorted), e.g. for `ooc-cholesky artifacts`.
+    pub fn names(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.manifest.keys().cloned().collect();
+        v.sort();
+        v
+    }
+
+    /// Tile sizes available for a given op.
+    pub fn tile_sizes(&self, op: &str) -> Vec<usize> {
+        let mut v: Vec<usize> =
+            self.manifest.values().filter(|m| m.op == op).map(|m| m.ts).collect();
+        v.sort();
+        v.dedup();
+        v
+    }
+
+    /// Memoized compile.
+    pub fn get_or_compile(
+        &self,
+        name: &str,
+        compile: impl FnOnce(&Path, &ArtifactMeta) -> Result<super::Kernel>,
+    ) -> Result<Arc<super::Kernel>> {
+        if let Some(k) = self.cache.lock().unwrap().get(name) {
+            return Ok(k.clone());
+        }
+        // compile outside the lock: PJRT compilation can take ~ms and other
+        // streams may want other kernels meanwhile
+        let meta = self
+            .manifest
+            .get(name)
+            .ok_or_else(|| anyhow!("no artifact named {name:?} in {:?}", self.dir))?;
+        let kernel = Arc::new(compile(&meta.file, meta)?);
+        let mut cache = self.cache.lock().unwrap();
+        // another thread may have raced us; keep the first one
+        Ok(cache.entry(name.to_string()).or_insert(kernel).clone())
+    }
+
+    pub fn compiled_count(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dir() -> PathBuf {
+        Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn manifest_loads_and_lists() {
+        let r = Registry::open(&dir()).unwrap();
+        let names = r.names();
+        assert!(names.iter().any(|n| n == "gemm_64_f64"), "{names:?}");
+        assert!(names.iter().any(|n| n == "potrf_256_f8"));
+        let meta = r.meta("gemm_64_f64").unwrap();
+        assert_eq!(meta.nargs, 3);
+        assert_eq!(meta.ts, 64);
+        assert!(meta.file.exists());
+    }
+
+    #[test]
+    fn tile_sizes_listed() {
+        let r = Registry::open(&dir()).unwrap();
+        let sizes = r.tile_sizes("gemm");
+        assert!(sizes.contains(&32) && sizes.contains(&256), "{sizes:?}");
+    }
+
+    #[test]
+    fn missing_dir_fails() {
+        assert!(Registry::open(Path::new("/nonexistent/dir")).is_err());
+    }
+}

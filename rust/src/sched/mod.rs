@@ -1,0 +1,261 @@
+//! The static task scheduler (§III-B, Algorithm 1/2).
+//!
+//! The factorization is segmented into *tile jobs* — update + factorize
+//! one tile — assigned to streams in a 1D block-cyclic fashion before
+//! execution begins. Each stream knows its whole job list up front; data
+//! dependencies are enforced at run time by busy-waits on a [`ProgressTable`]
+//! (the `Ready[i][j]` flags of Algorithm 1). This determinism is what
+//! lets the cache policies (V1–V3) reason about reuse ahead of time.
+//!
+//! Tile row → device mapping is block-cyclic (`device = m mod ndev`,
+//! Fig. 5a) so each device owns whole tile rows: the accumulator rows a
+//! device updates stay local across columns, and host memory for those
+//! rows can be allocated NUMA-local to that device (Fig. 5b).
+//!
+//! The right-looking variant (the ablation §II positions against) is
+//! expressed in the same framework with finer-grained eager tasks.
+
+mod progress;
+
+pub use progress::{ProgressTable, ReadyTimes};
+
+/// One schedulable unit.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Job {
+    /// Left-looking tile job: apply all k<`k` updates to tile (m,k), then
+    /// factorize it (SYRK*+POTRF on the diagonal, GEMM*+TRSM off it).
+    TileLL { m: usize, k: usize },
+    /// Right-looking: factorize diagonal tile k (its updates were applied
+    /// eagerly by earlier UpdateRL tasks on this stream).
+    FactorDiagRL { k: usize },
+    /// Right-looking: TRSM tile (m,k) against the factored diagonal.
+    FactorOffRL { m: usize, k: usize },
+    /// Right-looking: apply panel k's update to trailing tile (i,j):
+    /// one GEMM (or SYRK when i==j).
+    UpdateRL { i: usize, j: usize, k: usize },
+}
+
+impl Job {
+    /// Tile this job writes (the tile whose owner stream must run it).
+    pub fn target(&self) -> (usize, usize) {
+        match *self {
+            Job::TileLL { m, k } => (m, k),
+            Job::FactorDiagRL { k } => (k, k),
+            Job::FactorOffRL { m, k } => (m, k),
+            Job::UpdateRL { i, j, .. } => (i, j),
+        }
+    }
+}
+
+/// Stream identity: (device, stream-within-device).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct StreamId {
+    pub device: usize,
+    pub stream: usize,
+}
+
+/// The static schedule: one ordered job list per stream.
+#[derive(Debug)]
+pub struct Schedule {
+    pub nt: usize,
+    pub ndev: usize,
+    pub streams_per_dev: usize,
+    /// job lists indexed by global stream id = device * streams_per_dev + stream
+    pub jobs: Vec<Vec<Job>>,
+}
+
+/// Owner device of tile row m (1D block-cyclic across devices, Fig. 5a).
+pub fn device_of_row(m: usize, ndev: usize) -> usize {
+    m % ndev
+}
+
+/// Owner stream of tile row m within its device.
+pub fn stream_of_row(m: usize, ndev: usize, streams_per_dev: usize) -> usize {
+    (m / ndev) % streams_per_dev
+}
+
+impl Schedule {
+    pub fn total_streams(&self) -> usize {
+        self.ndev * self.streams_per_dev
+    }
+
+    pub fn global_stream(&self, m: usize) -> usize {
+        let d = device_of_row(m, self.ndev);
+        let s = stream_of_row(m, self.ndev, self.streams_per_dev);
+        d * self.streams_per_dev + s
+    }
+
+    pub fn stream_id(&self, gid: usize) -> StreamId {
+        StreamId { device: gid / self.streams_per_dev, stream: gid % self.streams_per_dev }
+    }
+
+    /// Left-looking schedule (Algorithm 1): jobs traverse columns left to
+    /// right; within a column, rows top to bottom. Each job lands on the
+    /// stream owning its tile row.
+    pub fn left_looking(nt: usize, ndev: usize, streams_per_dev: usize) -> Schedule {
+        let mut s = Schedule {
+            nt,
+            ndev,
+            streams_per_dev,
+            jobs: vec![Vec::new(); ndev * streams_per_dev],
+        };
+        for k in 0..nt {
+            for m in k..nt {
+                let gid = s.global_stream(m);
+                s.jobs[gid].push(Job::TileLL { m, k });
+            }
+        }
+        s
+    }
+
+    /// Right-looking schedule (the eager ablation): after each panel k is
+    /// factored, every trailing tile is updated immediately.
+    pub fn right_looking(nt: usize, ndev: usize, streams_per_dev: usize) -> Schedule {
+        let mut s = Schedule {
+            nt,
+            ndev,
+            streams_per_dev,
+            jobs: vec![Vec::new(); ndev * streams_per_dev],
+        };
+        for k in 0..nt {
+            let diag_gid = s.global_stream(k);
+            s.jobs[diag_gid].push(Job::FactorDiagRL { k });
+            for m in (k + 1)..nt {
+                let gid = s.global_stream(m);
+                s.jobs[gid].push(Job::FactorOffRL { m, k });
+            }
+            // trailing updates by panel k
+            for i in (k + 1)..nt {
+                for j in (k + 1)..=i {
+                    let gid = s.global_stream(i);
+                    s.jobs[gid].push(Job::UpdateRL { i, j, k });
+                }
+            }
+        }
+        s
+    }
+
+    /// Total job count across streams.
+    pub fn total_jobs(&self) -> usize {
+        self.jobs.iter().map(|j| j.len()).sum()
+    }
+
+    /// Check the partition property: every tile job appears exactly once,
+    /// on the stream owning its row. Used by tests & debug assertions.
+    pub fn validate_partition(&self) -> Result<(), String> {
+        let mut seen = std::collections::HashSet::new();
+        for (gid, jobs) in self.jobs.iter().enumerate() {
+            for job in jobs {
+                let (m, _) = job.target();
+                if self.global_stream(m) != gid {
+                    return Err(format!(
+                        "{job:?} on stream {gid}, owner {}",
+                        self.global_stream(m)
+                    ));
+                }
+                if let Job::TileLL { .. } = job {
+                    if !seen.insert(*job) {
+                        return Err(format!("duplicate job {job:?}"));
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Flop count for one left-looking tile job.
+pub fn job_flops(m: usize, k: usize, ts: usize) -> f64 {
+    let t = ts as f64;
+    if m == k {
+        // k SYRKs + POTRF
+        k as f64 * t * t * t + t * t * t / 3.0
+    } else {
+        // k GEMMs + TRSM
+        k as f64 * 2.0 * t * t * t + t * t * t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn left_looking_covers_all_tiles() {
+        for (nt, ndev, spd) in [(1, 1, 1), (4, 1, 2), (8, 2, 2), (13, 3, 4)] {
+            let s = Schedule::left_looking(nt, ndev, spd);
+            assert_eq!(s.total_jobs(), nt * (nt + 1) / 2, "nt={nt}");
+            s.validate_partition().unwrap();
+        }
+    }
+
+    #[test]
+    fn left_looking_order_is_column_major_per_stream() {
+        let s = Schedule::left_looking(6, 1, 2);
+        for jobs in &s.jobs {
+            for w in jobs.windows(2) {
+                let (Job::TileLL { m: m0, k: k0 }, Job::TileLL { m: m1, k: k1 }) = (w[0], w[1])
+                else {
+                    panic!()
+                };
+                assert!(k1 > k0 || (k1 == k0 && m1 > m0), "{:?} then {:?}", w[0], w[1]);
+            }
+        }
+    }
+
+    #[test]
+    fn block_cyclic_balance() {
+        let s = Schedule::left_looking(64, 4, 2);
+        let lens: Vec<usize> = s.jobs.iter().map(|j| j.len()).collect();
+        let (min, max) = (lens.iter().min().unwrap(), lens.iter().max().unwrap());
+        // row-cyclic distribution of a triangle: imbalance bounded
+        assert!((*max as f64) / (*min as f64) < 1.35, "{lens:?}");
+    }
+
+    #[test]
+    fn device_row_ownership_is_stable() {
+        // the same row always lands on the same device (data locality)
+        for m in 0..32 {
+            let d = device_of_row(m, 4);
+            assert_eq!(device_of_row(m, 4), d);
+            assert!(d < 4);
+        }
+    }
+
+    #[test]
+    fn right_looking_task_counts() {
+        let nt = 6;
+        let s = Schedule::right_looking(nt, 2, 2);
+        let mut potrf = 0;
+        let mut trsm = 0;
+        let mut upd = 0;
+        for jobs in &s.jobs {
+            for j in jobs {
+                match j {
+                    Job::FactorDiagRL { .. } => potrf += 1,
+                    Job::FactorOffRL { .. } => trsm += 1,
+                    Job::UpdateRL { .. } => upd += 1,
+                    _ => panic!("LL job in RL schedule"),
+                }
+            }
+        }
+        assert_eq!(potrf, nt);
+        assert_eq!(trsm, nt * (nt - 1) / 2);
+        let want: usize = (0..nt).map(|k| (nt - 1 - k) * (nt - k) / 2).sum();
+        assert_eq!(upd, want);
+    }
+
+    #[test]
+    fn job_flops_totals() {
+        // sum of job flops over the whole schedule ~ n^3/3
+        let (nt, ts) = (16, 64);
+        let mut total = 0.0;
+        for k in 0..nt {
+            for m in k..nt {
+                total += job_flops(m, k, ts);
+            }
+        }
+        let n = (nt * ts) as f64;
+        assert!((total - n * n * n / 3.0).abs() / (n * n * n / 3.0) < 0.05);
+    }
+}

@@ -1,0 +1,132 @@
+//! The progress table: `Ready[i][j]` flags of Algorithm 1.
+//!
+//! Real mode: one atomic per tile; waiting streams spin with yield and a
+//! short parked sleep as fallback (tasks are ~ms, so the wait cost is
+//! noise — the paper uses the same busy-wait construction on the host).
+//! The DES uses [`ReadyTimes`] instead (virtual-clock timestamps).
+
+use std::sync::atomic::{AtomicU32, Ordering};
+
+use crate::tiles::tri_idx;
+
+/// Atomic tile-ready flags for the lower triangle.
+pub struct ProgressTable {
+    nt: usize,
+    flags: Vec<AtomicU32>,
+}
+
+impl ProgressTable {
+    pub fn new(nt: usize) -> Self {
+        let flags = (0..nt * (nt + 1) / 2).map(|_| AtomicU32::new(0)).collect();
+        ProgressTable { nt, flags }
+    }
+
+    pub fn nt(&self) -> usize {
+        self.nt
+    }
+
+    /// Mark tile (i,j) final (factorized and written back).
+    pub fn set_ready(&self, i: usize, j: usize) {
+        self.flags[tri_idx(i, j)].store(1, Ordering::Release);
+    }
+
+    pub fn is_ready(&self, i: usize, j: usize) -> bool {
+        self.flags[tri_idx(i, j)].load(Ordering::Acquire) == 1
+    }
+
+    /// Busy-wait until tile (i,j) is final. Spin → yield → micro-sleep.
+    pub fn wait_ready(&self, i: usize, j: usize) {
+        let idx = tri_idx(i, j);
+        let flag = &self.flags[idx];
+        let mut spins = 0u32;
+        while flag.load(Ordering::Acquire) != 1 {
+            spins += 1;
+            if spins < 64 {
+                std::hint::spin_loop();
+            } else if spins < 256 {
+                std::thread::yield_now();
+            } else {
+                std::thread::sleep(std::time::Duration::from_micros(50));
+            }
+        }
+    }
+
+    /// Number of tiles marked ready (diagnostics / tests).
+    pub fn ready_count(&self) -> usize {
+        self.flags.iter().filter(|f| f.load(Ordering::Relaxed) == 1).count()
+    }
+}
+
+/// Virtual-clock ready times for the discrete-event simulator.
+#[derive(Debug, Clone)]
+pub struct ReadyTimes {
+    nt: usize,
+    t: Vec<f64>,
+}
+
+impl ReadyTimes {
+    pub fn new(nt: usize) -> Self {
+        ReadyTimes { nt, t: vec![f64::INFINITY; nt * (nt + 1) / 2] }
+    }
+
+    pub fn nt(&self) -> usize {
+        self.nt
+    }
+
+    pub fn set(&mut self, i: usize, j: usize, time: f64) {
+        self.t[tri_idx(i, j)] = time;
+    }
+
+    /// Virtual time at which tile (i,j) became final (∞ if not yet).
+    pub fn get(&self, i: usize, j: usize) -> f64 {
+        self.t[tri_idx(i, j)]
+    }
+
+    pub fn is_set(&self, i: usize, j: usize) -> bool {
+        self.t[tri_idx(i, j)].is_finite()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn flags_start_unready() {
+        let p = ProgressTable::new(4);
+        assert!(!p.is_ready(0, 0));
+        assert_eq!(p.ready_count(), 0);
+    }
+
+    #[test]
+    fn set_then_ready() {
+        let p = ProgressTable::new(4);
+        p.set_ready(2, 1);
+        assert!(p.is_ready(2, 1));
+        assert!(!p.is_ready(1, 1));
+        assert_eq!(p.ready_count(), 1);
+    }
+
+    #[test]
+    fn cross_thread_wait() {
+        let p = Arc::new(ProgressTable::new(4));
+        let p2 = p.clone();
+        let h = std::thread::spawn(move || {
+            p2.wait_ready(3, 0);
+            assert!(p2.is_ready(3, 0));
+        });
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        p.set_ready(3, 0);
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn ready_times_defaults() {
+        let mut r = ReadyTimes::new(3);
+        assert!(!r.is_set(0, 0));
+        r.set(0, 0, 1.5);
+        assert_eq!(r.get(0, 0), 1.5);
+        assert!(r.is_set(0, 0));
+    }
+}

@@ -1,0 +1,277 @@
+//! Host tile store: the CPU-resident lower triangle of the SPD matrix.
+//!
+//! The matrix is partitioned into Nt×Nt square tiles of edge `ts`; only
+//! the lower triangle (i ≥ j) is materialized (the paper's V1–V3 copy
+//! only the triangular part — Fig. 8 shows D2H volume ≈ half the matrix).
+//! Each tile carries a logical [`Precision`] tag; its payload is f64 but
+//! only holds values on the tagged grid.
+//!
+//! Tiles are individually locked so device streams can read/write
+//! concurrently, matching pinned host memory accessed by several copy
+//! engines at once.
+
+mod shape;
+
+pub use shape::{sampled_tile_norms, MatrixShape};
+
+use std::sync::Mutex;
+
+use crate::precision::{Precision, PrecisionMap};
+
+/// Packed lower-triangular index for tile (i, j), j ≤ i.
+#[inline]
+pub fn tri_idx(i: usize, j: usize) -> usize {
+    debug_assert!(j <= i);
+    i * (i + 1) / 2 + j
+}
+
+/// One ts×ts tile (row-major) plus its logical precision tag.
+#[derive(Debug, Clone)]
+pub struct Tile {
+    pub data: Vec<f64>,
+    pub prec: Precision,
+}
+
+impl Tile {
+    pub fn zeros(ts: usize) -> Self {
+        Tile { data: vec![0.0; ts * ts], prec: Precision::F64 }
+    }
+
+    /// Logical bytes when moved across the interconnect.
+    pub fn bytes(&self, ts: usize) -> u64 {
+        (ts * ts) as u64 * self.prec.width()
+    }
+
+    pub fn frobenius(&self) -> f64 {
+        self.data.iter().map(|x| x * x).sum::<f64>().sqrt()
+    }
+}
+
+/// The host-side tile matrix (lower triangle).
+pub struct TileMatrix {
+    pub n: usize,
+    pub ts: usize,
+    pub nt: usize,
+    tiles: Vec<Mutex<Tile>>,
+}
+
+impl TileMatrix {
+    pub fn zeros(n: usize, ts: usize) -> Self {
+        assert!(n % ts == 0, "matrix size {n} not divisible by tile size {ts}");
+        let nt = n / ts;
+        let tiles = (0..nt * (nt + 1) / 2).map(|_| Mutex::new(Tile::zeros(ts))).collect();
+        TileMatrix { n, ts, nt, tiles }
+    }
+
+    /// Build from a dense row-major n×n matrix (lower triangle only).
+    pub fn from_dense(a: &[f64], n: usize, ts: usize) -> Self {
+        let m = Self::zeros(n, ts);
+        for i in 0..m.nt {
+            for j in 0..=i {
+                let mut t = m.lock(i, j);
+                for r in 0..ts {
+                    for c in 0..ts {
+                        t.data[r * ts + c] = a[(i * ts + r) * n + (j * ts + c)];
+                    }
+                }
+            }
+        }
+        m
+    }
+
+    /// Reassemble a dense lower-triangular matrix (upper filled with 0).
+    pub fn to_dense_lower(&self) -> Vec<f64> {
+        let (n, ts) = (self.n, self.ts);
+        let mut out = vec![0.0; n * n];
+        for i in 0..self.nt {
+            for j in 0..=i {
+                let t = self.lock(i, j);
+                for r in 0..ts {
+                    for c in 0..ts {
+                        let (gr, gc) = (i * ts + r, j * ts + c);
+                        if gr >= gc {
+                            out[gr * n + gc] = t.data[r * ts + c];
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Reassemble the full symmetric dense matrix.
+    pub fn to_dense_sym(&self) -> Vec<f64> {
+        let n = self.n;
+        let mut out = self.to_dense_lower_full();
+        for r in 0..n {
+            for c in (r + 1)..n {
+                out[r * n + c] = out[c * n + r];
+            }
+        }
+        out
+    }
+
+    /// Dense lower triangle *including* the upper part of diagonal tiles.
+    fn to_dense_lower_full(&self) -> Vec<f64> {
+        let (n, ts) = (self.n, self.ts);
+        let mut out = vec![0.0; n * n];
+        for i in 0..self.nt {
+            for j in 0..=i {
+                let t = self.lock(i, j);
+                for r in 0..ts {
+                    for c in 0..ts {
+                        out[(i * ts + r) * n + (j * ts + c)] = t.data[r * ts + c];
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    #[inline]
+    pub fn lock(&self, i: usize, j: usize) -> std::sync::MutexGuard<'_, Tile> {
+        self.tiles[tri_idx(i, j)].lock().unwrap()
+    }
+
+    /// Copy a tile's payload out (the H2D read side).
+    pub fn read_tile(&self, i: usize, j: usize) -> (Vec<f64>, Precision) {
+        let t = self.lock(i, j);
+        (t.data.clone(), t.prec)
+    }
+
+    /// Overwrite a tile's payload (the D2H write side).
+    pub fn write_tile(&self, i: usize, j: usize, data: &[f64]) {
+        let mut t = self.lock(i, j);
+        t.data.copy_from_slice(data);
+    }
+
+    /// Per-tile Frobenius norms over the lower triangle (packed order).
+    pub fn tile_norms(&self) -> Vec<f64> {
+        (0..self.nt)
+            .flat_map(|i| (0..=i).map(move |j| (i, j)))
+            .map(|(i, j)| self.lock(i, j).frobenius())
+            .collect()
+    }
+
+    /// Tag tiles with `pm` and quantize payloads onto their grids.
+    pub fn apply_precision(&self, pm: &PrecisionMap) {
+        assert_eq!(pm.nt(), self.nt);
+        for i in 0..self.nt {
+            for j in 0..=i {
+                let mut t = self.lock(i, j);
+                t.prec = pm.get(i, j);
+                let p = t.prec;
+                p.quantize_slice(&mut t.data);
+            }
+        }
+    }
+
+    /// Logical bytes of the stored lower triangle.
+    pub fn total_bytes(&self) -> u64 {
+        let ts = self.ts;
+        (0..self.nt)
+            .flat_map(|i| (0..=i).map(move |j| (i, j)))
+            .map(|(i, j)| self.lock(i, j).bytes(ts))
+            .sum()
+    }
+
+    /// log(det(A)) from the Cholesky factor stored in this matrix:
+    /// 2·Σ log L_kk[d,d].
+    pub fn logdet_from_factor(&self) -> f64 {
+        let ts = self.ts;
+        let mut acc = 0.0;
+        for k in 0..self.nt {
+            let t = self.lock(k, k);
+            for d in 0..ts {
+                acc += t.data[d * ts + d].ln();
+            }
+        }
+        2.0 * acc
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tri_indexing() {
+        assert_eq!(tri_idx(0, 0), 0);
+        assert_eq!(tri_idx(1, 0), 1);
+        assert_eq!(tri_idx(1, 1), 2);
+        assert_eq!(tri_idx(2, 0), 3);
+        assert_eq!(tri_idx(3, 3), 9);
+    }
+
+    #[test]
+    fn dense_roundtrip() {
+        let n = 12;
+        let mut a = vec![0.0; n * n];
+        for r in 0..n {
+            for c in 0..n {
+                a[r * n + c] = (r * n + c) as f64;
+            }
+        }
+        let tm = TileMatrix::from_dense(&a, n, 4);
+        let lower = tm.to_dense_lower();
+        for r in 0..n {
+            for c in 0..n {
+                let want = if r >= c { a[r * n + c] } else { 0.0 };
+                assert_eq!(lower[r * n + c], want, "({r},{c})");
+            }
+        }
+    }
+
+    #[test]
+    fn sym_reassembly() {
+        let n = 8;
+        let mut a = vec![0.0; n * n];
+        for r in 0..n {
+            for c in 0..n {
+                let v = 1.0 / (1.0 + (r as f64 - c as f64).abs());
+                a[r * n + c] = v;
+            }
+        }
+        let tm = TileMatrix::from_dense(&a, n, 4);
+        let sym = tm.to_dense_sym();
+        for r in 0..n {
+            for c in 0..n {
+                assert!((sym[r * n + c] - a[r * n + c]).abs() < 1e-15);
+            }
+        }
+    }
+
+    #[test]
+    fn norms_and_bytes() {
+        let tm = TileMatrix::zeros(8, 4);
+        tm.write_tile(0, 0, &vec![2.0; 16]);
+        let norms = tm.tile_norms();
+        assert!((norms[0] - (16.0 * 4.0f64).sqrt()).abs() < 1e-12);
+        assert_eq!(tm.total_bytes(), 3 * 16 * 8); // 3 tiles, f64
+    }
+
+    #[test]
+    fn apply_precision_quantizes() {
+        use crate::precision::PrecisionMap;
+        let tm = TileMatrix::zeros(8, 4);
+        tm.write_tile(1, 0, &vec![1.05; 16]);
+        let mut pm = PrecisionMap::uniform(2, Precision::F64);
+        pm.set(1, 0, Precision::F8);
+        tm.apply_precision(&pm);
+        let (d, p) = tm.read_tile(1, 0);
+        assert_eq!(p, Precision::F8);
+        assert_eq!(d[0], 1.0); // 1.05 -> f8 grid
+        assert_eq!(tm.lock(1, 0).bytes(4), 16);
+    }
+
+    #[test]
+    fn logdet_identity() {
+        let n = 8;
+        let mut a = vec![0.0; n * n];
+        for d in 0..n {
+            a[d * n + d] = 1.0;
+        }
+        let tm = TileMatrix::from_dense(&a, n, 4);
+        assert!(tm.logdet_from_factor().abs() < 1e-15);
+    }
+}

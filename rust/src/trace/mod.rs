@@ -1,0 +1,251 @@
+//! Event tracing: the C2G / G2C / Work timelines of Figures 7 and 13.
+//!
+//! Both executors emit [`Event`]s — real mode stamps wall-clock seconds,
+//! model mode stamps virtual seconds — into a shared [`Trace`]. Export as
+//! JSON (for plotting) or render an ASCII timeline directly (the figures'
+//! three-row layout).
+
+use std::sync::Mutex;
+
+/// What happened on a stream.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EventKind {
+    /// host→device tile copy ("G2C" row in the paper's trace figures:
+    /// *to* the GPU)
+    H2D,
+    /// device→host write-back ("C2G")
+    D2H,
+    /// kernel execution ("Work")
+    Work,
+}
+
+#[derive(Debug, Clone)]
+pub struct Event {
+    pub device: u16,
+    pub stream: u16,
+    pub kind: EventKind,
+    /// op or tile label, e.g. "gemm(4,2,1)" or "tile(3,0)"
+    pub label: String,
+    /// seconds (wall or virtual) since run start
+    pub t0: f64,
+    pub t1: f64,
+}
+
+/// Append-only event sink; cheap enough for real-mode hot paths when
+/// disabled (callers check [`Trace::enabled`] first).
+#[derive(Debug)]
+pub struct Trace {
+    pub enabled: bool,
+    events: Mutex<Vec<Event>>,
+}
+
+impl Trace {
+    pub fn new(enabled: bool) -> Self {
+        Trace { enabled, events: Mutex::new(Vec::new()) }
+    }
+
+    pub fn record(&self, ev: Event) {
+        if self.enabled {
+            self.events.lock().unwrap().push(ev);
+        }
+    }
+
+    pub fn events(&self) -> Vec<Event> {
+        self.events.lock().unwrap().clone()
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.lock().unwrap().len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        Json::arr(self.events().iter().map(|e| {
+            Json::obj(vec![
+                ("device", Json::num(e.device as f64)),
+                ("stream", Json::num(e.stream as f64)),
+                (
+                    "kind",
+                    Json::str(match e.kind {
+                        EventKind::H2D => "h2d",
+                        EventKind::D2H => "d2h",
+                        EventKind::Work => "work",
+                    }),
+                ),
+                ("label", Json::str(e.label.clone())),
+                ("t0", Json::num(e.t0)),
+                ("t1", Json::num(e.t1)),
+            ])
+        }))
+    }
+
+    /// Export in Chrome tracing format (chrome://tracing, Perfetto):
+    /// one row per (device, stream) pair plus the three kind lanes.
+    pub fn to_chrome_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        Json::arr(self.events().iter().map(|e| {
+            Json::obj(vec![
+                ("name", Json::str(e.label.clone())),
+                (
+                    "cat",
+                    Json::str(match e.kind {
+                        EventKind::H2D => "h2d",
+                        EventKind::D2H => "d2h",
+                        EventKind::Work => "work",
+                    }),
+                ),
+                ("ph", Json::str("X")),
+                ("ts", Json::num(e.t0 * 1e6)),
+                ("dur", Json::num((e.t1 - e.t0) * 1e6)),
+                ("pid", Json::num(e.device as f64)),
+                ("tid", Json::num(e.stream as f64)),
+            ])
+        }))
+    }
+
+    /// Busy fraction of the Work row — the overlap quality measure the
+    /// paper's trace discussion is about (idle gaps = waiting on PCIe).
+    pub fn work_utilization(&self) -> f64 {
+        let evs = self.events();
+        let mut work: Vec<(f64, f64)> = evs
+            .iter()
+            .filter(|e| e.kind == EventKind::Work)
+            .map(|e| (e.t0, e.t1))
+            .collect();
+        if work.is_empty() {
+            return 0.0;
+        }
+        work.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        let span_end = evs.iter().map(|e| e.t1).fold(0.0, f64::max);
+        let span_start = evs.iter().map(|e| e.t0).fold(f64::INFINITY, f64::min);
+        // merge intervals
+        let mut busy = 0.0;
+        let (mut cur0, mut cur1) = work[0];
+        for &(a, b) in &work[1..] {
+            if a <= cur1 {
+                cur1 = cur1.max(b);
+            } else {
+                busy += cur1 - cur0;
+                cur0 = a;
+                cur1 = b;
+            }
+        }
+        busy += cur1 - cur0;
+        busy / (span_end - span_start).max(f64::MIN_POSITIVE)
+    }
+
+    /// Render the three-row ASCII timeline of Figure 7/13. `width` is the
+    /// number of character columns for the full time span.
+    pub fn render_ascii(&self, width: usize) -> String {
+        let evs = self.events();
+        if evs.is_empty() {
+            return "(empty trace)\n".into();
+        }
+        let t_end = evs.iter().map(|e| e.t1).fold(0.0, f64::max);
+        let t_start = evs.iter().map(|e| e.t0).fold(f64::INFINITY, f64::min);
+        let span = (t_end - t_start).max(f64::MIN_POSITIVE);
+        let col = |t: f64| (((t - t_start) / span) * (width as f64 - 1.0)) as usize;
+
+        let mut rows: Vec<(&str, EventKind)> =
+            vec![("G2C ", EventKind::H2D), ("C2G ", EventKind::D2H), ("Work", EventKind::Work)];
+        let mut out = String::new();
+        out.push_str(&format!(
+            "trace: {} events, span {:.3}s, work utilization {:.1}%\n",
+            evs.len(),
+            span,
+            100.0 * self.work_utilization()
+        ));
+        for (name, kind) in rows.drain(..) {
+            let mut line = vec![b'.'; width];
+            for e in evs.iter().filter(|e| e.kind == kind) {
+                let (c0, c1) = (col(e.t0), col(e.t1).max(col(e.t0)));
+                let ch = match kind {
+                    EventKind::H2D => b'o',
+                    EventKind::D2H => b'g',
+                    EventKind::Work => b'#',
+                };
+                for c in c0..=c1.min(width - 1) {
+                    line[c] = ch;
+                }
+            }
+            out.push_str(&format!("{name} |{}|\n", String::from_utf8(line).unwrap()));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(kind: EventKind, t0: f64, t1: f64) -> Event {
+        Event { device: 0, stream: 0, kind, label: "x".into(), t0, t1 }
+    }
+
+    #[test]
+    fn disabled_trace_records_nothing() {
+        let t = Trace::new(false);
+        t.record(ev(EventKind::Work, 0.0, 1.0));
+        assert!(t.is_empty());
+    }
+
+    #[test]
+    fn utilization_full() {
+        let t = Trace::new(true);
+        t.record(ev(EventKind::Work, 0.0, 1.0));
+        assert!((t.work_utilization() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn utilization_with_gap() {
+        let t = Trace::new(true);
+        t.record(ev(EventKind::Work, 0.0, 1.0));
+        t.record(ev(EventKind::Work, 3.0, 4.0));
+        assert!((t.work_utilization() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn utilization_overlapping_streams() {
+        let t = Trace::new(true);
+        t.record(ev(EventKind::Work, 0.0, 2.0));
+        t.record(ev(EventKind::Work, 1.0, 3.0));
+        t.record(ev(EventKind::H2D, 0.0, 4.0)); // extends span, not work
+        assert!((t.work_utilization() - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ascii_render_has_rows() {
+        let t = Trace::new(true);
+        t.record(ev(EventKind::H2D, 0.0, 0.5));
+        t.record(ev(EventKind::Work, 0.5, 2.0));
+        t.record(ev(EventKind::D2H, 2.0, 2.2));
+        let s = t.render_ascii(40);
+        assert!(s.contains("G2C"));
+        assert!(s.contains("C2G"));
+        assert!(s.contains("Work"));
+        assert!(s.contains('#'));
+    }
+
+    #[test]
+    fn chrome_export_shape() {
+        let t = Trace::new(true);
+        t.record(ev(EventKind::H2D, 0.5, 1.0));
+        let j = t.to_chrome_json();
+        let e = &j.as_arr().unwrap()[0];
+        assert_eq!(e.get("ph").as_str(), Some("X"));
+        assert_eq!(e.get("ts").as_f64(), Some(0.5e6));
+        assert_eq!(e.get("dur").as_f64(), Some(0.5e6));
+    }
+
+    #[test]
+    fn json_export() {
+        let t = Trace::new(true);
+        t.record(ev(EventKind::Work, 0.0, 1.0));
+        let j = t.to_json();
+        assert_eq!(j.as_arr().unwrap().len(), 1);
+        assert_eq!(j.as_arr().unwrap()[0].get("kind").as_str(), Some("work"));
+    }
+}

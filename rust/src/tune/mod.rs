@@ -1,0 +1,114 @@
+//! Tile-size autotuner.
+//!
+//! §V-A2: "the H100-PCIe server tends to favor using larger data tiles
+//! than the GH200-NVL-C2C … we tune the tile size for optimal performance
+//! on each GPU, implementation, and for each matrix size."
+//!
+//! The tuner sweeps candidate tile sizes through the DES and picks the
+//! fastest, reproducing that observation: slow interconnects amortize
+//! per-transfer latency with big tiles; fast C2C links prefer smaller
+//! tiles that expose more concurrency and a finer cache granularity.
+
+use anyhow::Result;
+
+use crate::config::{Mode, RunConfig};
+use crate::util::json::Json;
+
+/// Default tile-size candidates at paper scale.
+pub const CANDIDATES: [usize; 5] = [512, 1024, 2048, 4096, 8192];
+
+/// Result of one tuning sweep.
+#[derive(Debug, Clone)]
+pub struct TuneResult {
+    pub best_ts: usize,
+    /// (ts, modeled TFlop/s) per candidate
+    pub curve: Vec<(usize, f64)>,
+}
+
+impl TuneResult {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("best_ts", Json::num(self.best_ts as f64)),
+            (
+                "curve",
+                Json::arr(self.curve.iter().map(|(ts, tf)| {
+                    Json::obj(vec![("ts", Json::num(*ts as f64)), ("tflops", Json::num(*tf))])
+                })),
+            ),
+        ])
+    }
+}
+
+/// Sweep tile sizes for the given base config (model mode) and return the
+/// fastest. `cfg.ts` is ignored; `cfg.n` is rounded to each candidate.
+pub fn tune_tile_size(cfg: &RunConfig, candidates: &[usize]) -> Result<TuneResult> {
+    let mut curve = Vec::new();
+    let mut best = (0usize, f64::NEG_INFINITY);
+    for &ts in candidates {
+        if ts * 2 > cfg.n {
+            continue; // need at least a 2x2 tile grid for OOC to mean anything
+        }
+        let mut c = cfg.clone();
+        c.mode = Mode::Model;
+        c.ts = ts;
+        c.n = ((cfg.n + ts - 1) / ts) * ts;
+        let r = crate::ooc::factorize(&c, None)?;
+        curve.push((ts, r.tflops));
+        if r.tflops > best.1 {
+            best = (ts, r.tflops);
+        }
+    }
+    anyhow::ensure!(!curve.is_empty(), "no feasible tile size for n={}", cfg.n);
+    Ok(TuneResult { best_ts: best.0, curve })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{HwProfile, Version};
+
+    fn base(hw: &str) -> RunConfig {
+        RunConfig {
+            n: 96 * 1024,
+            version: Version::V3,
+            mode: Mode::Model,
+            hw: HwProfile::by_name(hw).unwrap(),
+            streams_per_dev: 8,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn pcie_prefers_larger_tiles_than_c2c() {
+        // the paper's §V-A2 observation, reproduced by the tuner
+        let h100 = tune_tile_size(&base("h100"), &CANDIDATES).unwrap();
+        let gh200 = tune_tile_size(&base("gh200"), &CANDIDATES).unwrap();
+        assert!(
+            h100.best_ts >= gh200.best_ts,
+            "h100 best {} !>= gh200 best {}",
+            h100.best_ts,
+            gh200.best_ts
+        );
+    }
+
+    #[test]
+    fn curve_is_complete_and_sane() {
+        let r = tune_tile_size(&base("a100"), &[1024, 2048, 4096]).unwrap();
+        assert_eq!(r.curve.len(), 3);
+        for (_, tf) in &r.curve {
+            assert!(*tf > 0.0 && tf.is_finite());
+        }
+        assert!(r.curve.iter().any(|(ts, _)| *ts == r.best_ts));
+        let j = r.to_json();
+        assert!(j.get("best_ts").as_f64().is_some());
+    }
+
+    #[test]
+    fn tiny_matrix_rejects_oversized_tiles() {
+        let mut cfg = base("gh200");
+        cfg.n = 1024;
+        let r = tune_tile_size(&cfg, &[512, 8192]).unwrap();
+        assert_eq!(r.curve.len(), 1);
+        assert_eq!(r.best_ts, 512);
+    }
+}

@@ -1,0 +1,90 @@
+//! Minimal benchmark harness (criterion is unavailable offline).
+//!
+//! Warms up, runs timed samples, reports mean ± std and throughput.
+//! Used by `benches/*.rs` (cargo bench targets with `harness = false`).
+
+use std::time::Instant;
+
+/// One benchmark result.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub samples: usize,
+    pub mean_s: f64,
+    pub std_s: f64,
+    pub min_s: f64,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        let (scale, unit) = if self.mean_s >= 1.0 {
+            (1.0, "s")
+        } else if self.mean_s >= 1e-3 {
+            (1e3, "ms")
+        } else if self.mean_s >= 1e-6 {
+            (1e6, "µs")
+        } else {
+            (1e9, "ns")
+        };
+        format!(
+            "{:<44} {:>10.3} {unit} ± {:>8.3} {unit}  (min {:>10.3} {unit}, {} samples)",
+            self.name,
+            self.mean_s * scale,
+            self.std_s * scale,
+            self.min_s * scale,
+            self.samples
+        )
+    }
+}
+
+/// Run `f` until ~`budget_s` seconds of samples accumulate (at least 3,
+/// at most `max_samples`), after one warmup call.
+pub fn bench<F: FnMut()>(name: &str, budget_s: f64, max_samples: usize, mut f: F) -> BenchResult {
+    f(); // warmup
+    let mut times = Vec::new();
+    let start = Instant::now();
+    while (times.len() < 3 || start.elapsed().as_secs_f64() < budget_s)
+        && times.len() < max_samples
+    {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    let (mean, std) = crate::util::mean_std(&times);
+    let min = times.iter().cloned().fold(f64::INFINITY, f64::min);
+    let r = BenchResult { name: name.to_string(), samples: times.len(), mean_s: mean, std_s: std, min_s: min };
+    println!("{}", r.report());
+    r
+}
+
+/// `bench` variant that divides time by `items` for per-item reporting.
+pub fn bench_throughput<F: FnMut()>(
+    name: &str,
+    budget_s: f64,
+    max_samples: usize,
+    items: u64,
+    f: F,
+) -> BenchResult {
+    let r = bench(name, budget_s, max_samples, f);
+    println!(
+        "    -> {:>12.0} items/s ({} items/iter)",
+        items as f64 / r.mean_s,
+        items
+    );
+    r
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_reports() {
+        let mut n = 0u64;
+        let r = bench("noop", 0.01, 100, || n += 1);
+        assert!(r.samples >= 3);
+        assert!(r.mean_s >= 0.0);
+        assert!(n as usize >= r.samples);
+        assert!(r.report().contains("noop"));
+    }
+}

@@ -1,0 +1,64 @@
+//! Scratch-built utilities (no external crates available offline):
+//! JSON, deterministic RNG, and small formatting/stats helpers.
+
+pub mod bench;
+pub mod json;
+pub mod npy;
+pub mod rng;
+
+/// Human-readable byte count (GiB/MiB/KiB).
+pub fn human_bytes(b: u64) -> String {
+    const K: f64 = 1024.0;
+    let b = b as f64;
+    if b >= K * K * K {
+        format!("{:.2} GiB", b / (K * K * K))
+    } else if b >= K * K {
+        format!("{:.2} MiB", b / (K * K))
+    } else if b >= K {
+        format!("{:.2} KiB", b / K)
+    } else {
+        format!("{b} B")
+    }
+}
+
+/// Mean and (population) standard deviation.
+pub fn mean_std(xs: &[f64]) -> (f64, f64) {
+    if xs.is_empty() {
+        return (0.0, 0.0);
+    }
+    let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+    let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / xs.len() as f64;
+    (mean, var.sqrt())
+}
+
+/// Flop count of an n×n Cholesky factorization (n³/3 leading order).
+pub fn cholesky_flops(n: u64) -> f64 {
+    let n = n as f64;
+    n * n * n / 3.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bytes_formatting() {
+        assert_eq!(human_bytes(512), "512 B");
+        assert_eq!(human_bytes(2048), "2.00 KiB");
+        assert_eq!(human_bytes(3 * 1024 * 1024), "3.00 MiB");
+        assert_eq!(human_bytes(5 * 1024 * 1024 * 1024), "5.00 GiB");
+    }
+
+    #[test]
+    fn mean_std_basics() {
+        let (m, s) = mean_std(&[2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0]);
+        assert!((m - 5.0).abs() < 1e-12);
+        assert!((s - 2.0).abs() < 1e-12);
+        assert_eq!(mean_std(&[]), (0.0, 0.0));
+    }
+
+    #[test]
+    fn flops() {
+        assert!((cholesky_flops(1000) - 1000.0f64.powi(3) / 3.0).abs() < 1.0);
+    }
+}

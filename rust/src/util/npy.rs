@@ -1,0 +1,128 @@
+//! Minimal NumPy `.npy` (format 1.0) writer/reader for f64 arrays —
+//! the cross-language interchange for factors and covariance dumps
+//! (`ooc-cholesky export`), validated against numpy by
+//! `python/tests/test_npy_interchange.py`.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8] = b"\x93NUMPY\x01\x00";
+
+/// Write a little-endian f64 C-order array.
+pub fn write_npy_f64(path: &Path, data: &[f64], shape: &[usize]) -> std::io::Result<()> {
+    let count: usize = shape.iter().product();
+    assert_eq!(count, data.len(), "shape/product mismatch");
+    let shape_str = match shape.len() {
+        1 => format!("({},)", shape[0]),
+        _ => format!("({})", shape.iter().map(|d| d.to_string()).collect::<Vec<_>>().join(", ")),
+    };
+    let mut header =
+        format!("{{'descr': '<f8', 'fortran_order': False, 'shape': {shape_str}, }}");
+    // pad so that magic+2+len(header) is a multiple of 64, ending in \n
+    let unpadded = MAGIC.len() + 2 + header.len() + 1;
+    let pad = (64 - unpadded % 64) % 64;
+    header.push_str(&" ".repeat(pad));
+    header.push('\n');
+
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    f.write_all(MAGIC)?;
+    f.write_all(&(header.len() as u16).to_le_bytes())?;
+    f.write_all(header.as_bytes())?;
+    for v in data {
+        f.write_all(&v.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+/// Read a little-endian f64 C-order array; returns (data, shape).
+pub fn read_npy_f64(path: &Path) -> std::io::Result<(Vec<f64>, Vec<usize>)> {
+    let mut f = std::io::BufReader::new(std::fs::File::open(path)?);
+    let mut magic = [0u8; 8];
+    f.read_exact(&mut magic)?;
+    if magic != MAGIC {
+        return Err(std::io::Error::new(std::io::ErrorKind::InvalidData, "not an npy v1.0 file"));
+    }
+    let mut len = [0u8; 2];
+    f.read_exact(&mut len)?;
+    let hlen = u16::from_le_bytes(len) as usize;
+    let mut header = vec![0u8; hlen];
+    f.read_exact(&mut header)?;
+    let header = String::from_utf8_lossy(&header);
+    if !header.contains("'<f8'") || header.contains("'fortran_order': True") {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            "only little-endian C-order f64 supported",
+        ));
+    }
+    // parse "(a, b, ...)" after 'shape':
+    let shape_part = header
+        .split("'shape':")
+        .nth(1)
+        .and_then(|s| s.split('(').nth(1))
+        .and_then(|s| s.split(')').next())
+        .ok_or_else(|| std::io::Error::new(std::io::ErrorKind::InvalidData, "no shape"))?;
+    let shape: Vec<usize> = shape_part
+        .split(',')
+        .filter_map(|t| {
+            let t = t.trim();
+            if t.is_empty() {
+                None
+            } else {
+                t.parse::<usize>().ok()
+            }
+        })
+        .collect();
+    let count: usize = shape.iter().product();
+    let mut bytes = vec![0u8; count * 8];
+    f.read_exact(&mut bytes)?;
+    let data =
+        bytes.chunks_exact(8).map(|c| f64::from_le_bytes(c.try_into().unwrap())).collect();
+    Ok((data, shape))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_2d() {
+        let dir = std::env::temp_dir();
+        let path = dir.join("ooc_npy_test_2d.npy");
+        let data: Vec<f64> = (0..12).map(|i| i as f64 * 1.5 - 3.0).collect();
+        write_npy_f64(&path, &data, &[3, 4]).unwrap();
+        let (got, shape) = read_npy_f64(&path).unwrap();
+        assert_eq!(shape, vec![3, 4]);
+        assert_eq!(got, data);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn roundtrip_1d() {
+        let path = std::env::temp_dir().join("ooc_npy_test_1d.npy");
+        let data = vec![1.0, -2.5, 1e300, 1e-300];
+        write_npy_f64(&path, &data, &[4]).unwrap();
+        let (got, shape) = read_npy_f64(&path).unwrap();
+        assert_eq!(shape, vec![4]);
+        assert_eq!(got, data);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn header_is_64_aligned() {
+        let path = std::env::temp_dir().join("ooc_npy_test_align.npy");
+        write_npy_f64(&path, &[0.0; 9], &[3, 3]).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        // data must start at a multiple of 64
+        let data_start = bytes.len() - 9 * 8;
+        assert_eq!(data_start % 64, 0);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let path = std::env::temp_dir().join("ooc_npy_test_bad.npy");
+        std::fs::write(&path, b"not numpy at all").unwrap();
+        assert!(read_npy_f64(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -1,0 +1,349 @@
+//! Cross-layer integration tests: Rust coordinator → PJRT kernels
+//! (JAX/Pallas AOT artifacts) → host oracles.
+
+use ooc_cholesky::baseline;
+use ooc_cholesky::config::{Mode, RunConfig, Version};
+use ooc_cholesky::precision::{Precision, ALL_PRECISIONS};
+use ooc_cholesky::runtime::Runtime;
+use ooc_cholesky::{exec, mle, ooc};
+
+fn runtime() -> Runtime {
+    Runtime::open_default().expect("run `make artifacts` first")
+}
+
+/// Pure-host mixed-precision left-looking tile Cholesky — an independent
+/// Rust re-implementation of python/compile/kernels/ref.py's MxP
+/// semantics, used to validate the PJRT path end to end.
+fn host_mxp_tile_cholesky(matrix: &ooc_cholesky::tiles::TileMatrix) -> Vec<f64> {
+    let (n, ts, nt) = (matrix.n, matrix.ts, matrix.nt);
+    // pull tiles (already quantized to their storage grids)
+    let mut tiles: Vec<Vec<f64>> = Vec::new();
+    let mut precs: Vec<Precision> = Vec::new();
+    for i in 0..nt {
+        for j in 0..=i {
+            let (d, p) = matrix.read_tile(i, j);
+            tiles.push(d);
+            precs.push(p);
+        }
+    }
+    let idx = |i: usize, j: usize| i * (i + 1) / 2 + j;
+    let q = |p: Precision, x: &mut [f64]| {
+        p.quantize_slice(x);
+    };
+    for k in 0..nt {
+        for m in k..nt {
+            if m == k {
+                for c in 0..k {
+                    // SYRK: C -= A A^T, quantized to prec(k,k)
+                    let a = tiles[idx(k, c)].clone();
+                    let t = &mut tiles[idx(k, k)];
+                    for r in 0..ts {
+                        for cc in 0..ts {
+                            let mut s = 0.0;
+                            for kk in 0..ts {
+                                s += a[r * ts + kk] * a[cc * ts + kk];
+                            }
+                            t[r * ts + cc] -= s;
+                        }
+                    }
+                    q(precs[idx(k, k)], t);
+                }
+                let t = &mut tiles[idx(k, k)];
+                let l = baseline::dense_cholesky(t, ts).expect("tile SPD");
+                t.copy_from_slice(&l);
+                q(precs[idx(k, k)], t);
+            } else {
+                for c in 0..k {
+                    let a = tiles[idx(m, c)].clone();
+                    let b = tiles[idx(k, c)].clone();
+                    let t = &mut tiles[idx(m, k)];
+                    for r in 0..ts {
+                        for cc in 0..ts {
+                            let mut s = 0.0;
+                            for kk in 0..ts {
+                                s += a[r * ts + kk] * b[cc * ts + kk];
+                            }
+                            t[r * ts + cc] -= s;
+                        }
+                    }
+                    q(precs[idx(m, k)], t);
+                }
+                // TRSM: X L^T = B
+                let l = tiles[idx(k, k)].clone();
+                let t = &mut tiles[idx(m, k)];
+                for j in 0..ts {
+                    for r in 0..ts {
+                        let mut s = t[r * ts + j];
+                        for kk in 0..j {
+                            s -= t[r * ts + kk] * l[j * ts + kk];
+                        }
+                        t[r * ts + j] = s / l[j * ts + j];
+                    }
+                }
+                q(precs[idx(m, k)], t);
+            }
+        }
+    }
+    // reassemble dense lower
+    let mut out = vec![0.0; n * n];
+    for i in 0..nt {
+        for j in 0..=i {
+            let t = &tiles[idx(i, j)];
+            for r in 0..ts {
+                for c in 0..ts {
+                    let (gr, gc) = (i * ts + r, j * ts + c);
+                    if gr >= gc {
+                        out[gr * n + gc] = t[r * ts + c];
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+#[test]
+fn mxp_pipeline_matches_host_reference() {
+    // end-to-end MxP parity: coordinator + PJRT kernels vs the pure-host
+    // re-implementation, same precision map, tight tolerance
+    let rt = runtime();
+    let cfg = RunConfig {
+        n: 256,
+        ts: 32,
+        version: Version::V3,
+        mode: Mode::Real,
+        beta: 0.05,
+        nugget: 1e-3,
+        precisions: ALL_PRECISIONS.to_vec(),
+        accuracy: 1e-6,
+        streams_per_dev: 2,
+        ..Default::default()
+    };
+    let matrix = ooc::build_matrix(&cfg);
+    ooc::assign_precisions(&cfg, &matrix);
+    let want = host_mxp_tile_cholesky(&matrix);
+    exec::real::run(&cfg, &rt, &matrix).unwrap();
+    let got = matrix.to_dense_lower();
+    // identical quantization grids; only f64 summation order differs
+    let err = baseline::max_abs_diff(&got, &want);
+    assert!(err < 1e-8, "PJRT vs host MxP factor differ by {err}");
+}
+
+#[test]
+fn factor_solves_linear_system() {
+    // the factor produced by the OOC engine actually solves A x = b
+    let rt = runtime();
+    let cfg = RunConfig {
+        n: 512,
+        ts: 64,
+        version: Version::V2,
+        streams_per_dev: 2,
+        nugget: 1e-3,
+        ..Default::default()
+    };
+    let matrix = ooc::build_matrix(&cfg);
+    let a = matrix.to_dense_sym();
+    ooc::assign_precisions(&cfg, &matrix);
+    exec::real::run(&cfg, &rt, &matrix).unwrap();
+
+    let mut rng = ooc_cholesky::util::rng::Rng::new(9);
+    let b: Vec<f64> = (0..cfg.n).map(|_| rng.normal()).collect();
+    let z = mle::forward_solve_tiles(&matrix, &b);
+    let l = matrix.to_dense_lower();
+    let x = baseline::backward_solve_t(&l, &z, cfg.n);
+    // check residual ||A x - b||
+    let mut max_err = 0.0f64;
+    for i in 0..cfg.n {
+        let mut s = 0.0;
+        for j in 0..cfg.n {
+            s += a[i * cfg.n + j] * x[j];
+        }
+        max_err = max_err.max((s - b[i]).abs());
+    }
+    assert!(max_err < 1e-7, "solve residual {max_err}");
+}
+
+#[test]
+fn model_and_real_volumes_agree_with_ample_memory() {
+    // with no cache pressure the DES and the real executor make identical
+    // caching decisions => byte-identical volume accounting
+    let rt = runtime();
+    for v in [Version::Async, Version::V1, Version::V2, Version::V3] {
+        let mk = |mode: Mode| RunConfig {
+            n: 512,
+            ts: 64,
+            version: v,
+            mode,
+            streams_per_dev: 2,
+            nugget: 1e-3,
+            ..Default::default()
+        };
+        let real = ooc::factorize(&mk(Mode::Real), Some(&rt)).unwrap();
+        let model = ooc::factorize(&mk(Mode::Model), None).unwrap();
+        assert_eq!(
+            real.metrics.d2h_bytes,
+            model.metrics.d2h_bytes,
+            "{}: d2h mismatch",
+            v.name()
+        );
+        assert_eq!(
+            real.metrics.h2d_bytes,
+            model.metrics.h2d_bytes,
+            "{}: h2d mismatch",
+            v.name()
+        );
+        assert_eq!(real.metrics.n_gemm, model.metrics.n_gemm, "{}", v.name());
+    }
+}
+
+#[test]
+fn des_is_deterministic() {
+    let cfg = RunConfig {
+        n: 32 * 1024,
+        ts: 2048,
+        version: Version::V3,
+        mode: Mode::Model,
+        streams_per_dev: 8,
+        ..Default::default()
+    };
+    let a = ooc::factorize(&cfg, None).unwrap();
+    let b = ooc::factorize(&cfg, None).unwrap();
+    assert_eq!(a.elapsed_s, b.elapsed_s);
+    assert_eq!(a.metrics.total_bytes(), b.metrics.total_bytes());
+}
+
+#[test]
+fn task_counts_match_closed_forms() {
+    let rt = runtime();
+    for nt in [1usize, 2, 3, 5, 8] {
+        let cfg = RunConfig {
+            n: nt * 64,
+            ts: 64,
+            version: Version::V3,
+            streams_per_dev: 2,
+            nugget: 1e-3,
+            ..Default::default()
+        };
+        let r = ooc::factorize(&cfg, Some(&rt)).unwrap();
+        let (p, t, s, g) = ooc_cholesky::metrics::expected_task_counts(nt as u64);
+        assert_eq!(r.metrics.n_potrf, p, "nt={nt}");
+        assert_eq!(r.metrics.n_trsm, t, "nt={nt}");
+        assert_eq!(r.metrics.n_syrk, s, "nt={nt}");
+        assert_eq!(r.metrics.n_gemm, g, "nt={nt}");
+    }
+}
+
+#[test]
+fn kl_divergence_monotone_in_accuracy_real() {
+    // Fig 10 mechanism at test scale: KL(1e-8) <= KL(1e-5) + noise
+    let rt = runtime();
+    let base = RunConfig {
+        n: 512,
+        ts: 64,
+        version: Version::V3,
+        beta: 0.078809,
+        nugget: 1e-4,
+        streams_per_dev: 2,
+        ..Default::default()
+    };
+    let m64 = ooc::build_matrix(&base);
+    ooc::assign_precisions(&base, &m64);
+    exec::real::run(&base, &rt, &m64).unwrap();
+    let logdet64 = m64.logdet_from_factor();
+
+    let mut kls = Vec::new();
+    for acc in [1e-5, 1e-8] {
+        let cfg = RunConfig {
+            precisions: ALL_PRECISIONS.to_vec(),
+            accuracy: acc,
+            ..base.clone()
+        };
+        let m = ooc::build_matrix(&cfg);
+        ooc::assign_precisions(&cfg, &m);
+        exec::real::run(&cfg, &rt, &m).unwrap();
+        kls.push(mle::kl_divergence(logdet64, m.logdet_from_factor()).abs());
+    }
+    assert!(
+        kls[1] <= kls[0].max(1e-10) * 1.5,
+        "KL(1e-8)={} should be <= KL(1e-5)={}",
+        kls[1],
+        kls[0]
+    );
+}
+
+#[test]
+fn trace_events_are_well_formed() {
+    let rt = runtime();
+    let cfg = RunConfig {
+        n: 256,
+        ts: 64,
+        version: Version::V3,
+        trace: true,
+        streams_per_dev: 2,
+        nugget: 1e-3,
+        ..Default::default()
+    };
+    let r = ooc::factorize(&cfg, Some(&rt)).unwrap();
+    let trace = r.trace.unwrap();
+    let events = trace.events();
+    assert!(!events.is_empty());
+    for e in &events {
+        assert!(e.t1 >= e.t0, "{e:?}");
+        assert!(e.t0 >= 0.0);
+        assert!((e.device as usize) < cfg.ndev);
+        assert!((e.stream as usize) < cfg.streams_per_dev);
+    }
+    // H2D + D2H event counts match the metrics transfers
+    let h2d = events.iter().filter(|e| matches!(e.kind, ooc_cholesky::trace::EventKind::H2D)).count();
+    let d2h = events.iter().filter(|e| matches!(e.kind, ooc_cholesky::trace::EventKind::D2H)).count();
+    assert_eq!(h2d as u64, r.metrics.h2d_transfers);
+    assert_eq!(d2h as u64, r.metrics.d2h_transfers);
+}
+
+#[test]
+fn right_looking_matches_left_looking_factor() {
+    let rt = runtime();
+    let mk = |v: Version| RunConfig {
+        n: 320,
+        ts: 64,
+        version: v,
+        streams_per_dev: 2,
+        nugget: 1e-3,
+        ..Default::default()
+    };
+    let run_factor = |v: Version| {
+        let cfg = mk(v);
+        let m = ooc::build_matrix(&cfg);
+        ooc::assign_precisions(&cfg, &m);
+        exec::real::run(&cfg, &rt, &m).unwrap();
+        m.to_dense_lower()
+    };
+    let ll = run_factor(Version::V3);
+    let rl = run_factor(Version::RightLooking);
+    let err = baseline::max_abs_diff(&ll, &rl);
+    assert!(err < 1e-9, "LL vs RL factor differ by {err}");
+}
+
+#[test]
+fn prefetch_preserves_correctness_and_warms_cache() {
+    let rt = runtime();
+    let mk = |prefetch: bool| RunConfig {
+        n: 512,
+        ts: 64,
+        version: Version::V3,
+        streams_per_dev: 2,
+        nugget: 1e-3,
+        verify: true,
+        prefetch,
+        ..Default::default()
+    };
+    let off = ooc::factorize(&mk(false), Some(&rt)).unwrap();
+    let on = ooc::factorize(&mk(true), Some(&rt)).unwrap();
+    assert!(on.residual.unwrap() < 1e-12);
+    assert!(off.residual.unwrap() < 1e-12);
+    // prefetch can only raise the hit rate (ample memory here)
+    let rate = |r: &ooc_cholesky::exec::RunReport| {
+        r.metrics.cache_hits as f64 / (r.metrics.cache_hits + r.metrics.cache_misses) as f64
+    };
+    assert!(rate(&on) >= rate(&off) * 0.95, "on {} off {}", rate(&on), rate(&off));
+}

@@ -1,0 +1,199 @@
+//! Randomized property tests (hand-rolled; proptest is unavailable
+//! offline). A deterministic RNG drives random configurations through
+//! the full stack and asserts the coordinator's invariants:
+//!
+//!  * every version, any (nt, ndev, streams, vmem): residual ≈ machine eps
+//!  * D2H volume == triangle bytes for the accumulator-resident versions
+//!  * schedule is a partition; no dependency violation can produce a
+//!    wrong factor (the residual check is the detector)
+//!  * cache byte accounting never exceeds capacity (checked inside
+//!    CacheTable on every mutation in debug builds + here via eviction
+//!    counters being consistent)
+
+use ooc_cholesky::config::{Mode, RunConfig, Version};
+use ooc_cholesky::precision::ALL_PRECISIONS;
+use ooc_cholesky::runtime::Runtime;
+use ooc_cholesky::util::rng::Rng;
+use ooc_cholesky::{ooc, sched};
+
+const VERSIONS: [Version; 6] = [
+    Version::Sync,
+    Version::Async,
+    Version::V1,
+    Version::V2,
+    Version::V3,
+    Version::RightLooking,
+];
+
+#[test]
+fn random_real_configs_factorize_correctly() {
+    let rt = Runtime::open_default().expect("artifacts");
+    let mut rng = Rng::new(0xC0FFEE);
+    for trial in 0..12 {
+        let version = VERSIONS[rng.below(VERSIONS.len() as u64) as usize];
+        let ts = 32;
+        let nt = 1 + rng.below(8) as usize;
+        let ndev = 1 + rng.below(3) as usize;
+        let streams = if version == Version::Sync { 1 } else { 1 + rng.below(3) as usize };
+        // vmem between "tight but feasible" and "ample"
+        let tile_bytes = (ts * ts * 8) as u64;
+        let min_tiles = (2 * streams + 4) as u64;
+        let vmem = tile_bytes * (min_tiles + rng.below(40));
+        let cfg = RunConfig {
+            n: nt * ts,
+            ts,
+            version,
+            ndev,
+            streams_per_dev: streams,
+            vmem_bytes: Some(vmem),
+            verify: true,
+            nugget: 1e-3,
+            seed: 1000 + trial,
+            beta: rng.range(0.02, 0.3),
+            ..Default::default()
+        };
+        let report = match ooc::factorize(&cfg, Some(&rt)) {
+            Ok(r) => r,
+            Err(e) => panic!("trial {trial} ({cfg:?}): {e}"),
+        };
+        let resid = report.residual.unwrap();
+        assert!(
+            resid < 1e-11,
+            "trial {trial}: {} nt={nt} ndev={ndev} streams={streams} vmem={vmem}: residual {resid}",
+            version.name()
+        );
+        // accumulator-resident versions write each tile back exactly once
+        if matches!(version, Version::V1 | Version::V2 | Version::V3) {
+            let tri = (nt * (nt + 1) / 2) as u64 * tile_bytes;
+            assert_eq!(report.metrics.d2h_bytes, tri, "trial {trial} {}", version.name());
+        }
+    }
+}
+
+#[test]
+fn random_mxp_configs_have_bounded_error() {
+    let rt = Runtime::open_default().expect("artifacts");
+    let mut rng = Rng::new(0xBEEF);
+    for trial in 0..6 {
+        let accuracy = [1e-4, 1e-5, 1e-6, 1e-7][rng.below(4) as usize];
+        let cfg = RunConfig {
+            n: 256,
+            ts: 32,
+            version: Version::V3,
+            streams_per_dev: 2,
+            precisions: ALL_PRECISIONS.to_vec(),
+            accuracy,
+            verify: true,
+            nugget: 1e-3,
+            beta: rng.range(0.02, 0.25),
+            seed: 2000 + trial,
+            ..Default::default()
+        };
+        let report = ooc::factorize(&cfg, Some(&rt)).unwrap();
+        let resid = report.residual.unwrap();
+        // Higham–Mary bound (loose form): residual ≲ c · accuracy
+        assert!(
+            resid < accuracy * 50.0,
+            "trial {trial}: accuracy {accuracy} gave residual {resid}"
+        );
+    }
+}
+
+#[test]
+fn random_schedules_partition_jobs() {
+    let mut rng = Rng::new(42);
+    for _ in 0..50 {
+        let nt = 1 + rng.below(40) as usize;
+        let ndev = 1 + rng.below(4) as usize;
+        let spd = 1 + rng.below(4) as usize;
+        let s = sched::Schedule::left_looking(nt, ndev, spd);
+        s.validate_partition().unwrap();
+        assert_eq!(s.total_jobs(), nt * (nt + 1) / 2);
+        let r = sched::Schedule::right_looking(nt, ndev, spd);
+        r.validate_partition().unwrap();
+    }
+}
+
+#[test]
+fn model_mode_never_panics_and_orders_hold() {
+    // random model configs: makespan positive & finite; more devices never
+    // slower; V3 never slower than V1
+    let mut rng = Rng::new(7);
+    for trial in 0..20 {
+        let ts = [1024usize, 2048, 4096][rng.below(3) as usize];
+        let nt = 8 + rng.below(40) as usize;
+        let n = nt * ts;
+        let base = RunConfig {
+            n,
+            ts,
+            mode: Mode::Model,
+            streams_per_dev: 1 + rng.below(8) as usize,
+            vmem_bytes: Some((8 + rng.below(72)) * 1024 * 1024 * 1024),
+            seed: trial,
+            ..Default::default()
+        };
+        let v1 = ooc::factorize(&RunConfig { version: Version::V1, ..base.clone() }, None).unwrap();
+        let v3 = ooc::factorize(&RunConfig { version: Version::V3, ..base.clone() }, None).unwrap();
+        assert!(v1.elapsed_s.is_finite() && v1.elapsed_s > 0.0);
+        assert!(
+            v3.elapsed_s <= v1.elapsed_s * 1.01,
+            "trial {trial}: v3 {} !<= v1 {}",
+            v3.elapsed_s,
+            v1.elapsed_s
+        );
+        let multi = ooc::factorize(
+            &RunConfig { version: Version::V3, ndev: 2, ..base.clone() },
+            None,
+        )
+        .unwrap();
+        assert!(
+            multi.elapsed_s <= v3.elapsed_s * 1.05,
+            "trial {trial}: 2 devices slower: {} vs {}",
+            multi.elapsed_s,
+            v3.elapsed_s
+        );
+    }
+}
+
+#[test]
+fn quantize_properties_random() {
+    // idempotence, monotonicity, saturation over a wide random range
+    let mut rng = Rng::new(99);
+    for _ in 0..20_000 {
+        let x = rng.normal() * 10f64.powf(rng.range(-12.0, 12.0));
+        for p in ALL_PRECISIONS {
+            let q = p.quantize(x);
+            assert!(q.is_finite());
+            assert_eq!(p.quantize(q), q, "idempotence p={p} x={x}");
+            assert!(q.abs() <= p.max_val());
+            // monotone: quantize preserves order vs a nearby point
+            let y = x * 1.5 + 0.1;
+            let qy = p.quantize(y);
+            if x < y {
+                assert!(q <= qy, "monotonicity p={p} x={x} y={y}");
+            }
+        }
+    }
+}
+
+#[test]
+fn precision_selection_properties() {
+    let mut rng = Rng::new(123);
+    for _ in 0..30 {
+        let nt = 2 + rng.below(20) as usize;
+        let norms: Vec<f64> =
+            (0..nt * (nt + 1) / 2).map(|_| 10f64.powf(rng.range(-9.0, 2.0))).collect();
+        let acc = 10f64.powf(rng.range(-8.0, -4.0));
+        let pm = ooc_cholesky::precision::select_precisions(
+            nt,
+            &norms,
+            acc,
+            &ALL_PRECISIONS,
+        );
+        // diagonal always f64; histogram sums to tile count
+        for i in 0..nt {
+            assert_eq!(pm.get(i, i), ooc_cholesky::precision::Precision::F64);
+        }
+        assert_eq!(pm.histogram().iter().sum::<usize>(), nt * (nt + 1) / 2);
+    }
+}
