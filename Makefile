@@ -1,0 +1,27 @@
+# Convenience entry points; the tier-1 gate is `make check`.
+
+.PHONY: artifacts build test check bench fmt clippy
+
+# AOT-lower the JAX/Pallas tile kernels to HLO text + manifest.json.
+# Needs jax; the committed artifacts under rust/artifacts/ make this
+# optional for Rust-only work.
+artifacts:
+	cd python && python3 -m compile.aot --out ../rust/artifacts
+
+build:
+	cargo build --release
+
+test:
+	cargo test -q
+
+check: build test
+
+bench:
+	cargo bench --bench microbench
+	cargo bench --bench xfer
+
+fmt:
+	cargo fmt --all --check
+
+clippy:
+	cargo clippy --workspace --all-targets -- -D warnings

@@ -1,0 +1,65 @@
+//! Transfer-engine microbenchmarks: prefetch-plan construction cost vs
+//! tile count, and engine hit rate / time-to-solution vs lookahead depth
+//! (model mode, link-bound H100-PCIe profile).
+//! Run with `cargo bench --bench xfer`.
+
+use ooc_cholesky::config::{HwProfile, Mode, RunConfig, Version};
+use ooc_cholesky::sched::Schedule;
+use ooc_cholesky::util::bench::bench;
+use ooc_cholesky::xfer::XferPlan;
+
+fn main() {
+    println!("== prefetch-plan construction vs nt (V2, depth 4) ==");
+    for nt in [64usize, 128, 256, 512] {
+        let schedule = Schedule::left_looking(nt, 4, 8);
+        let cfg = RunConfig {
+            n: nt * 128,
+            ts: 128,
+            version: Version::V2,
+            mode: Mode::Model,
+            ndev: 4,
+            streams_per_dev: 8,
+            prefetch_depth: 4,
+            ..Default::default()
+        };
+        bench(&format!("plan_build_nt{nt}"), 0.5, 50, || {
+            let plan = XferPlan::build(&schedule, &cfg);
+            assert!(!plan.is_empty());
+            std::hint::black_box(&plan);
+        });
+        let plan = XferPlan::build(&schedule, &cfg);
+        println!(
+            "    -> {} planned loads, {} dropped over budget",
+            plan.total_planned, plan.dropped_over_budget
+        );
+    }
+
+    println!("\n== engine hit rate vs depth (model mode, V2, H100-PCIe) ==");
+    println!(
+        "{:>6} {:>12} {:>10} {:>10} {:>10} {:>10}",
+        "depth", "elapsed_s", "overlap%", "hits", "late", "dropped"
+    );
+    for depth in [0usize, 1, 2, 4, 8] {
+        let cfg = RunConfig {
+            n: 64 * 1024,
+            ts: 2048,
+            version: Version::V2,
+            mode: Mode::Model,
+            hw: HwProfile::h100_pcie5(),
+            streams_per_dev: 8,
+            prefetch_depth: depth,
+            ..Default::default()
+        };
+        let r = ooc_cholesky::ooc::factorize(&cfg, None).unwrap();
+        println!(
+            "{depth:>6} {:>12.4} {:>10.1} {:>10} {:>10} {:>10}",
+            r.elapsed_s,
+            100.0 * r.metrics.prefetch_overlap(),
+            r.metrics.prefetch_hits,
+            r.metrics.prefetch_late,
+            r.metrics.prefetch_dropped,
+        );
+    }
+
+    println!("\nxfer benches completed");
+}

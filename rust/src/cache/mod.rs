@@ -165,6 +165,41 @@ impl<T> CacheTable<T> {
         }
     }
 
+    /// Residency probe that perturbs nothing: no LRU bump, no hit/miss
+    /// counters, no oracle clock. Used by the transfer engine to decide
+    /// whether a planned load is still worth performing.
+    pub fn peek(&self, key: TileKey) -> bool {
+        self.operand_caching && self.entries.contains_key(&key)
+    }
+
+    /// Would `bytes` fit without stealing anything?
+    pub fn has_room(&self, bytes: u64) -> bool {
+        self.used() + bytes <= self.capacity
+    }
+
+    /// Insert a *prefetched* tile: admit only into genuinely free space
+    /// (never steals), and mark the entry as the first steal victim until
+    /// its first demand hit bumps it. This keeps the transfer engine
+    /// scavenger-class — a prefetch can fill idle memory and idle copy
+    /// cycles, but can never displace a tile the compute path put there
+    /// or block an accumulator reservation. Returns `true` only when this
+    /// call inserted the entry (an already-resident tile returns `false`,
+    /// so the engine's issue accounting stays honest under races).
+    pub fn insert_prefetched(&mut self, key: TileKey, bytes: u64, payload: Arc<T>) -> bool {
+        if !self.operand_caching {
+            return false;
+        }
+        if self.entries.contains_key(&key) {
+            return false; // demand path (or another prefetch) beat us to it
+        }
+        if !self.has_room(bytes) {
+            return false;
+        }
+        self.entries.insert(key, Entry { payload, bytes, last_use: 0, inserted_at: 0, pins: 0 });
+        self.cached_bytes += bytes;
+        true
+    }
+
     /// Insert a tile just loaded from the host. Evicts LRU unpinned
     /// entries as needed (`remove_steal`). Returns `false` if the tile
     /// could not be admitted (budget exhausted by pins/reservations) —
@@ -192,14 +227,26 @@ impl<T> CacheTable<T> {
     /// Algorithm 3.
     fn make_room(&mut self, bytes: u64, metrics: &Metrics) -> bool {
         while self.used() + bytes > self.capacity {
-            let victim = policy::choose_victim(
-                &self.policy,
-                self.access_seq,
-                self.entries
-                    .iter()
-                    .filter(|(_, e)| e.pins == 0)
-                    .map(|(k, e)| (k, e.last_use, e.inserted_at)),
-            );
+            // untouched prefetched entries (last_use == 0, only possible
+            // via `insert_prefetched`) are scavenger-class under EVERY
+            // policy: steal them before consulting the ablation's victim
+            // selection, so a prefetch can never outlive a demand tile
+            let victim = self
+                .entries
+                .iter()
+                .filter(|(_, e)| e.pins == 0 && e.last_use == 0)
+                .map(|(k, _)| *k)
+                .min()
+                .or_else(|| {
+                    policy::choose_victim(
+                        &self.policy,
+                        self.access_seq,
+                        self.entries
+                            .iter()
+                            .filter(|(_, e)| e.pins == 0)
+                            .map(|(k, e)| (k, e.last_use, e.inserted_at)),
+                    )
+                });
             match victim {
                 Some(k) => {
                     let e = self.entries.remove(&k).unwrap();
@@ -376,6 +423,61 @@ mod tests {
         assert!(c.get((0, 0), &met).is_none());
         assert_eq!(c.cached_bytes(), 0);
         c.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn peek_does_not_touch_lru_or_metrics() {
+        let met = m();
+        let mut c: CacheTable<u32> = CacheTable::new(200, true);
+        c.insert((0, 0), 100, Arc::new(0), &met);
+        c.insert((1, 0), 100, Arc::new(1), &met);
+        let before = met.snapshot();
+        assert!(c.peek((0, 0)));
+        assert!(!c.peek((9, 9)));
+        assert_eq!(met.snapshot(), before, "peek must not count hits/misses");
+        // (0,0) is still LRU despite the peek: inserting evicts it
+        c.insert((2, 0), 100, Arc::new(2), &met);
+        assert!(!c.peek((0, 0)));
+        assert!(c.peek((1, 0)));
+    }
+
+    #[test]
+    fn prefetched_never_steals_and_is_first_victim() {
+        let met = m();
+        let mut c: CacheTable<u32> = CacheTable::new(300, true);
+        c.insert((0, 0), 100, Arc::new(0), &met);
+        c.insert((1, 0), 100, Arc::new(1), &met);
+        // only 100 bytes free: a 200-byte prefetch must be refused
+        assert!(!c.insert_prefetched((5, 0), 200, Arc::new(5)));
+        assert!(c.insert_prefetched((6, 0), 100, Arc::new(6)));
+        assert_eq!(met.snapshot().cache_evictions, 0);
+        // a demand insert now steals the prefetched entry, not (0,0)/(1,0)
+        c.insert((2, 0), 100, Arc::new(2), &met);
+        assert!(!c.peek((6, 0)), "prefetched entry is the first victim");
+        assert!(c.peek((0, 0)) && c.peek((1, 0)));
+        c.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn prefetched_hit_promotes_to_lru_order() {
+        let met = m();
+        let mut c: CacheTable<u32> = CacheTable::new(300, true);
+        c.insert((0, 0), 100, Arc::new(0), &met);
+        assert!(c.insert_prefetched((1, 0), 100, Arc::new(1)));
+        // a demand hit on the prefetched tile bumps it past (0,0)
+        assert!(c.get((1, 0), &met).is_some());
+        c.insert((2, 0), 100, Arc::new(2), &met);
+        c.insert((3, 0), 100, Arc::new(3), &met);
+        assert!(c.peek((1, 0)), "touched prefetch survives");
+        assert!(!c.peek((0, 0)), "LRU demand entry evicted first");
+        c.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn v1_mode_rejects_prefetch_insert() {
+        let mut c: CacheTable<u32> = CacheTable::new(1000, false);
+        assert!(!c.insert_prefetched((0, 0), 100, Arc::new(7)));
+        assert!(!c.peek((0, 0)));
     }
 
     #[test]

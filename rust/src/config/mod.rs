@@ -257,9 +257,12 @@ pub struct RunConfig {
     pub seed: u64,
     /// cache victim selection (ablation; paper = LRU)
     pub eviction: EvictionKind,
-    /// lookahead prefetch: while a tile job computes, pre-load the next
-    /// job's already-ready operands into the cache (V2/V3 only)
-    pub prefetch: bool,
+    /// transfer-engine lookahead depth: operands of the next
+    /// `prefetch_depth` jobs on each stream are planned onto the device's
+    /// dedicated transfer stream ahead of compute (0 = no prefetch;
+    /// effective for the operand-caching versions V2/V3 only — see
+    /// [`crate::xfer`])
+    pub prefetch_depth: usize,
     /// capture an event trace
     pub trace: bool,
     /// verify factor against the pure-Rust oracle (real mode, small n)
@@ -285,7 +288,7 @@ impl Default for RunConfig {
             nugget: 1e-4,
             seed: 42,
             eviction: EvictionKind::Lru,
-            prefetch: false,
+            prefetch_depth: 0,
             trace: false,
             verify: false,
         }
@@ -385,7 +388,12 @@ impl RunConfig {
                 self.eviction =
                     EvictionKind::parse(st()?).ok_or_else(|| format!("bad eviction {v}"))?
             }
-            "prefetch" => self.prefetch = v.as_bool().ok_or("prefetch: expected bool")?,
+            // legacy bool form kept as an alias for depth 0/1
+            "prefetch" => {
+                self.prefetch_depth =
+                    if v.as_bool().ok_or("prefetch: expected bool")? { 1 } else { 0 }
+            }
+            "prefetch_depth" => self.prefetch_depth = num()? as usize,
             "trace" => self.trace = v.as_bool().ok_or("trace: expected bool")?,
             "verify" => self.verify = v.as_bool().ok_or("verify: expected bool")?,
             other => return Err(format!("unknown config key {other:?}")),
@@ -420,6 +428,7 @@ impl RunConfig {
         m.insert("nugget".into(), Json::num(self.nugget));
         m.insert("seed".into(), Json::num(self.seed as f64));
         m.insert("eviction".into(), Json::str(self.eviction.name()));
+        m.insert("prefetch_depth".into(), Json::num(self.prefetch_depth as f64));
         Json::Obj(m)
     }
 }
@@ -462,6 +471,21 @@ mod tests {
         assert_eq!(cfg.mode, Mode::Model);
         assert_eq!(cfg.total_streams(), 32);
         cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn prefetch_depth_keys() {
+        let mut cfg = RunConfig::default();
+        let j = crate::util::json::parse(r#"{"prefetch_depth": 4}"#).unwrap();
+        cfg.apply_json(&j).unwrap();
+        assert_eq!(cfg.prefetch_depth, 4);
+        // legacy bool alias: true -> depth 1, false -> depth 0
+        let j = crate::util::json::parse(r#"{"prefetch": true}"#).unwrap();
+        cfg.apply_json(&j).unwrap();
+        assert_eq!(cfg.prefetch_depth, 1);
+        let j = crate::util::json::parse(r#"{"prefetch": false}"#).unwrap();
+        cfg.apply_json(&j).unwrap();
+        assert_eq!(cfg.prefetch_depth, 0);
     }
 
     #[test]

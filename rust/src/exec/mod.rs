@@ -50,6 +50,8 @@ impl RunReport {
             ("tflops", Json::num(self.tflops)),
             ("metrics", self.metrics.to_json()),
             ("work_utilization", Json::num(self.work_utilization)),
+            // prefetch_overlap itself lives inside "metrics"
+            ("xfer_busy_fraction", Json::num(self.xfer_busy_fraction())),
             (
                 "precision_histogram",
                 Json::arr(self.precision_histogram.iter().map(|&c| Json::num(c as f64))),
@@ -61,9 +63,20 @@ impl RunReport {
         Json::obj(fields)
     }
 
+    /// Fraction of the run the dedicated transfer stream was busy (0 when
+    /// the engine is disabled or the run took no time).
+    pub fn xfer_busy_fraction(&self) -> f64 {
+        let denom = self.elapsed_s * self.cfg.ndev as f64;
+        if denom <= 0.0 {
+            0.0
+        } else {
+            (self.metrics.xfer_busy_ns as f64 / 1e9 / denom).min(1.0)
+        }
+    }
+
     pub fn summary_line(&self) -> String {
         format!(
-            "{:>12} n={:<7} ts={:<4} dev={} str={} | {:>9.3}s {:>8.2} TFlop/s | H2D {:>10} D2H {:>10} | util {:>5.1}%{}",
+            "{:>12} n={:<7} ts={:<4} dev={} str={} | {:>9.3}s {:>8.2} TFlop/s | H2D {:>10} D2H {:>10} | util {:>5.1}% ovl {:>5.1}%{}{}",
             self.cfg.version.name(),
             self.cfg.n,
             self.cfg.ts,
@@ -74,6 +87,18 @@ impl RunReport {
             crate::util::human_bytes(self.metrics.h2d_bytes),
             crate::util::human_bytes(self.metrics.d2h_bytes),
             100.0 * self.work_utilization,
+            100.0 * self.metrics.prefetch_overlap(),
+            if self.cfg.prefetch_depth > 0 {
+                format!(
+                    " xfer {:>4.1}% (pf {}/{} late {})",
+                    100.0 * self.xfer_busy_fraction(),
+                    self.metrics.prefetch_hits,
+                    self.metrics.prefetch_issued,
+                    self.metrics.prefetch_late,
+                )
+            } else {
+                String::new()
+            },
             match self.residual {
                 Some(r) => format!(" | resid {r:.2e}"),
                 None => String::new(),

@@ -6,6 +6,14 @@
 //! pulls operands through `load_tile` (Algorithm 3) under the device's
 //! cache policy, and writes factored tiles back to the host.
 //!
+//! With `prefetch_depth > 0` (V2/V3), one dedicated transfer worker per
+//! device additionally drains the [`crate::xfer`] plan: operands of the
+//! next `depth` jobs are staged through a pinned buffer pool and loaded
+//! into the cache on a separate thread, so the copy engine runs ahead of
+//! compute instead of inline with it (Fig. 2's overlap, planned rather
+//! than reactive). Loads whose consumer has already started are
+//! cancelled; hits/lates are accounted in [`Metrics`].
+//!
 //! Version semantics (§IV-A/B):
 //!  * `sync`/`async` — no data reuse at all: every GEMM round-trips the
 //!    accumulator through the host and re-uploads both operands
@@ -30,6 +38,7 @@ use crate::runtime::{DevBuf, Kernel, Runtime};
 use crate::sched::{Job, ProgressTable, Schedule};
 use crate::tiles::TileMatrix;
 use crate::trace::{Event, EventKind, Trace};
+use crate::xfer::{XferEngine, XferPlan};
 
 /// Shared state across streams.
 struct Shared<'a> {
@@ -42,6 +51,8 @@ struct Shared<'a> {
     trsm_left: Vec<AtomicU32>,
     metrics: Metrics,
     trace: Trace,
+    /// schedule-driven transfer engine (inert when prefetch_depth == 0)
+    xfer: XferEngine,
     /// kernel-busy nanoseconds across all streams (utilization numerator)
     busy_ns: AtomicU64,
     t0: Instant,
@@ -170,6 +181,12 @@ impl<'a> Shared<'a> {
                 if pin {
                     cache.pin((i, j));
                 }
+                drop(cache);
+                // first touch of an engine-loaded tile: the transfer
+                // stream hid this fetch
+                if self.xfer.enabled() && self.xfer.take_prefetched(dev, (i, j)) {
+                    self.metrics.prefetch_hits.fetch_add(1, Ordering::Relaxed);
+                }
                 return Ok(buf);
             }
         } else {
@@ -179,6 +196,11 @@ impl<'a> Shared<'a> {
         let (buf, bytes) = self.upload_tile(i, j, dev, stream)?;
         let buf = Arc::new(buf);
         if self.uses_cache() {
+            if self.xfer.enabled() {
+                // a prefetched copy was evicted before its first touch;
+                // clear the stale provenance so later hits count as plain
+                self.xfer.take_prefetched(dev, (i, j));
+            }
             let mut cache = self.caches[dev].lock().unwrap();
             cache.insert((i, j), bytes, buf.clone(), &self.metrics);
             if pin {
@@ -249,6 +271,7 @@ pub fn run(cfg: &RunConfig, rt: &Runtime, matrix: &TileMatrix) -> Result<super::
     // compile (or fetch memoized) kernels BEFORE starting the clock:
     // one-time PJRT compilation is not part of the factorization time
     let kernels = KernelSet::load(rt, cfg.ts)?;
+    let plan = XferPlan::build(&schedule, cfg);
     let shared = Shared {
         cfg,
         rt,
@@ -266,6 +289,7 @@ pub fn run(cfg: &RunConfig, rt: &Runtime, matrix: &TileMatrix) -> Result<super::
         trsm_left: (0..nt).map(|k| AtomicU32::new((nt - k - 1) as u32)).collect(),
         metrics: Metrics::new(),
         trace: Trace::new(cfg.trace),
+        xfer: XferEngine::new(plan, cfg.ndev, cfg.ndev * cfg.streams_per_dev),
         busy_ns: AtomicU64::new(0),
         t0: Instant::now(),
         kernels,
@@ -275,12 +299,13 @@ pub fn run(cfg: &RunConfig, rt: &Runtime, matrix: &TileMatrix) -> Result<super::
     let first_err: Mutex<Option<anyhow::Error>> = Mutex::new(None);
     let panic_flag = AtomicUsize::new(0);
     std::thread::scope(|scope| {
+        let mut compute = Vec::with_capacity(schedule.total_streams());
         for gid in 0..schedule.total_streams() {
             let shared = &shared;
             let schedule = &schedule;
             let first_err = &first_err;
             let panic_flag = &panic_flag;
-            scope.spawn(move || {
+            compute.push(scope.spawn(move || {
                 let sid = schedule.stream_id(gid);
                 if let Err(e) = run_stream(shared, &schedule.jobs[gid], sid.device, sid.stream) {
                     panic_flag.store(1, Ordering::SeqCst);
@@ -296,7 +321,27 @@ pub fn run(cfg: &RunConfig, rt: &Runtime, matrix: &TileMatrix) -> Result<super::
                         }
                     }
                 }
-            });
+            }));
+        }
+        // dedicated transfer stream per device (inert plan = no threads)
+        if shared.xfer.enabled() {
+            for dev in 0..cfg.ndev {
+                let shared = &shared;
+                scope.spawn(move || run_xfer_worker(shared, dev));
+            }
+        }
+        // join compute before stopping the engine so late-arriving loads
+        // still get cancellation-accounted rather than racing a teardown
+        let mut panic_payload = None;
+        for h in compute {
+            if let Err(p) = h.join() {
+                panic_payload.get_or_insert(p);
+            }
+        }
+        shared.xfer.stop();
+        if let Some(p) = panic_payload {
+            // re-raise with the original payload (assert message etc.)
+            std::panic::resume_unwind(p);
         }
     });
     if let Some(e) = first_err.into_inner().unwrap() {
@@ -330,10 +375,14 @@ pub fn run(cfg: &RunConfig, rt: &Runtime, matrix: &TileMatrix) -> Result<super::
 
 /// One stream's main loop.
 fn run_stream(sh: &Shared, jobs: &[Job], dev: usize, stream: usize) -> Result<()> {
+    let gid = dev * sh.cfg.streams_per_dev + stream;
     let mut scratch = vec![0.0f64; sh.cfg.ts * sh.cfg.ts];
     for (idx, job) in jobs.iter().enumerate() {
-        if sh.cfg.prefetch {
-            prefetch_next(sh, jobs.get(idx + 1), dev, stream)?;
+        // hand the transfer engine this position's planned loads (the
+        // operands of the job `prefetch_depth` ahead) and bump the
+        // cancellation watermark
+        if sh.xfer.enabled() {
+            sh.xfer.on_job_start(gid, dev, idx);
         }
         match *job {
             Job::TileLL { m, k } => run_tile_ll(sh, m, k, dev, stream, &mut scratch)?,
@@ -345,30 +394,82 @@ fn run_stream(sh: &Shared, jobs: &[Job], dev: usize, stream: usize) -> Result<()
     Ok(())
 }
 
-/// Lookahead prefetch (Fig. 2's overlap, taken one job further): warm the
-/// cache with the *next* job's operands that are already final, so the
-/// copy engine works while this stream computes. Never waits — only tiles
-/// whose Ready flag is already set are touched. V2/V3 only (the cache is
-/// what makes a prefetch stick).
-fn prefetch_next(sh: &Shared, next: Option<&Job>, dev: usize, stream: usize) -> Result<()> {
-    if !sh.uses_cache() {
-        return Ok(());
-    }
-    let Some(Job::TileLL { m, k }) = next else { return Ok(()) };
-    let (m, k) = (*m, *k);
-    let mut budget = 4usize; // bound the eagerness: at most 4 tiles per job
-    for n in 0..k {
-        if budget == 0 {
-            break;
+/// One device's transfer worker: drain the planned-load queue into the
+/// device cache ahead of compute (the dedicated transfer stream of the
+/// `xfer` engine). Never waits on a dependency and never steals cache
+/// space — a load is performed only when its tile is already final, its
+/// consumer hasn't started, and free device memory can hold it; anything
+/// else is counted and skipped (`prefetch_late` / `prefetch_dropped`).
+fn run_xfer_worker(sh: &Shared, dev: usize) {
+    let ts = sh.cfg.ts;
+    // trace lane one past the device's compute streams
+    let pf_lane = sh.cfg.streams_per_dev as u16;
+    while let Some(load) = sh.xfer.queues[dev].pop_wait(&sh.xfer.shutdown) {
+        let (i, j) = load.tile;
+        if sh.xfer.is_late(&load) {
+            sh.metrics.prefetch_late.fetch_add(1, Ordering::Relaxed);
+            continue;
         }
-        for (i, j) in [(m, n), (k, n)] {
-            if (i, j) != (m, k) && sh.progress.is_ready(i, j) {
-                sh.load_tile(i, j, dev, stream, false)?;
-                budget = budget.saturating_sub(1);
+        // only final tiles may be loaded (never wait on compute)
+        if !sh.progress.is_ready(i, j) {
+            sh.metrics.prefetch_dropped.fetch_add(1, Ordering::Relaxed);
+            continue;
+        }
+        let prec = sh.matrix.lock(i, j).prec;
+        let bytes = (ts * ts) as u64 * prec.width();
+        {
+            let cache = sh.caches[dev].lock().unwrap();
+            if cache.peek((i, j)) || !cache.has_room(bytes) {
+                sh.metrics.prefetch_dropped.fetch_add(1, Ordering::Relaxed);
+                continue;
             }
         }
+        // stage through the pinned pool under the tile lock (short),
+        // upload from the staging buffer outside it
+        let t0 = sh.now();
+        let mut stage = sh.xfer.staging.acquire(ts * ts);
+        stage.copy_from_slice(&sh.matrix.lock(i, j).data);
+        let uploaded = sh.rt.upload(&stage, ts);
+        sh.xfer.staging.release(stage);
+        let buf = match uploaded {
+            Ok(b) => Arc::new(b),
+            // non-fatal: the demand path will surface real runtime failures
+            Err(_) => {
+                sh.metrics.prefetch_dropped.fetch_add(1, Ordering::Relaxed);
+                continue;
+            }
+        };
+        let t1 = sh.now();
+        // insert + provenance under one cache-lock hold: a compute
+        // stream can only hit the tile after taking this lock, so its
+        // first touch always finds the mark (no undercounted hit), and
+        // the mark exists only for tiles this engine actually inserted
+        // (no spurious hit when the demand path won the race)
+        let inserted = {
+            let mut cache = sh.caches[dev].lock().unwrap();
+            let ok = cache.insert_prefetched((i, j), bytes, buf);
+            if ok {
+                sh.xfer.mark_prefetched(dev, (i, j));
+            }
+            ok
+        };
+        if inserted {
+            sh.metrics.record_h2d(bytes, prec);
+            sh.metrics.device_allocs.fetch_add(1, Ordering::Relaxed);
+            sh.metrics.prefetch_issued.fetch_add(1, Ordering::Relaxed);
+            sh.metrics.xfer_busy_ns.fetch_add(((t1 - t0) * 1e9) as u64, Ordering::Relaxed);
+            sh.trace.record(Event {
+                device: dev as u16,
+                stream: pf_lane,
+                kind: EventKind::Prefetch,
+                label: format!("pf({i},{j})"),
+                t0,
+                t1,
+            });
+        } else {
+            sh.metrics.prefetch_dropped.fetch_add(1, Ordering::Relaxed);
+        }
     }
-    Ok(())
 }
 
 /// Left-looking tile job (Algorithm 2 body).

@@ -98,11 +98,59 @@ pub fn ablation_streams(n: usize, ts: usize) -> Result<Json> {
     Ok(Json::obj(vec![("figure", Json::str("ablation_streams")), ("rows", Json::Arr(rows))]))
 }
 
+/// Prefetch-depth sweep (the `xfer` engine's lookahead knob) for the
+/// operand-caching versions on a link-bound profile: deeper plans hide
+/// more of the operand train until the cache-residency budget caps the
+/// window.
+pub fn ablation_prefetch(n: usize, ts: usize) -> Result<Json> {
+    println!("\n=== Ablation: prefetch depth (H100-PCIe, n={n}) ===");
+    println!(
+        "{:>8} {:>8} {:>12} {:>10} {:>10} {:>10}",
+        "version", "depth", "TFlop/s", "overlap%", "pf hits", "pf late"
+    );
+    let mut rows = Vec::new();
+    for v in [Version::V2, Version::V3] {
+        for depth in [0usize, 1, 2, 4, 8] {
+            let cfg = RunConfig {
+                n,
+                ts,
+                version: v,
+                mode: Mode::Model,
+                hw: HwProfile::h100_pcie5(),
+                streams_per_dev: 8,
+                prefetch_depth: depth,
+                ..Default::default()
+            };
+            let r = crate::ooc::factorize(&cfg, None)?;
+            println!(
+                "{:>8} {depth:>8} {:>12.1} {:>10.1} {:>10} {:>10}",
+                v.name(),
+                r.tflops,
+                100.0 * r.metrics.prefetch_overlap(),
+                r.metrics.prefetch_hits,
+                r.metrics.prefetch_late,
+            );
+            rows.push(Json::obj(vec![
+                ("version", Json::str(v.name())),
+                ("depth", Json::num(depth as f64)),
+                ("tflops", Json::num(r.tflops)),
+                ("elapsed_s", Json::num(r.elapsed_s)),
+                ("overlap", Json::num(r.metrics.prefetch_overlap())),
+                ("prefetch_hits", Json::num(r.metrics.prefetch_hits as f64)),
+                ("prefetch_late", Json::num(r.metrics.prefetch_late as f64)),
+                ("xfer_busy", Json::num(r.xfer_busy_fraction())),
+            ]));
+        }
+    }
+    Ok(Json::obj(vec![("figure", Json::str("ablation_prefetch")), ("rows", Json::Arr(rows))]))
+}
+
 pub fn ablation_all(n: usize, ts: usize) -> Result<Json> {
     Ok(Json::obj(vec![
         ("eviction", ablation_eviction(n, ts)?),
         ("looking", ablation_looking(n, ts)?),
         ("streams", ablation_streams(n, ts)?),
+        ("prefetch", ablation_prefetch(n, ts)?),
     ]))
 }
 
@@ -127,6 +175,22 @@ mod tests {
         let ll = rows[0].get("tflops").as_f64().unwrap();
         let rl = rows[1].get("tflops").as_f64().unwrap();
         assert!(ll > rl, "left {ll} !> right {rl}");
+    }
+
+    #[test]
+    fn prefetch_depth_never_hurts_and_eventually_helps() {
+        let j = ablation_prefetch(32 * 1024, 2048).unwrap();
+        let rows = j.get("rows").as_arr().unwrap();
+        // rows: v2 depths [0,1,2,4,8] then v3 depths [0,1,2,4,8]
+        for base in [0usize, 5] {
+            let t0 = rows[base].get("elapsed_s").as_f64().unwrap();
+            let t4 = rows[base + 3].get("elapsed_s").as_f64().unwrap();
+            assert!(t4 <= t0 * (1.0 + 1e-9), "depth 4 slower: {t4} !<= {t0}");
+            let ovl4 = rows[base + 3].get("overlap").as_f64().unwrap();
+            assert!(ovl4 > 0.0, "depth 4 hid nothing");
+            let ovl0 = rows[base].get("overlap").as_f64().unwrap();
+            assert_eq!(ovl0, 0.0, "depth 0 must not prefetch");
+        }
     }
 
     #[test]

@@ -10,7 +10,9 @@ pub mod fig7;
 pub mod fig8;
 pub mod fig9;
 
-pub use ablation::{ablation_all, ablation_eviction, ablation_looking, ablation_streams};
+pub use ablation::{
+    ablation_all, ablation_eviction, ablation_looking, ablation_prefetch, ablation_streams,
+};
 pub use fig10::fig10_kl_divergence;
 pub use fig6::fig6_single_gpu;
 pub use fig7::fig7_traces;

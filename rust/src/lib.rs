@@ -6,8 +6,9 @@
 //!
 //! * **L3 (this crate)** — the paper's contribution: a static task
 //!   scheduler for the left-looking tile Cholesky with out-of-core tile
-//!   caching (V1/V2/V3), multi-stream overlap, mixed-precision tile
-//!   management, and multi-device distribution.
+//!   caching (V1/V2/V3), multi-stream overlap, a schedule-driven
+//!   transfer engine with deep prefetch plans ([`xfer`]), mixed-precision
+//!   tile management, and multi-device distribution.
 //! * **L2/L1 (python/, build-time only)** — JAX tile graph + Pallas
 //!   GEMM/SYRK kernels, AOT-lowered to HLO text artifacts.
 //! * **runtime** — PJRT CPU client loading those artifacts; Python never
@@ -33,3 +34,4 @@ pub mod tiles;
 pub mod trace;
 pub mod tune;
 pub mod util;
+pub mod xfer;

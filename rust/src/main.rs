@@ -7,7 +7,8 @@
 //! ooc-cholesky factorize [--n 2048] [--ts 128] [--version v3] [--mode real|model]
 //!                        [--ndev 1] [--streams 4] [--vmem-mib M] [--hw gh200]
 //!                        [--precisions f8,f16,f32,f64] [--accuracy 1e-6]
-//!                        [--beta 0.078809] [--trace] [--verify] [--config file.json]
+//!                        [--beta 0.078809] [--prefetch-depth 4] [--trace]
+//!                        [--verify] [--config file.json]
 //! ooc-cholesky figure <6|7|8|9|10|11|12|13|all> [--quick]
 //! ooc-cholesky mle     [--n 1024] [--ts 128] [--beta ...]    # end-to-end MLE demo
 //! ooc-cholesky kl      [--n 1024] [--ts 128]                 # KL accuracy sweep
@@ -76,7 +77,11 @@ FACTORIZE FLAGS:
   --accuracy A       MxP threshold epsilon_high (default 1e-8)
   --beta B           Matern spatial range (default 0.078809)
   --seed S           workload seed
-  --prefetch         lookahead operand prefetch into the tile cache
+  --prefetch-depth N transfer-engine lookahead: plan the operands of the
+                     next N jobs per stream onto a dedicated transfer
+                     stream (V2/V3; 0 = off). The factorize summary line
+                     reports the resulting overlap %.
+  --prefetch         alias for --prefetch-depth 1 (legacy)
   --trace            record + print the event timeline
   --verify           check the factor against the host oracle (n<=8192)
   --config FILE      JSON config (flags override)
@@ -130,7 +135,10 @@ fn parse_cfg(mut args: VecDeque<String>) -> Result<RunConfig> {
             "--nu" => cfg.nu = next(&mut args, "--nu")?.parse()?,
             "--nugget" => cfg.nugget = next(&mut args, "--nugget")?.parse()?,
             "--seed" => cfg.seed = next(&mut args, "--seed")?.parse()?,
-            "--prefetch" => cfg.prefetch = true,
+            "--prefetch-depth" => {
+                cfg.prefetch_depth = next(&mut args, "--prefetch-depth")?.parse()?
+            }
+            "--prefetch" => cfg.prefetch_depth = cfg.prefetch_depth.max(1),
             "--trace" => cfg.trace = true,
             "--verify" => cfg.verify = true,
             other => bail!("unknown flag {other:?}"),

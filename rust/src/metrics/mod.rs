@@ -33,6 +33,19 @@ pub struct Metrics {
     pub device_frees: AtomicU64,
     /// total useful flops
     pub flops: AtomicU64,
+    /// transfer engine: loads the engine actually performed
+    pub prefetch_issued: AtomicU64,
+    /// demand operand fetches served by an engine-prefetched tile
+    pub prefetch_hits: AtomicU64,
+    /// planned loads cancelled because compute overtook the plan: the
+    /// consumer arrived before the transfer landed and fell back to a
+    /// demand fetch (same meaning in real mode and the DES)
+    pub prefetch_late: AtomicU64,
+    /// planned loads skipped: operand not final yet, already resident,
+    /// or no free device memory to admit it
+    pub prefetch_dropped: AtomicU64,
+    /// transfer-stream busy time, ns (wall in real mode, virtual in the DES)
+    pub xfer_busy_ns: AtomicU64,
 }
 
 fn prec_slot(p: Precision) -> usize {
@@ -100,6 +113,11 @@ impl Metrics {
             device_allocs: self.device_allocs.load(Ordering::Relaxed),
             device_frees: self.device_frees.load(Ordering::Relaxed),
             flops: self.flops.load(Ordering::Relaxed),
+            prefetch_issued: self.prefetch_issued.load(Ordering::Relaxed),
+            prefetch_hits: self.prefetch_hits.load(Ordering::Relaxed),
+            prefetch_late: self.prefetch_late.load(Ordering::Relaxed),
+            prefetch_dropped: self.prefetch_dropped.load(Ordering::Relaxed),
+            xfer_busy_ns: self.xfer_busy_ns.load(Ordering::Relaxed),
         }
     }
 }
@@ -142,11 +160,29 @@ pub struct MetricsSnapshot {
     pub device_allocs: u64,
     pub device_frees: u64,
     pub flops: u64,
+    pub prefetch_issued: u64,
+    pub prefetch_hits: u64,
+    pub prefetch_late: u64,
+    pub prefetch_dropped: u64,
+    pub xfer_busy_ns: u64,
 }
 
 impl MetricsSnapshot {
     pub fn total_bytes(&self) -> u64 {
         self.h2d_bytes + self.d2h_bytes
+    }
+
+    /// Fraction of demand operand fetches the transfer stream hid: loads
+    /// the compute path found already resident because the engine moved
+    /// them, over all fetches that would otherwise have been synchronous
+    /// misses. This is the "overlap %" of the factorize summary line.
+    pub fn prefetch_overlap(&self) -> f64 {
+        let total = self.prefetch_hits + self.cache_misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.prefetch_hits as f64 / total as f64
+        }
     }
 
     pub fn to_json(&self) -> crate::util::json::Json {
@@ -170,6 +206,12 @@ impl MetricsSnapshot {
             ("n_syrk", Json::num(self.n_syrk as f64)),
             ("device_allocs", Json::num(self.device_allocs as f64)),
             ("flops", Json::num(self.flops as f64)),
+            ("prefetch_issued", Json::num(self.prefetch_issued as f64)),
+            ("prefetch_hits", Json::num(self.prefetch_hits as f64)),
+            ("prefetch_late", Json::num(self.prefetch_late as f64)),
+            ("prefetch_dropped", Json::num(self.prefetch_dropped as f64)),
+            ("prefetch_overlap", Json::num(self.prefetch_overlap())),
+            ("xfer_busy_s", Json::num(self.xfer_busy_ns as f64 / 1e9)),
         ])
     }
 }
@@ -221,5 +263,16 @@ mod tests {
         let j = s.to_json();
         assert!(j.get("total_bytes").as_f64().is_some());
         assert_eq!(j.get("h2d_by_prec").as_arr().unwrap().len(), 4);
+        assert!(j.get("prefetch_overlap").as_f64().is_some());
+    }
+
+    #[test]
+    fn prefetch_overlap_fraction() {
+        let s = MetricsSnapshot::default();
+        assert_eq!(s.prefetch_overlap(), 0.0, "no traffic -> 0, not NaN");
+        let s = MetricsSnapshot { prefetch_hits: 30, cache_misses: 70, ..Default::default() };
+        assert!((s.prefetch_overlap() - 0.3).abs() < 1e-12);
+        let s = MetricsSnapshot { prefetch_hits: 5, cache_misses: 0, ..Default::default() };
+        assert_eq!(s.prefetch_overlap(), 1.0);
     }
 }

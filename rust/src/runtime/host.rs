@@ -1,0 +1,206 @@
+//! Host backend: executes the artifact kernels' *semantics* in pure Rust.
+//!
+//! The manifest still drives dispatch — the same `manifest.json` that the
+//! PJRT backend compiles from — so the executor-facing surface is
+//! byte-identical: `op_ts_prec` names, per-output-precision kernels,
+//! f64 operands on the wire, output rounded onto the logical precision's
+//! grid via [`Precision::quantize_slice`] (the exact routine the Pallas
+//! quantize kernel was validated against, so the parity tests hold
+//! bit-for-bit).
+//!
+//! "Device memory" is modeled as immutable `Arc<Vec<f64>>` payloads: an
+//! upload copies the host tile, `Kernel::run` consumes device tiles and
+//! produces a fresh device tile (accumulators chain without touching the
+//! host — the V1 residency contract), a download copies back. Kernel math
+//! uses the same loop orders as the test oracles in
+//! `rust/tests/integration.rs` and `crate::baseline`, so real-mode
+//! residual checks agree to machine epsilon.
+
+use std::sync::Arc;
+
+use anyhow::{anyhow, Result};
+
+use super::Registry;
+use crate::precision::Precision;
+
+/// A "device"-resident tile: an immutable f64 buffer.
+pub struct DevBuf {
+    data: Arc<Vec<f64>>,
+}
+
+impl DevBuf {
+    /// Read-only view of the payload (host backend only; the PJRT
+    /// backend's buffers are opaque device handles).
+    pub fn as_slice(&self) -> &[f64] {
+        &self.data
+    }
+}
+
+/// Shared handle to the artifact registry + kernel cache.
+#[derive(Clone)]
+pub struct Runtime {
+    inner: Arc<RuntimeInner>,
+}
+
+struct RuntimeInner {
+    registry: Registry,
+}
+
+/// Which tile operation an artifact encodes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum HostOp {
+    Potrf,
+    Trsm,
+    Gemm,
+    Syrk,
+    Quantize,
+    /// whole-matrix POTRF (in-core baseline); edge = meta.ts
+    PotrfFull,
+}
+
+/// A resolved tile kernel, cached by the registry.
+pub struct Kernel {
+    pub name: String,
+    pub nargs: usize,
+    pub ts: usize,
+    op: HostOp,
+    prec: Precision,
+}
+
+impl Runtime {
+    /// Open the artifact directory (must contain `manifest.json`).
+    pub fn open(artifact_dir: &std::path::Path) -> Result<Runtime> {
+        let registry = Registry::open(artifact_dir)?;
+        Ok(Runtime { inner: Arc::new(RuntimeInner { registry }) })
+    }
+
+    /// Default artifact dir: `$OOC_ARTIFACTS` or `<crate>/artifacts`.
+    pub fn open_default() -> Result<Runtime> {
+        let dir = std::env::var("OOC_ARTIFACTS")
+            .map(std::path::PathBuf::from)
+            .unwrap_or_else(|_| std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts"));
+        Self::open(&dir)
+    }
+
+    pub fn registry(&self) -> &Registry {
+        &self.inner.registry
+    }
+
+    /// Resolve (or fetch from cache) the kernel `op_ts_prec`, e.g.
+    /// ("gemm", 256, F16) -> `gemm_256_f16`.
+    pub fn kernel(&self, op: &str, ts: usize, prec: Precision) -> Result<Arc<Kernel>> {
+        let name = format!("{op}_{ts}_{}", prec.name());
+        self.kernel_by_name(&name)
+    }
+
+    /// Resolve (or fetch) by full artifact name.
+    pub fn kernel_by_name(&self, name: &str) -> Result<Arc<Kernel>> {
+        self.inner.registry.get_or_compile(name, |path, meta| {
+            // the artifact file must exist and look like HLO text — the
+            // host backend doesn't interpret it, but a missing/garbled
+            // artifact should fail here, exactly as PJRT compilation would
+            let head = std::fs::read_to_string(path)
+                .map_err(|e| anyhow!("reading artifact {path:?}: {e}"))?;
+            anyhow::ensure!(
+                head.starts_with("HloModule"),
+                "{name}: artifact {path:?} is not HLO text"
+            );
+            let op = match meta.op.as_str() {
+                "potrf" => HostOp::Potrf,
+                "trsm" => HostOp::Trsm,
+                "gemm" => HostOp::Gemm,
+                "syrk" => HostOp::Syrk,
+                "quantize" => HostOp::Quantize,
+                "potrf_full" => HostOp::PotrfFull,
+                other => return Err(anyhow!("{name}: unknown op {other:?}")),
+            };
+            let prec = Precision::parse(&meta.prec)
+                .ok_or_else(|| anyhow!("{name}: bad precision {:?}", meta.prec))?;
+            Ok(Kernel { name: name.to_string(), nargs: meta.nargs, ts: meta.ts, op, prec })
+        })
+    }
+
+    /// H2D: upload a ts×ts f64 tile to the "device".
+    pub fn upload(&self, data: &[f64], ts: usize) -> Result<DevBuf> {
+        anyhow::ensure!(data.len() == ts * ts, "upload: {} != {ts}x{ts}", data.len());
+        Ok(DevBuf { data: Arc::new(data.to_vec()) })
+    }
+
+    /// D2H: copy a device tile back into a host slice.
+    pub fn download(&self, buf: &DevBuf, out: &mut [f64]) -> Result<()> {
+        anyhow::ensure!(
+            buf.data.len() == out.len(),
+            "d2h size mismatch: {} vs {}",
+            buf.data.len(),
+            out.len()
+        );
+        out.copy_from_slice(&buf.data);
+        Ok(())
+    }
+}
+
+impl Kernel {
+    /// Run the kernel on device-resident inputs; returns the output tile
+    /// (still "on device"). Output is quantized onto the kernel's logical
+    /// precision grid, mirroring the Pallas kernels.
+    pub fn run(&self, args: &[&DevBuf]) -> Result<DevBuf> {
+        anyhow::ensure!(
+            args.len() == self.nargs,
+            "{}: expected {} args, got {}",
+            self.name,
+            self.nargs,
+            args.len()
+        );
+        let n = self.ts;
+        for (i, a) in args.iter().enumerate() {
+            anyhow::ensure!(
+                a.data.len() == n * n,
+                "{}: arg {i} has {} elems, want {n}x{n}",
+                self.name,
+                a.data.len()
+            );
+        }
+        let mut out = match self.op {
+            HostOp::Potrf | HostOp::PotrfFull => crate::baseline::dense_cholesky(&args[0].data, n)
+                .ok_or_else(|| anyhow!("{}: tile not positive definite", self.name))?,
+            HostOp::Trsm => trsm(&args[0].data, &args[1].data, n),
+            HostOp::Gemm => gemm(&args[0].data, &args[1].data, &args[2].data, n),
+            HostOp::Syrk => gemm(&args[0].data, &args[1].data, &args[1].data, n),
+            HostOp::Quantize => args[0].data.as_ref().clone(),
+        };
+        self.prec.quantize_slice(&mut out);
+        Ok(DevBuf { data: Arc::new(out) })
+    }
+}
+
+/// C - A B^T for row-major n×n tiles (SYRK is the B = A case).
+fn gemm(c: &[f64], a: &[f64], b: &[f64], n: usize) -> Vec<f64> {
+    let mut out = vec![0.0; n * n];
+    for i in 0..n {
+        let ar = &a[i * n..(i + 1) * n];
+        for j in 0..n {
+            let br = &b[j * n..(j + 1) * n];
+            let mut s = 0.0;
+            for k in 0..n {
+                s += ar[k] * br[k];
+            }
+            out[i * n + j] = c[i * n + j] - s;
+        }
+    }
+    out
+}
+
+/// Solve X L^T = B (L lower triangular): forward substitution per row.
+fn trsm(l: &[f64], b: &[f64], n: usize) -> Vec<f64> {
+    let mut x = b.to_vec();
+    for i in 0..n {
+        for j in 0..n {
+            let mut s = x[i * n + j];
+            for k in 0..j {
+                s -= x[i * n + k] * l[j * n + k];
+            }
+            x[i * n + j] = s / l[j * n + j];
+        }
+    }
+    x
+}

@@ -1,158 +1,38 @@
-//! PJRT runtime: loads the AOT-compiled HLO artifacts and executes tile
-//! kernels on device buffers.
+//! Kernel runtime: loads the AOT artifact manifest and executes tile
+//! kernels on "device" buffers.
 //!
-//! This is the only place the `xla` crate is touched. The flow per kernel
-//! (see /opt/xla-example/load_hlo for the reference wiring):
+//! Two interchangeable backends expose the same API (`Runtime`, `Kernel`,
+//! `DevBuf`):
 //!
-//!   HLO text  --HloModuleProto::from_text_file-->  XlaComputation
-//!             --PjRtClient::compile-->             PjRtLoadedExecutable
+//! * [`host`] (default) — a pure-Rust executor that dispatches each
+//!   artifact's *semantics* (POTRF/TRSM/GEMM/SYRK/quantize, all operands
+//!   f64 on the wire, output rounded to the kernel's logical precision)
+//!   on the host. It validates against the same oracles as the PJRT path
+//!   and keeps the whole test suite runnable offline, with no native XLA
+//!   library.
+//! * [`pjrt`] (feature `pjrt`) — the original PJRT CPU client executing
+//!   the HLO text artifacts emitted by `python/compile/aot.py`. Enabling
+//!   it requires adding the `xla` crate (xla_extension 0.5.1) to
+//!   `Cargo.toml`; see DESIGN.md §2.
 //!
-//! and per call: host slice --buffer_from_host_buffer--> [`DevBuf`]
-//! --execute_b--> output [`DevBuf`] --copy_raw_to_host_sync--> host.
-//!
-//! Because artifacts are lowered with `return_tuple=False`, a kernel's
-//! output buffer feeds the next kernel's input directly: the accumulator
-//! tile of the left-looking update loop never leaves the device — which
-//! is precisely the paper's V1 data-residency optimization, expressed in
-//! PJRT instead of CUDA.
+//! Either way the executor-facing contract is identical: `upload` is an
+//! H2D copy producing an immutable device tile, `Kernel::run` consumes
+//! device tiles and produces a device tile (so accumulators chain
+//! on-device — the paper's V1 residency), `download` is the D2H copy.
 
 mod registry;
 
 pub use registry::{ArtifactMeta, Registry};
 
-use std::sync::Arc;
+#[cfg(feature = "pjrt")]
+mod pjrt;
+#[cfg(feature = "pjrt")]
+pub use pjrt::{DevBuf, Kernel, Runtime};
 
-use anyhow::{anyhow, Context, Result};
-
-use crate::precision::Precision;
-
-/// A device-resident tile (PJRT buffer handle).
-///
-/// SAFETY: `PjRtBuffer` wraps a raw pointer into the PJRT CPU client,
-/// which is documented thread-safe (TfrtCpuClient; the PJRT C API
-/// requires thread-safe clients). The `xla` crate simply never declared
-/// the auto-traits. We pin buffers behind `Arc` and never mutate through
-/// shared references.
-pub struct DevBuf(pub xla::PjRtBuffer);
-unsafe impl Send for DevBuf {}
-unsafe impl Sync for DevBuf {}
-
-/// Shared handle to the PJRT client + compiled-executable cache.
-#[derive(Clone)]
-pub struct Runtime {
-    inner: Arc<RuntimeInner>,
-}
-
-struct RuntimeInner {
-    client: ClientBox,
-    registry: Registry,
-}
-
-struct ClientBox(xla::PjRtClient);
-// SAFETY: see DevBuf — the PJRT CPU client is thread-safe.
-unsafe impl Send for ClientBox {}
-unsafe impl Sync for ClientBox {}
-
-/// A compiled tile kernel, cached by the registry.
-pub struct Kernel {
-    exe: xla::PjRtLoadedExecutable,
-    pub name: String,
-    pub nargs: usize,
-    pub ts: usize,
-}
-// SAFETY: see DevBuf.
-unsafe impl Send for Kernel {}
-unsafe impl Sync for Kernel {}
-
-impl Runtime {
-    /// Open the artifact directory (must contain `manifest.json`) and
-    /// connect to the PJRT CPU client.
-    pub fn open(artifact_dir: &std::path::Path) -> Result<Runtime> {
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
-        let registry = Registry::open(artifact_dir)?;
-        Ok(Runtime { inner: Arc::new(RuntimeInner { client: ClientBox(client), registry }) })
-    }
-
-    /// Default artifact dir: `$OOC_ARTIFACTS` or `<crate>/artifacts`.
-    pub fn open_default() -> Result<Runtime> {
-        let dir = std::env::var("OOC_ARTIFACTS")
-            .map(std::path::PathBuf::from)
-            .unwrap_or_else(|_| std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts"));
-        Self::open(&dir)
-    }
-
-    pub fn registry(&self) -> &Registry {
-        &self.inner.registry
-    }
-
-    /// Compile (or fetch from cache) the kernel `op_ts_prec`, e.g.
-    /// ("gemm", 256, F16) -> `gemm_256_f16`.
-    pub fn kernel(&self, op: &str, ts: usize, prec: Precision) -> Result<Arc<Kernel>> {
-        let name = format!("{op}_{ts}_{}", prec.name());
-        self.kernel_by_name(&name)
-    }
-
-    /// Compile (or fetch) by full artifact name.
-    pub fn kernel_by_name(&self, name: &str) -> Result<Arc<Kernel>> {
-        self.inner.registry.get_or_compile(name, |path, meta| {
-            let proto = xla::HloModuleProto::from_text_file(path)
-                .map_err(|e| anyhow!("parse {name}: {e:?}"))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = self
-                .inner
-                .client
-                .0
-                .compile(&comp)
-                .map_err(|e| anyhow!("compile {name}: {e:?}"))?;
-            Ok(Kernel { exe, name: name.to_string(), nargs: meta.nargs, ts: meta.ts })
-        })
-    }
-
-    /// H2D: upload a ts×ts f64 tile to the device.
-    pub fn upload(&self, data: &[f64], ts: usize) -> Result<DevBuf> {
-        let buf = self
-            .inner
-            .client
-            .0
-            .buffer_from_host_buffer::<f64>(data, &[ts, ts], None)
-            .map_err(|e| anyhow!("h2d upload: {e:?}"))?;
-        Ok(DevBuf(buf))
-    }
-
-    /// D2H: copy a device tile back into a host slice.
-    ///
-    /// Goes through a `Literal` — xla_extension 0.5.1's CPU client does
-    /// not implement `CopyRawToHost`, so `to_literal_sync` is the D2H path.
-    pub fn download(&self, buf: &DevBuf, out: &mut [f64]) -> Result<()> {
-        let lit = buf.0.to_literal_sync().map_err(|e| anyhow!("d2h to_literal: {e:?}"))?;
-        let v = lit.to_vec::<f64>().map_err(|e| anyhow!("d2h to_vec: {e:?}"))?;
-        anyhow::ensure!(v.len() == out.len(), "d2h size mismatch: {} vs {}", v.len(), out.len());
-        out.copy_from_slice(&v);
-        Ok(())
-    }
-}
-
-impl Kernel {
-    /// Run the kernel on device-resident inputs; returns the output tile
-    /// buffer (still on device).
-    pub fn run(&self, args: &[&DevBuf]) -> Result<DevBuf> {
-        anyhow::ensure!(
-            args.len() == self.nargs,
-            "{}: expected {} args, got {}",
-            self.name,
-            self.nargs,
-            args.len()
-        );
-        let bufs: Vec<&xla::PjRtBuffer> = args.iter().map(|b| &b.0).collect();
-        let mut out = self
-            .exe
-            .execute_b(&bufs)
-            .map_err(|e| anyhow!("execute {}: {e:?}", self.name))?;
-        let replica = out.pop().context("no replica output")?;
-        let buf = replica.into_iter().next().context("no output buffer")?;
-        Ok(DevBuf(buf))
-    }
-}
+#[cfg(not(feature = "pjrt"))]
+mod host;
+#[cfg(not(feature = "pjrt"))]
+pub use host::{DevBuf, Kernel, Runtime};
 
 #[cfg(test)]
 mod tests {
@@ -246,7 +126,7 @@ mod tests {
 
     #[test]
     fn quantize_kernel_matches_rust_emulation() {
-        // cross-layer parity: the JAX/Pallas quantizer and the Rust
+        // cross-layer parity: the kernel-side quantizer and the Rust
         // precision emulation must agree bit-for-bit
         let rt = runtime();
         let ts = 32;

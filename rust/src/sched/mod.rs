@@ -45,6 +45,37 @@ impl Job {
             Job::UpdateRL { i, j, .. } => (i, j),
         }
     }
+
+    /// Read-only operand tiles of this job, in the order the executors
+    /// consume them. This is the unit [`crate::xfer::plan`] schedules
+    /// transfers over: every listed tile is a candidate prefetch for the
+    /// device owning the job's target row.
+    pub fn operands(&self) -> Vec<(usize, usize)> {
+        match *self {
+            Job::TileLL { m, k } => {
+                let mut v = Vec::with_capacity(2 * k + 1);
+                for n in 0..k {
+                    v.push((m, n));
+                    if m != k {
+                        v.push((k, n));
+                    }
+                }
+                if m != k {
+                    v.push((k, k));
+                }
+                v
+            }
+            Job::FactorDiagRL { .. } => Vec::new(),
+            Job::FactorOffRL { k, .. } => vec![(k, k)],
+            Job::UpdateRL { i, j, k } => {
+                if i == j {
+                    vec![(i, k)]
+                } else {
+                    vec![(i, k), (j, k)]
+                }
+            }
+        }
+    }
 }
 
 /// Stream identity: (device, stream-within-device).
@@ -243,6 +274,22 @@ mod tests {
         assert_eq!(trsm, nt * (nt - 1) / 2);
         let want: usize = (0..nt).map(|k| (nt - 1 - k) * (nt - k) / 2).sum();
         assert_eq!(upd, want);
+    }
+
+    #[test]
+    fn operands_match_executor_reads() {
+        // TileLL{m,k}: k row-m tiles, plus (k,n) panel tiles and the
+        // diagonal for off-diagonal jobs — exactly what run_tile_ll loads
+        assert_eq!(Job::TileLL { m: 2, k: 2 }.operands(), vec![(2, 0), (2, 1)]);
+        assert_eq!(
+            Job::TileLL { m: 3, k: 2 }.operands(),
+            vec![(3, 0), (2, 0), (3, 1), (2, 1), (2, 2)]
+        );
+        assert!(Job::TileLL { m: 0, k: 0 }.operands().is_empty());
+        assert!(Job::FactorDiagRL { k: 1 }.operands().is_empty());
+        assert_eq!(Job::FactorOffRL { m: 3, k: 1 }.operands(), vec![(1, 1)]);
+        assert_eq!(Job::UpdateRL { i: 4, j: 2, k: 1 }.operands(), vec![(4, 1), (2, 1)]);
+        assert_eq!(Job::UpdateRL { i: 4, j: 4, k: 1 }.operands(), vec![(4, 1)]);
     }
 
     #[test]

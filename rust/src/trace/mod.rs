@@ -17,6 +17,9 @@ pub enum EventKind {
     D2H,
     /// kernel execution ("Work")
     Work,
+    /// transfer-engine load on the dedicated per-device transfer stream
+    /// (planned ahead of the consuming job; the "Pref" row)
+    Prefetch,
 }
 
 #[derive(Debug, Clone)]
@@ -73,6 +76,7 @@ impl Trace {
                         EventKind::H2D => "h2d",
                         EventKind::D2H => "d2h",
                         EventKind::Work => "work",
+                        EventKind::Prefetch => "prefetch",
                     }),
                 ),
                 ("label", Json::str(e.label.clone())),
@@ -95,6 +99,7 @@ impl Trace {
                         EventKind::H2D => "h2d",
                         EventKind::D2H => "d2h",
                         EventKind::Work => "work",
+                        EventKind::Prefetch => "prefetch",
                     }),
                 ),
                 ("ph", Json::str("X")),
@@ -106,15 +111,24 @@ impl Trace {
         }))
     }
 
+    /// Busy fraction of the transfer-engine ("Pref") row over the trace
+    /// span: how much of the run the dedicated transfer stream spent
+    /// moving planned tiles.
+    pub fn prefetch_utilization(&self) -> f64 {
+        self.kind_utilization(EventKind::Prefetch)
+    }
+
     /// Busy fraction of the Work row — the overlap quality measure the
     /// paper's trace discussion is about (idle gaps = waiting on PCIe).
     pub fn work_utilization(&self) -> f64 {
+        self.kind_utilization(EventKind::Work)
+    }
+
+    /// Merged-interval busy fraction of one event kind over the full span.
+    fn kind_utilization(&self, kind: EventKind) -> f64 {
         let evs = self.events();
-        let mut work: Vec<(f64, f64)> = evs
-            .iter()
-            .filter(|e| e.kind == EventKind::Work)
-            .map(|e| (e.t0, e.t1))
-            .collect();
+        let mut work: Vec<(f64, f64)> =
+            evs.iter().filter(|e| e.kind == kind).map(|e| (e.t0, e.t1)).collect();
         if work.is_empty() {
             return 0.0;
         }
@@ -137,8 +151,9 @@ impl Trace {
         busy / (span_end - span_start).max(f64::MIN_POSITIVE)
     }
 
-    /// Render the three-row ASCII timeline of Figure 7/13. `width` is the
-    /// number of character columns for the full time span.
+    /// Render the G2C / C2G / Pref / Work ASCII timeline of Figure 7/13
+    /// (plus the transfer-stream lane). `width` is the number of
+    /// character columns for the full time span.
     pub fn render_ascii(&self, width: usize) -> String {
         let evs = self.events();
         if evs.is_empty() {
@@ -149,8 +164,12 @@ impl Trace {
         let span = (t_end - t_start).max(f64::MIN_POSITIVE);
         let col = |t: f64| (((t - t_start) / span) * (width as f64 - 1.0)) as usize;
 
-        let mut rows: Vec<(&str, EventKind)> =
-            vec![("G2C ", EventKind::H2D), ("C2G ", EventKind::D2H), ("Work", EventKind::Work)];
+        let mut rows: Vec<(&str, EventKind)> = vec![
+            ("G2C ", EventKind::H2D),
+            ("C2G ", EventKind::D2H),
+            ("Pref", EventKind::Prefetch),
+            ("Work", EventKind::Work),
+        ];
         let mut out = String::new();
         out.push_str(&format!(
             "trace: {} events, span {:.3}s, work utilization {:.1}%\n",
@@ -166,6 +185,7 @@ impl Trace {
                     EventKind::H2D => b'o',
                     EventKind::D2H => b'g',
                     EventKind::Work => b'#',
+                    EventKind::Prefetch => b'p',
                 };
                 for c in c0..=c1.min(width - 1) {
                     line[c] = ch;
@@ -227,6 +247,19 @@ mod tests {
         assert!(s.contains("C2G"));
         assert!(s.contains("Work"));
         assert!(s.contains('#'));
+    }
+
+    #[test]
+    fn prefetch_lane_renders_and_measures() {
+        let t = Trace::new(true);
+        t.record(ev(EventKind::Work, 0.0, 4.0));
+        t.record(ev(EventKind::Prefetch, 0.0, 1.0));
+        t.record(ev(EventKind::Prefetch, 2.0, 3.0));
+        assert!((t.prefetch_utilization() - 0.5).abs() < 1e-12);
+        assert!((t.work_utilization() - 1.0).abs() < 1e-12);
+        let s = t.render_ascii(40);
+        assert!(s.contains("Pref"));
+        assert!(s.contains('p'));
     }
 
     #[test]

@@ -1,0 +1,314 @@
+//! Transfer-engine state: per-device priority queues of planned loads,
+//! the pinned staging-buffer pool, compute-position tracking for
+//! cancellation, and prefetch provenance (for hit accounting).
+//!
+//! The engine is deliberately policy-free: it owns the *coordination*
+//! structures, while the actual copies are driven by the executors — the
+//! real executor spawns one worker thread per device that drains
+//! [`DevQueue`]s into the device cache (see `exec::real`), and the DES
+//! replays the same plan against a per-device virtual transfer stream
+//! (see `exec::model`). Keeping the state here lets both executors share
+//! identical cancellation and accounting semantics.
+
+use std::collections::{BinaryHeap, HashSet};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Condvar, Mutex};
+
+use crate::cache::TileKey;
+
+use super::plan::XferPlan;
+
+/// One queued transfer, ordered so the earliest consumer pops first.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct QueuedLoad {
+    pub tile: TileKey,
+    /// global stream id of the consuming stream
+    pub gid: usize,
+    /// position of the consuming job in that stream's job list
+    pub consumer_pos: usize,
+    /// FIFO tie-break within a priority class
+    pub seq: u64,
+}
+
+impl Ord for QueuedLoad {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        // reversed: BinaryHeap is a max-heap, we want the smallest
+        // (consumer_pos, seq) — the most urgent planned load — on top
+        other
+            .consumer_pos
+            .cmp(&self.consumer_pos)
+            .then_with(|| other.seq.cmp(&self.seq))
+            .then_with(|| (other.gid, other.tile).cmp(&(self.gid, self.tile)))
+    }
+}
+
+impl PartialOrd for QueuedLoad {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// A device's transfer queue: priority heap + wakeup for the worker.
+pub struct DevQueue {
+    heap: Mutex<BinaryHeap<QueuedLoad>>,
+    cv: Condvar,
+}
+
+impl DevQueue {
+    fn new() -> DevQueue {
+        DevQueue { heap: Mutex::new(BinaryHeap::new()), cv: Condvar::new() }
+    }
+
+    pub fn push(&self, load: QueuedLoad) {
+        self.heap.lock().unwrap().push(load);
+        self.cv.notify_one();
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Blocking pop: returns the most urgent load, or `None` once
+    /// `shutdown` is raised (remaining entries are abandoned — compute
+    /// has finished, nothing will consume them). Wakeups cannot be
+    /// missed: `push` mutates the heap under the lock, and `wake_all`
+    /// takes the lock before notifying, so both state changes are
+    /// ordered against the check-then-wait below.
+    pub fn pop_wait(&self, shutdown: &AtomicBool) -> Option<QueuedLoad> {
+        let mut heap = self.heap.lock().unwrap();
+        loop {
+            if shutdown.load(Ordering::Acquire) {
+                return None;
+            }
+            if let Some(load) = heap.pop() {
+                return Some(load);
+            }
+            heap = self.cv.wait(heap).unwrap();
+        }
+    }
+
+    /// Non-blocking pop (used by tests and the DES-style draining).
+    pub fn try_pop(&self) -> Option<QueuedLoad> {
+        self.heap.lock().unwrap().pop()
+    }
+
+    fn wake_all(&self) {
+        // the lock orders the caller's shutdown-flag store before any
+        // waiter's re-check: a worker between its check and its wait
+        // still holds the lock, so this notification cannot be lost
+        let _guard = self.heap.lock().unwrap();
+        self.cv.notify_all();
+    }
+}
+
+/// Reusable pool of pinned staging buffers for H2D copies. Host tiles
+/// are copied into a staging buffer under the tile lock (short), then
+/// uploaded from the staging buffer outside it — the pool bounds both
+/// the allocation churn and the pinned-memory footprint.
+pub struct StagingPool {
+    bufs: Mutex<Vec<Vec<f64>>>,
+    max_pooled: usize,
+    pub created: AtomicU64,
+    pub reused: AtomicU64,
+}
+
+impl StagingPool {
+    pub fn new(max_pooled: usize) -> StagingPool {
+        StagingPool {
+            bufs: Mutex::new(Vec::new()),
+            max_pooled,
+            created: AtomicU64::new(0),
+            reused: AtomicU64::new(0),
+        }
+    }
+
+    pub fn acquire(&self, len: usize) -> Vec<f64> {
+        if let Some(mut b) = self.bufs.lock().unwrap().pop() {
+            b.resize(len, 0.0);
+            self.reused.fetch_add(1, Ordering::Relaxed);
+            return b;
+        }
+        self.created.fetch_add(1, Ordering::Relaxed);
+        vec![0.0; len]
+    }
+
+    pub fn release(&self, buf: Vec<f64>) {
+        let mut bufs = self.bufs.lock().unwrap();
+        if bufs.len() < self.max_pooled {
+            bufs.push(buf);
+        }
+    }
+}
+
+/// Shared engine state for one run: the plan plus everything the workers
+/// and compute streams coordinate through.
+pub struct XferEngine {
+    pub plan: XferPlan,
+    /// one transfer queue per device
+    pub queues: Vec<DevQueue>,
+    /// per global stream id: job position the stream is currently on
+    positions: Vec<AtomicUsize>,
+    /// per device: engine-inserted tiles not yet first-touched by compute
+    prefetched: Vec<Mutex<HashSet<TileKey>>>,
+    pub staging: StagingPool,
+    pub shutdown: AtomicBool,
+    seq: AtomicU64,
+}
+
+impl XferEngine {
+    pub fn new(plan: XferPlan, ndev: usize, nstreams: usize) -> XferEngine {
+        XferEngine {
+            plan,
+            queues: (0..ndev).map(|_| DevQueue::new()).collect(),
+            positions: (0..nstreams).map(|_| AtomicUsize::new(0)).collect(),
+            prefetched: (0..ndev).map(|_| Mutex::new(HashSet::new())).collect(),
+            staging: StagingPool::new(32),
+            shutdown: AtomicBool::new(false),
+            seq: AtomicU64::new(0),
+        }
+    }
+
+    /// Is there any planned work at all? (Cheap guard for the hot path.)
+    pub fn enabled(&self) -> bool {
+        !self.plan.is_empty()
+    }
+
+    /// Compute stream `gid` (on device `dev`) is starting job `pos`:
+    /// record the position watermark and enqueue this trigger's loads.
+    pub fn on_job_start(&self, gid: usize, dev: usize, pos: usize) {
+        self.positions[gid].store(pos, Ordering::Release);
+        for l in self.plan.loads_at(gid, pos) {
+            self.queues[dev].push(QueuedLoad {
+                tile: l.tile,
+                gid,
+                consumer_pos: l.consumer_pos,
+                seq: self.seq.fetch_add(1, Ordering::Relaxed),
+            });
+        }
+    }
+
+    /// Cancellation: compute already moved past the consumer, so the
+    /// load can no longer arrive ahead of demand.
+    pub fn is_late(&self, load: &QueuedLoad) -> bool {
+        self.positions[load.gid].load(Ordering::Acquire) > load.consumer_pos
+    }
+
+    /// Record that the engine inserted `tile` into `dev`'s cache.
+    pub fn mark_prefetched(&self, dev: usize, tile: TileKey) {
+        self.prefetched[dev].lock().unwrap().insert(tile);
+    }
+
+    /// First-touch check by the demand path: true exactly once per
+    /// engine-inserted tile (also used to clear stale provenance when a
+    /// prefetched tile was evicted and demand re-loads it).
+    pub fn take_prefetched(&self, dev: usize, tile: TileKey) -> bool {
+        self.prefetched[dev].lock().unwrap().remove(&tile)
+    }
+
+    /// Stop the workers: raise the flag and wake every queue.
+    pub fn stop(&self) {
+        self.shutdown.store(true, Ordering::Release);
+        for q in &self.queues {
+            q.wake_all();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Mode, RunConfig, Version};
+    use crate::sched::Schedule;
+
+    fn engine(depth: usize) -> (Schedule, XferEngine) {
+        let s = Schedule::left_looking(8, 1, 2);
+        let cfg = RunConfig {
+            n: 8 * 128,
+            ts: 128,
+            version: Version::V2,
+            mode: Mode::Model,
+            streams_per_dev: 2,
+            prefetch_depth: depth,
+            ..Default::default()
+        };
+        let plan = XferPlan::build(&s, &cfg);
+        let e = XferEngine::new(plan, 1, s.total_streams());
+        (s, e)
+    }
+
+    #[test]
+    fn queue_pops_most_urgent_first() {
+        let q = DevQueue::new();
+        q.push(QueuedLoad { tile: (3, 0), gid: 0, consumer_pos: 9, seq: 0 });
+        q.push(QueuedLoad { tile: (1, 0), gid: 0, consumer_pos: 2, seq: 1 });
+        q.push(QueuedLoad { tile: (2, 0), gid: 0, consumer_pos: 2, seq: 2 });
+        assert_eq!(q.try_pop().unwrap().tile, (1, 0), "lowest pos, then FIFO");
+        assert_eq!(q.try_pop().unwrap().tile, (2, 0));
+        assert_eq!(q.try_pop().unwrap().tile, (3, 0));
+        assert!(q.try_pop().is_none());
+    }
+
+    #[test]
+    fn pop_wait_returns_none_on_shutdown() {
+        let q = DevQueue::new();
+        let stop = AtomicBool::new(true);
+        assert!(q.pop_wait(&stop).is_none());
+    }
+
+    #[test]
+    fn job_start_enqueues_the_window() {
+        let (_s, e) = engine(2);
+        assert!(e.enabled());
+        e.on_job_start(0, 0, 0);
+        // trigger 0 carries the warmup window (jobs 1..=2)
+        let n0 = e.queues[0].len();
+        assert!(n0 > 0, "warmup window empty");
+        // all queued loads target future jobs and are not late
+        while let Some(l) = e.queues[0].try_pop() {
+            assert!(l.consumer_pos >= 1);
+            assert!(!e.is_late(&l));
+        }
+    }
+
+    #[test]
+    fn cancellation_when_compute_overtakes() {
+        let (_s, e) = engine(1);
+        e.on_job_start(0, 0, 0);
+        let l = e.queues[0].try_pop().expect("one load planned");
+        // compute races ahead of the consumer -> load is late
+        e.on_job_start(0, 0, l.consumer_pos + 1);
+        assert!(e.is_late(&l));
+    }
+
+    #[test]
+    fn provenance_is_take_once() {
+        let (_s, e) = engine(1);
+        e.mark_prefetched(0, (4, 2));
+        assert!(e.take_prefetched(0, (4, 2)));
+        assert!(!e.take_prefetched(0, (4, 2)), "second take must miss");
+    }
+
+    #[test]
+    fn staging_pool_reuses_buffers() {
+        let pool = StagingPool::new(4);
+        let a = pool.acquire(64);
+        pool.release(a);
+        let b = pool.acquire(128);
+        assert_eq!(b.len(), 128);
+        pool.release(b);
+        assert_eq!(pool.created.load(Ordering::Relaxed), 1);
+        assert_eq!(pool.reused.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn disabled_engine_is_inert() {
+        let (_s, e) = engine(0);
+        assert!(!e.enabled());
+        e.on_job_start(0, 0, 0);
+        assert!(e.queues[0].is_empty());
+    }
+}

@@ -1,0 +1,38 @@
+//! `xfer` — the schedule-driven transfer engine.
+//!
+//! The paper's core claim (§III-B, Fig. 2) is that *static* task
+//! scheduling turns data movement from something a runtime reacts to
+//! into something that can be **planned**: the full operand sequence of
+//! every stream is known before execution starts, so host↔device traffic
+//! can be issued ahead of the compute that needs it and overlapped with
+//! kernels even when the matrix exceeds device memory.
+//!
+//! This module exploits that determinism in three parts:
+//!
+//! * [`plan`] — derives per-device **prefetch plans** from a
+//!   [`crate::sched::Schedule`] + cache policy: for each job position,
+//!   the operand tiles needed within a lookahead window of
+//!   `prefetch_depth` jobs, filtered by what the cache policy can
+//!   realistically keep resident (tiles V2/V3's steal pass would
+//!   immediately reclaim are dropped at plan time).
+//! * [`engine`] — the coordination state for one dedicated transfer
+//!   worker per device: priority queues of planned loads (earliest
+//!   consumer first), a pinned staging-buffer pool, compute-position
+//!   watermarks for **cancellation** when compute overtakes the plan,
+//!   and provenance sets for prefetch-hit accounting.
+//! * overlap accounting — `prefetch_issued` / `prefetch_hits` /
+//!   `prefetch_late` / `prefetch_dropped` and the transfer-stream busy
+//!   fraction land in [`crate::metrics::Metrics`], the `Pref` lane in
+//!   [`crate::trace::Trace`], and the overlap % in
+//!   `RunReport::summary_line`.
+//!
+//! Both executors drive it: `exec::real` spawns one transfer thread per
+//! device draining the queues into the device `CacheTable`, and
+//! `exec::model` simulates the same plan on a per-device virtual
+//! transfer stream so the Fig. 6/7 model curves reflect overlap depth.
+
+pub mod engine;
+pub mod plan;
+
+pub use engine::{DevQueue, QueuedLoad, StagingPool, XferEngine};
+pub use plan::{PlannedLoad, XferPlan};

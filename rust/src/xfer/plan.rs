@@ -1,0 +1,248 @@
+//! Prefetch planning: from the static schedule + cache policy, derive
+//! per-stream *prefetch plans* before execution begins.
+//!
+//! Because the schedule is static (§III-B), the full operand sequence of
+//! every stream is known ahead of time. For a lookahead window of
+//! `depth` jobs, the plan assigns each job's operand tiles to a *trigger
+//! position*: when the stream starts job `p`, the engine is handed the
+//! operands of job `p + depth` (and, at `p = 0`, the whole initial
+//! window). Each operand therefore enters the transfer queue exactly
+//! `depth` jobs before its consumer — deep enough to hide multi-tile
+//! GEMM operand trains, early enough that the cache-residency prediction
+//! below still holds.
+//!
+//! The plan is filtered by what the cache policy can keep: only the
+//! operand-caching versions (V2/V3 and the right-looking ablation) get a
+//! plan at all, and within a window the planned working set is capped by
+//! the device memory left after accumulator reservations — tiles the
+//! steal pass would immediately reclaim are never planned (the
+//! "don't prefetch what V2/V3 would steal" rule). Dropped loads are
+//! counted in [`XferPlan::dropped_over_budget`].
+
+use std::collections::VecDeque;
+
+use crate::cache::TileKey;
+use crate::config::{RunConfig, Version};
+use crate::sched::Schedule;
+
+/// One planned transfer: load `tile` onto the consuming stream's device
+/// before that stream reaches job position `consumer_pos`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PlannedLoad {
+    pub tile: TileKey,
+    /// position (index into the stream's job list) of the consuming job
+    pub consumer_pos: usize,
+}
+
+/// Per-stream plan: `triggers[p]` holds the loads to enqueue when the
+/// stream starts job `p`.
+#[derive(Debug, Default)]
+struct StreamPlan {
+    triggers: Vec<Vec<PlannedLoad>>,
+}
+
+/// The full prefetch plan for one run.
+#[derive(Debug)]
+pub struct XferPlan {
+    /// lookahead window in jobs (0 = prefetch disabled)
+    pub depth: usize,
+    streams: Vec<StreamPlan>,
+    /// total loads planned across all streams
+    pub total_planned: usize,
+    /// loads dropped because the window working set outgrew the memory
+    /// the cache policy could realistically retain
+    pub dropped_over_budget: usize,
+}
+
+impl XferPlan {
+    /// A no-op plan (prefetch disabled or version without operand cache).
+    pub fn disabled() -> XferPlan {
+        XferPlan { depth: 0, streams: Vec::new(), total_planned: 0, dropped_over_budget: 0 }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.total_planned == 0
+    }
+
+    /// Loads to hand the transfer engine when stream `gid` starts job
+    /// position `pos` (empty for unplanned streams/positions).
+    pub fn loads_at(&self, gid: usize, pos: usize) -> &[PlannedLoad] {
+        self.streams
+            .get(gid)
+            .and_then(|s| s.triggers.get(pos))
+            .map(|v| v.as_slice())
+            .unwrap_or(&[])
+    }
+
+    /// Build the plan for a schedule under a run config. Returns a
+    /// disabled plan when `cfg.prefetch_depth == 0` or the version keeps
+    /// no operand cache (there is nowhere for a prefetch to stick).
+    pub fn build(schedule: &Schedule, cfg: &RunConfig) -> XferPlan {
+        let depth = cfg.prefetch_depth;
+        let caches_operands =
+            matches!(cfg.version, Version::V2 | Version::V3 | Version::RightLooking);
+        if depth == 0 || !caches_operands {
+            return XferPlan::disabled();
+        }
+
+        // Residency budget: device memory minus one accumulator
+        // reservation per stream, split evenly across the device's
+        // streams. A window whose operand train exceeds this would see
+        // its head stolen before the consumer arrives, so the tail is
+        // dropped at plan time instead of churning the cache at run time.
+        // Tiles are charged at full f64 width: per-tile precisions are
+        // assigned later (by the precision manager, outside the plan's
+        // inputs), so the estimate is conservative — an MxP run may drop
+        // loads that would in fact have fit, never the reverse.
+        let tile_bytes = (cfg.ts * cfg.ts * 8) as u64;
+        let resv = tile_bytes * cfg.streams_per_dev as u64;
+        let usable = cfg.device_vmem().saturating_sub(resv);
+        let budget_tiles =
+            ((usable / tile_bytes.max(1)) as usize / cfg.streams_per_dev.max(1)).max(1);
+
+        let mut plan = XferPlan {
+            depth,
+            streams: Vec::with_capacity(schedule.total_streams()),
+            total_planned: 0,
+            dropped_over_budget: 0,
+        };
+
+        for jobs in &schedule.jobs {
+            let mut sp = StreamPlan { triggers: vec![Vec::new(); jobs.len()] };
+            // sliding-window accounting: (job position, tiles planned)
+            let mut window: VecDeque<(usize, usize)> = VecDeque::new();
+            let mut in_window = 0usize;
+            for (pos, job) in jobs.iter().enumerate().skip(1) {
+                while let Some(&(p, n)) = window.front() {
+                    if p + depth < pos {
+                        window.pop_front();
+                        in_window -= n;
+                    } else {
+                        break;
+                    }
+                }
+                let trigger = pos.saturating_sub(depth);
+                let ops = job.operands();
+                let mut planned = 0usize;
+                for tile in ops {
+                    // never plan the job's own target (the accumulator is
+                    // uploaded by the compute stream, outside the cache)
+                    if tile == job.target() {
+                        continue;
+                    }
+                    if in_window + planned >= budget_tiles {
+                        plan.dropped_over_budget += 1;
+                        continue;
+                    }
+                    sp.triggers[trigger].push(PlannedLoad { tile, consumer_pos: pos });
+                    planned += 1;
+                }
+                window.push_back((pos, planned));
+                in_window += planned;
+                plan.total_planned += planned;
+            }
+            plan.streams.push(sp);
+        }
+        plan
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Mode;
+
+    fn cfg(version: Version, n: usize, ts: usize, depth: usize) -> RunConfig {
+        RunConfig {
+            n,
+            ts,
+            version,
+            mode: Mode::Model,
+            streams_per_dev: 2,
+            prefetch_depth: depth,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn depth_zero_or_v1_is_disabled() {
+        let s = Schedule::left_looking(8, 1, 2);
+        assert!(XferPlan::build(&s, &cfg(Version::V2, 1024, 128, 0)).is_empty());
+        assert!(XferPlan::build(&s, &cfg(Version::V1, 1024, 128, 4)).is_empty());
+        assert!(XferPlan::build(&s, &cfg(Version::Sync, 1024, 128, 4)).is_empty());
+        assert!(!XferPlan::build(&s, &cfg(Version::V2, 1024, 128, 4)).is_empty());
+    }
+
+    #[test]
+    fn loads_arrive_depth_jobs_ahead() {
+        let nt = 8;
+        let s = Schedule::left_looking(nt, 1, 1);
+        let depth = 3;
+        let plan = XferPlan::build(&s, &cfg(Version::V2, nt * 128, 128, depth));
+        for pos in 0..s.jobs[0].len() {
+            for l in plan.loads_at(0, pos) {
+                assert!(l.consumer_pos > pos, "load for {} triggered at {pos}", l.consumer_pos);
+                assert!(
+                    l.consumer_pos - pos <= depth || pos == 0,
+                    "load for {} too early at {pos}",
+                    l.consumer_pos
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn plan_covers_all_operands_when_memory_ample() {
+        let nt = 6;
+        let s = Schedule::left_looking(nt, 1, 1);
+        let plan = XferPlan::build(&s, &cfg(Version::V2, nt * 128, 128, 2));
+        // expected: every operand of every job except each stream's job 0
+        let want: usize = s.jobs[0].iter().skip(1).map(|j| j.operands().len()).sum();
+        assert_eq!(plan.total_planned, want);
+        assert_eq!(plan.dropped_over_budget, 0);
+    }
+
+    #[test]
+    fn tight_memory_caps_the_window() {
+        let nt = 16;
+        let s = Schedule::left_looking(nt, 1, 2);
+        let mut c = cfg(Version::V2, nt * 128, 128, 8);
+        // room for ~6 tiles total: 2 reserved accumulators + 2 per stream
+        c.vmem_bytes = Some((128 * 128 * 8) as u64 * 6);
+        let plan = XferPlan::build(&s, &c);
+        assert!(plan.dropped_over_budget > 0, "expected budget drops");
+        // no trigger window may exceed the per-stream budget (2 tiles)
+        for gid in 0..s.total_streams() {
+            for pos in 0..s.jobs[gid].len() {
+                assert!(plan.loads_at(gid, pos).len() <= 2, "window too fat at {gid}/{pos}");
+            }
+        }
+    }
+
+    #[test]
+    fn planned_tiles_are_real_operands_of_the_consumer() {
+        let nt = 10;
+        let s = Schedule::left_looking(nt, 2, 2);
+        let plan = XferPlan::build(&s, &cfg(Version::V3, nt * 128, 128, 4));
+        for (gid, jobs) in s.jobs.iter().enumerate() {
+            for pos in 0..jobs.len() {
+                for l in plan.loads_at(gid, pos) {
+                    let consumer = jobs[l.consumer_pos];
+                    assert!(
+                        consumer.operands().contains(&l.tile),
+                        "{:?} not an operand of {consumer:?}",
+                        l.tile
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn right_looking_jobs_plan_their_panel_reads() {
+        let nt = 6;
+        let s = Schedule::right_looking(nt, 1, 2);
+        let plan = XferPlan::build(&s, &cfg(Version::RightLooking, nt * 128, 128, 2));
+        assert!(!plan.is_empty());
+    }
+}

@@ -197,3 +197,78 @@ fn precision_selection_properties() {
         assert_eq!(pm.histogram().iter().sum::<usize>(), nt * (nt + 1) / 2);
     }
 }
+
+#[test]
+fn block_cyclic_ownership_round_trips() {
+    // device_of_row / stream_of_row invert the gid composition for every
+    // (row, topology): gid = dev * spd + stream, and the row always maps
+    // back to the same (dev, stream) pair the schedule placed it on
+    let mut rng = Rng::new(0x0123_4567);
+    for _ in 0..200 {
+        let ndev = 1 + rng.below(6) as usize;
+        let spd = 1 + rng.below(6) as usize;
+        let nt = 1 + rng.below(64) as usize;
+        let s = sched::Schedule::left_looking(nt, ndev, spd);
+        for m in 0..nt {
+            let dev = sched::device_of_row(m, ndev);
+            let stream = sched::stream_of_row(m, ndev, spd);
+            assert!(dev < ndev && stream < spd);
+            let gid = s.global_stream(m);
+            assert_eq!(gid, dev * spd + stream, "gid composition");
+            let sid = s.stream_id(gid);
+            assert_eq!((sid.device, sid.stream), (dev, stream), "round trip");
+            // rows congruent mod (ndev * spd) share a stream; others on
+            // the same device share only the device
+            assert_eq!(sched::device_of_row(m + ndev * spd, ndev), dev);
+            assert_eq!(sched::stream_of_row(m + ndev * spd, ndev, spd), stream);
+        }
+    }
+}
+
+#[test]
+fn planned_prefetches_land_on_the_owning_device() {
+    // property: every xfer::plan load is queued for the device that owns
+    // the consuming job's target row — plans never cross devices
+    use ooc_cholesky::xfer::XferPlan;
+    let mut rng = Rng::new(0xF17C);
+    for trial in 0..40 {
+        let ndev = 1 + rng.below(4) as usize;
+        let spd = 1 + rng.below(4) as usize;
+        let nt = 2 + rng.below(24) as usize;
+        let depth = 1 + rng.below(8) as usize;
+        let version = if rng.below(2) == 0 { Version::V2 } else { Version::V3 };
+        let cfg = RunConfig {
+            n: nt * 128,
+            ts: 128,
+            version,
+            mode: Mode::Model,
+            ndev,
+            streams_per_dev: spd,
+            prefetch_depth: depth,
+            seed: trial,
+            ..Default::default()
+        };
+        let s = sched::Schedule::left_looking(nt, ndev, spd);
+        let plan = XferPlan::build(&s, &cfg);
+        for gid in 0..s.total_streams() {
+            let sid = s.stream_id(gid);
+            for pos in 0..s.jobs[gid].len() {
+                for l in plan.loads_at(gid, pos) {
+                    let consumer = s.jobs[gid][l.consumer_pos];
+                    let (row, _) = consumer.target();
+                    assert_eq!(
+                        sched::device_of_row(row, ndev),
+                        sid.device,
+                        "trial {trial}: load {:?} for {consumer:?} on wrong device",
+                        l.tile
+                    );
+                    assert!(
+                        consumer.operands().contains(&l.tile),
+                        "trial {trial}: {:?} not an operand of {consumer:?}",
+                        l.tile
+                    );
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,215 @@
+//! Vendored, dependency-free subset of the `anyhow` API.
+//!
+//! The build environment for this repository has no crates.io access, so
+//! the error-handling crate the code was written against is provided as a
+//! small path dependency. Only the surface the workspace actually uses is
+//! implemented:
+//!
+//! * [`Error`] — an opaque error with a context chain (`Display`,
+//!   alternate `{:#}` chain formatting, `Debug` with a "Caused by" list,
+//!   [`Error::context`]).
+//! * [`Result<T>`] with the `Error` default.
+//! * Blanket `From<E: std::error::Error>` so `?` converts std errors.
+//! * The [`Context`] extension trait for `Result` and `Option`.
+//! * The [`anyhow!`], [`bail!`] and [`ensure!`] macros.
+//!
+//! Semantics follow upstream anyhow closely enough for this workspace:
+//! `{}` shows the outermost message, `{:#}` joins the whole chain with
+//! `": "`, and `Error` deliberately does *not* implement
+//! `std::error::Error` (which is what makes the blanket `From` legal).
+
+use std::fmt;
+
+/// Opaque error: an outermost message plus the chain of causes.
+pub struct Error {
+    /// `chain[0]` is the outermost context, the last entry the root cause.
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Construct from any displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { chain: vec![message.to_string()] }
+    }
+
+    /// Wrap with an outer context message (consuming, like anyhow).
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Error {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The outermost message.
+    pub fn root_message(&self) -> &str {
+        &self.chain[0]
+    }
+
+    /// The full context chain, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(|s| s.as_str())
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{:#}`: the whole chain, outermost first
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            f.write_str(&self.chain[0])
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain[0])?;
+        if self.chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for cause in &self.chain[1..] {
+                write!(f, "\n    {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Error {
+        let mut chain = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Error { chain }
+    }
+}
+
+/// `anyhow::Result<T>`: `std::result::Result` with [`Error`] as default.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Extension trait adding `.context(..)` / `.with_context(..)` to
+/// `Result` and `Option`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| e.into().context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or any displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an error.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error if the condition is false.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::anyhow!(concat!("condition failed: ", stringify!($cond))));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing")
+    }
+
+    #[test]
+    fn display_and_alternate() {
+        let e: Error = io_err().into();
+        let e = e.context("outer");
+        assert_eq!(format!("{e}"), "outer");
+        assert_eq!(format!("{e:#}"), "outer: missing");
+    }
+
+    #[test]
+    fn context_on_result_and_option() {
+        let r: Result<(), std::io::Error> = Err(io_err());
+        let e = Context::context(r, "reading file").unwrap_err();
+        assert_eq!(format!("{e:#}"), "reading file: missing");
+        let o: Option<u32> = None;
+        assert!(Context::context(o, "nope").is_err());
+        let o2: Option<u32> = Some(7);
+        assert_eq!(Context::context(o2, "fine").unwrap(), 7);
+    }
+
+    #[test]
+    fn macros_work() {
+        fn f(flag: bool) -> Result<u32> {
+            ensure!(flag, "flag was {flag}");
+            Ok(1)
+        }
+        assert!(f(true).is_ok());
+        assert_eq!(format!("{}", f(false).unwrap_err()), "flag was false");
+        let e = anyhow!("x = {}", 3);
+        assert_eq!(e.to_string(), "x = 3");
+        let from_string = anyhow!(String::from("plain"));
+        assert_eq!(from_string.to_string(), "plain");
+    }
+
+    #[test]
+    fn bail_returns() {
+        fn f() -> Result<()> {
+            bail!("boom {}", 1);
+        }
+        assert_eq!(f().unwrap_err().to_string(), "boom 1");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn f() -> Result<u32> {
+            let n: u32 = "12x".parse()?;
+            Ok(n)
+        }
+        assert!(f().is_err());
+    }
+}
