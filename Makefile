@@ -19,6 +19,7 @@ check: build test
 bench:
 	cargo bench --bench microbench
 	cargo bench --bench xfer
+	cargo bench --bench schedule
 
 fmt:
 	cargo fmt --all --check

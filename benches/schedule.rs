@@ -1,0 +1,68 @@
+//! Schedule-compiler microbenchmarks: `sched::compile` cost vs tile
+//! count, and the V1–V4 cache-strategy miss rate vs cache capacity
+//! (model mode, GH200 profile — the ablation's acceptance axis).
+//! Run with `cargo bench --bench schedule`.
+
+use ooc_cholesky::config::{EvictionKind, HwProfile, Mode, RunConfig, Version};
+use ooc_cholesky::figures::POLICY_AXIS;
+use ooc_cholesky::sched::{CompiledSchedule, Schedule};
+use ooc_cholesky::util::bench::bench;
+
+fn main() {
+    println!("== schedule compile cost vs nt (4 devices, 8 streams each) ==");
+    for nt in [64usize, 128, 256, 512] {
+        let schedule = Schedule::left_looking(nt, 4, 8);
+        let cfg = RunConfig {
+            n: nt * 128,
+            ts: 128,
+            version: Version::V2,
+            mode: Mode::Model,
+            ndev: 4,
+            streams_per_dev: 8,
+            // Belady so the bench pays for the next-use tables too (the
+            // full IR cost; LRU compiles skip them)
+            eviction: EvictionKind::Belady,
+            ..Default::default()
+        };
+        bench(&format!("compile_nt{nt}"), 0.5, 50, || {
+            let ir = CompiledSchedule::compile(&schedule, &cfg);
+            std::hint::black_box(&ir);
+        });
+        let ir = CompiledSchedule::compile(&schedule, &cfg);
+        let static_pct = 100.0 * ir.static_deps as f64 / ir.total_reads.max(1) as f64;
+        println!(
+            "    -> {} jobs, {} reads, {:.1}% deps static, {} cross-stream waits",
+            ir.total_jobs(),
+            ir.total_reads,
+            static_pct,
+            ir.cross_deps
+        );
+    }
+
+    println!("\n== miss count V1–V4 vs cache capacity (model, GH200, n=64k, ts=2048) ==");
+    println!(
+        "{:>10} {:>12} {:>12} {:>12} {:>12}  (misses; v4 = Belady)",
+        "vmem GiB", "v1", "v2", "v3", "v4"
+    );
+    for vmem_gib in [40u64, 20, 10, 6] {
+        print!("{vmem_gib:>10}");
+        for (_, version, eviction) in POLICY_AXIS {
+            let cfg = RunConfig {
+                n: 64 * 1024,
+                ts: 2048,
+                version,
+                mode: Mode::Model,
+                hw: HwProfile::gh200_nvlc2c(),
+                vmem_bytes: Some(vmem_gib * 1024 * 1024 * 1024),
+                streams_per_dev: 8,
+                eviction,
+                ..Default::default()
+            };
+            let r = ooc_cholesky::ooc::factorize(&cfg, None).unwrap();
+            print!(" {:>12}", r.metrics.cache_misses);
+        }
+        println!();
+    }
+
+    println!("\nschedule benches completed");
+}

@@ -4,7 +4,7 @@
 //! Run with `cargo bench --bench xfer`.
 
 use ooc_cholesky::config::{HwProfile, Mode, RunConfig, Version};
-use ooc_cholesky::sched::Schedule;
+use ooc_cholesky::sched::{CompiledSchedule, Schedule};
 use ooc_cholesky::util::bench::bench;
 use ooc_cholesky::xfer::XferPlan;
 
@@ -22,12 +22,13 @@ fn main() {
             prefetch_depth: 4,
             ..Default::default()
         };
+        let ir = CompiledSchedule::compile(&schedule, &cfg);
         bench(&format!("plan_build_nt{nt}"), 0.5, 50, || {
-            let plan = XferPlan::build(&schedule, &cfg);
+            let plan = XferPlan::build(&ir, &cfg);
             assert!(!plan.is_empty());
             std::hint::black_box(&plan);
         });
-        let plan = XferPlan::build(&schedule, &cfg);
+        let plan = XferPlan::build(&ir, &cfg);
         println!(
             "    -> {} planned loads, {} dropped over budget",
             plan.total_planned, plan.dropped_over_budget

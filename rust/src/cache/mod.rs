@@ -18,7 +18,7 @@
 
 mod policy;
 
-pub use policy::{expected_access_count, FutureUse, Policy};
+pub use policy::{expected_access_count, Policy};
 
 use std::collections::HashMap;
 use std::hash::{BuildHasherDefault, Hasher};
@@ -86,22 +86,38 @@ pub struct CacheTable<T> {
     /// victim selection for `remove_steal` (LRU in the paper; see
     /// [`Policy`] for the ablation alternatives)
     policy: Policy,
-    /// global access counter fed to the oracle policy
+    /// global access counter fed to the legacy oracle policy
     access_seq: u64,
+    /// anchored clock for the Belady (V4) policy: the minimum compiled
+    /// `access_base` across the device's *active* streams, set by the
+    /// executors at job start (never advanced mid-job)
+    belady_clock: u64,
 }
 
-/// Build a [`Policy`] from the run config (Oracle needs the schedule).
+/// Build the [`Policy`] for device `dev` from the run config. The
+/// oracle-flavored kinds consume the compiled schedule's next-use tables
+/// (cheap `Arc` clones — the tables are built once at compile time):
+/// `Oracle` takes the global canonical-order table (legacy heuristic),
+/// `Belady` (V4) the device-exact one.
 pub fn policy_for(
     kind: crate::config::EvictionKind,
     seed: u64,
-    schedule: &crate::sched::Schedule,
+    ir: &crate::sched::CompiledSchedule,
+    dev: usize,
 ) -> Policy {
     use crate::config::EvictionKind as E;
+    if matches!(kind, E::Oracle | E::Belady) {
+        // the IR only materializes the tables its compile config asked
+        // for — a mismatch would silently degrade to no-future-knowledge
+        // (every lookup u64::MAX), so fail loudly even in release
+        assert_eq!(ir.eviction, kind, "IR compiled without the {kind:?} next-use tables");
+    }
     match kind {
         E::Lru => Policy::Lru,
         E::Fifo => Policy::Fifo,
         E::Random => Policy::Random(seed),
-        E::Oracle => Policy::Oracle(Arc::new(FutureUse::from_schedule(schedule))),
+        E::Oracle => Policy::Oracle(ir.global_next_use()),
+        E::Belady => Policy::Belady(ir.next_use_table(dev)),
     }
 }
 
@@ -120,12 +136,28 @@ impl<T> CacheTable<T> {
             operand_caching,
             policy,
             access_seq: 0,
+            belady_clock: 0,
         }
     }
 
     /// Advance the oracle's notion of schedule position (one operand read).
     pub fn advance_access(&mut self) {
         self.access_seq += 1;
+    }
+
+    /// Anchor the Belady (V4) clock. `now` must be a *conservative
+    /// horizon*: the minimum compiled `access_base` over the device's
+    /// still-active streams. Using the minimum (not the current job's
+    /// own base) is what keeps Belady sound under multi-stream
+    /// pipelining — a fast stream may run columns ahead of a lagging
+    /// one, and a clock past the laggard's position would hide its
+    /// pending reuses and evict exactly the tiles it still needs.
+    /// Everything at or after the horizon stays visible; the only error
+    /// mode is keeping an already-consumed tile alive a little longer.
+    /// Monotone (bases only grow per stream, so the min only grows) and
+    /// deliberately *not* advanced by `advance_access`.
+    pub fn set_clock(&mut self, now: u64) {
+        self.belady_clock = self.belady_clock.max(now);
     }
 
     pub fn capacity(&self) -> u64 {
@@ -238,9 +270,16 @@ impl<T> CacheTable<T> {
                 .map(|(k, _)| *k)
                 .min()
                 .or_else(|| {
+                    // Belady compares next uses against the anchored
+                    // horizon; the legacy oracle against the advancing
+                    // global access counter
+                    let now = match self.policy {
+                        Policy::Belady(_) => self.belady_clock,
+                        _ => self.access_seq,
+                    };
                     policy::choose_victim(
                         &self.policy,
-                        self.access_seq,
+                        now,
                         self.entries
                             .iter()
                             .filter(|(_, e)| e.pins == 0)

@@ -2,16 +2,30 @@
 //!
 //! The paper's `remove_steal` evicts "least or non-utilized tiles" (LRU).
 //! Because the static scheduler is *deterministic*, the full tile-access
-//! sequence is known before execution — so a near-Belady "oracle" policy
-//! (evict the tile whose next use is farthest in the schedule) is
-//! actually implementable here, something a dynamic runtime system cannot
-//! do. This module provides the policies and the precomputed future-use
-//! index; `benches/figures.rs` and the `ablation` CLI compare them.
+//! sequence is known before execution — something a dynamic runtime
+//! system cannot assume — so two oracle-flavored policies become
+//! implementable, both driven by [`crate::sched::NextUse`] tables the
+//! schedule compiler builds:
+//!
+//! * [`Policy::Oracle`] — the legacy heuristic: one *global* table over
+//!   the canonical job order, compared against the cache's advancing
+//!   access counter. Cheap, but the counter drifts from any single
+//!   device's position once `ndev > 1`.
+//! * [`Policy::Belady`] (**V4**) — Belady/MIN per device: the
+//!   [`crate::sched::CompiledSchedule`] provides a per-(tile, device)
+//!   next-use table over the *device-local* access sequence, and the
+//!   cache clock is anchored to the minimum `access_base` across the
+//!   device's active streams (`CacheTable::set_clock`) — a conservative
+//!   horizon under which the victim is the resident tile with the
+//!   farthest next use that no stream can still be short of.
+//!
+//! `benches/schedule.rs` and the `ablation` CLI (`--policy v4`) compare
+//! the policies; `rust/tests/schedule_ir.rs` holds the optimality
+//! property test on recorded traces.
 
-use std::collections::HashMap;
 use std::sync::Arc;
 
-use crate::sched::Schedule;
+use crate::sched::NextUse;
 use crate::util::rng::Rng;
 
 /// Victim-selection policy for `remove_steal`.
@@ -23,9 +37,12 @@ pub enum Policy {
     Fifo,
     /// uniform random unpinned victim (deterministic seed)
     Random(u64),
-    /// Belady-style: evict the unpinned tile whose next use in the static
-    /// schedule is farthest away (enabled by determinism)
-    Oracle(Arc<FutureUse>),
+    /// legacy oracle: farthest next use against the compiled schedule's
+    /// *global* canonical-order table and the advancing access counter
+    Oracle(Arc<NextUse>),
+    /// V4: Belady/MIN from the compiled schedule's per-device next-use
+    /// table and the anchored conservative horizon
+    Belady(Arc<NextUse>),
 }
 
 impl Policy {
@@ -35,61 +52,7 @@ impl Policy {
             Policy::Fifo => "fifo",
             Policy::Random(_) => "random",
             Policy::Oracle(_) => "oracle",
-        }
-    }
-}
-
-/// Precomputed tile → sorted list of global access indices.
-///
-/// The global access order linearizes the left-looking schedule
-/// column-major (the same order the DES processes jobs in the common
-/// case); each read access of an operand tile appends an index.
-#[derive(Debug, Default)]
-pub struct FutureUse {
-    /// tile -> ascending global access indices
-    uses: HashMap<(usize, usize), Vec<u64>>,
-    pub total_accesses: u64,
-}
-
-impl FutureUse {
-    /// Build from a schedule by replaying every job's operand reads in
-    /// global (column-major) order.
-    pub fn from_schedule(schedule: &Schedule) -> FutureUse {
-        let mut fu = FutureUse::default();
-        let mut seq = 0u64;
-        let record = |fu: &mut FutureUse, i: usize, j: usize, seq: &mut u64| {
-            fu.uses.entry((i, j)).or_default().push(*seq);
-            *seq += 1;
-        };
-        // replay in the same (k, m) lexicographic order as job creation
-        let nt = schedule.nt;
-        for k in 0..nt {
-            for m in k..nt {
-                // operands of TileLL{m,k}
-                for n in 0..k {
-                    record(&mut fu, m, n, &mut seq);
-                    if m != k {
-                        record(&mut fu, k, n, &mut seq);
-                    }
-                }
-                if m != k {
-                    record(&mut fu, k, k, &mut seq);
-                }
-            }
-        }
-        fu.total_accesses = seq;
-        fu
-    }
-
-    /// Next use of `tile` at or after `now`; `u64::MAX` if never again.
-    pub fn next_use(&self, tile: (usize, usize), now: u64) -> u64 {
-        match self.uses.get(&tile) {
-            None => u64::MAX,
-            Some(v) => match v.binary_search(&now) {
-                Ok(i) => v[i],
-                Err(i) if i < v.len() => v[i],
-                _ => u64::MAX,
-            },
+            Policy::Belady(_) => "belady",
         }
     }
 }
@@ -112,9 +75,9 @@ where
                 Some(all[rng.below(all.len() as u64) as usize])
             }
         }
-        Policy::Oracle(fu) => candidates
-            .map(|(k, _, _)| (*k, fu.next_use(*k, now)))
-            .max_by_key(|(_, nu)| *nu)
+        Policy::Oracle(nu) | Policy::Belady(nu) => candidates
+            .map(|(k, _, _)| (*k, nu.next_use(*k, now)))
+            .max_by_key(|&(k, n)| (n, k))
             .map(|(k, _)| k),
     }
 }
@@ -138,29 +101,43 @@ pub fn expected_access_count(nt: u64) -> u64 {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::config::{EvictionKind, Mode, RunConfig, Version};
+    use crate::sched::{CompiledSchedule, Schedule};
+
+    fn compile(s: &Schedule, eviction: EvictionKind) -> CompiledSchedule {
+        let cfg = RunConfig {
+            n: s.nt * 128,
+            ts: 128,
+            version: Version::V2,
+            mode: Mode::Model,
+            eviction,
+            ..Default::default()
+        };
+        CompiledSchedule::compile(s, &cfg)
+    }
 
     #[test]
-    fn future_use_counts() {
+    fn global_table_counts() {
         for nt in [1usize, 2, 4, 8] {
             let s = Schedule::left_looking(nt, 1, 2);
-            let fu = FutureUse::from_schedule(&s);
-            assert_eq!(fu.total_accesses, expected_access_count(nt as u64), "nt={nt}");
+            let nu = compile(&s, EvictionKind::Oracle).global_next_use();
+            assert_eq!(nu.total, expected_access_count(nt as u64), "nt={nt}");
         }
     }
 
     #[test]
     fn next_use_lookup() {
         let s = Schedule::left_looking(4, 1, 1);
-        let fu = FutureUse::from_schedule(&s);
+        let nu = compile(&s, EvictionKind::Oracle).global_next_use();
         // replay order: k=0 jobs (1,0),(2,0),(3,0) each read the diagonal
         // (0,0) -> seqs 0..2; the first read of tile (1,0) is by job (1,1)
         // at seq 3
-        assert_eq!(fu.next_use((0, 0), 0), 0);
-        assert_eq!(fu.next_use((1, 0), 0), 3);
+        assert_eq!(nu.next_use((0, 0), 0), 0);
+        assert_eq!(nu.next_use((1, 0), 0), 3);
         // and never after the last access
-        assert_eq!(fu.next_use((1, 0), fu.total_accesses), u64::MAX);
+        assert_eq!(nu.next_use((1, 0), nu.total), u64::MAX);
         // unknown tile: never used
-        assert_eq!(fu.next_use((99, 0), 0), u64::MAX);
+        assert_eq!(nu.next_use((99, 0), 0), u64::MAX);
     }
 
     #[test]
@@ -174,16 +151,23 @@ mod tests {
         assert!(entries.iter().any(|(k, _, _)| *k == r));
         // oracle: build a schedule where (0,0) is reused soon, (2,0) never
         let s = Schedule::left_looking(3, 1, 1);
-        let fu = Arc::new(FutureUse::from_schedule(&s));
-        let v = choose_victim(&Policy::Oracle(fu), 0, it()).unwrap();
+        let nu = compile(&s, EvictionKind::Oracle).global_next_use();
+        let v = choose_victim(&Policy::Oracle(nu), 0, it()).unwrap();
         assert_eq!(v, (2, 0), "tile (2,0) has the farthest (no) future use");
+        // belady from an explicit trace: (1,0) is never used again
+        let nu = Arc::new(NextUse::from_accesses([(0, 0), (1, 0), (2, 0), (0, 0), (2, 0)]));
+        let v = choose_victim(&Policy::Belady(nu), 2, it()).unwrap();
+        assert_eq!(v, (1, 0), "after idx 2, only (1,0) has no remaining use");
     }
 
     #[test]
-    fn jobs_referenced_exist() {
-        // guard: FutureUse replay stays in sync with Schedule's job set
-        let s = Schedule::left_looking(6, 2, 2);
-        let total: usize = s.jobs.iter().map(|j| j.len()).sum();
-        assert_eq!(total, 21);
+    fn belady_table_is_device_local() {
+        // two devices: each table indexes only that device's accesses, so
+        // the same tile can have different next-use clocks per device
+        let s = Schedule::left_looking(6, 2, 1);
+        let ir = compile(&s, EvictionKind::Belady);
+        let (a, b) = (ir.next_use_table(0), ir.next_use_table(1));
+        assert_eq!(a.total + b.total, expected_access_count(6));
+        assert!(a.total > 0 && b.total > 0);
     }
 }

@@ -70,8 +70,11 @@ pub enum EvictionKind {
     Lru,
     Fifo,
     Random,
-    /// Belady-style via the static schedule's known future accesses
+    /// legacy oracle: global canonical-order replay (drifts per device)
     Oracle,
+    /// V4: exact Belady/MIN from the compiled schedule's per-device
+    /// next-use tables (`--policy v4`)
+    Belady,
 }
 
 impl EvictionKind {
@@ -81,6 +84,7 @@ impl EvictionKind {
             EvictionKind::Fifo => "fifo",
             EvictionKind::Random => "random",
             EvictionKind::Oracle => "oracle",
+            EvictionKind::Belady => "belady",
         }
     }
     pub fn parse(s: &str) -> Option<Self> {
@@ -88,12 +92,18 @@ impl EvictionKind {
             "lru" => Some(EvictionKind::Lru),
             "fifo" => Some(EvictionKind::Fifo),
             "random" | "rand" => Some(EvictionKind::Random),
-            "oracle" | "belady" => Some(EvictionKind::Oracle),
+            "oracle" => Some(EvictionKind::Oracle),
+            "belady" | "v4" => Some(EvictionKind::Belady),
             _ => None,
         }
     }
-    pub const ALL: [EvictionKind; 4] =
-        [EvictionKind::Lru, EvictionKind::Fifo, EvictionKind::Random, EvictionKind::Oracle];
+    pub const ALL: [EvictionKind; 5] = [
+        EvictionKind::Lru,
+        EvictionKind::Fifo,
+        EvictionKind::Random,
+        EvictionKind::Oracle,
+        EvictionKind::Belady,
+    ];
 }
 
 /// Real execution (PJRT kernels, wall clock) or modeled (DES, virtual clock).
@@ -384,7 +394,8 @@ impl RunConfig {
             "nu" => self.nu = num()?,
             "nugget" => self.nugget = num()?,
             "seed" => self.seed = num()? as u64,
-            "eviction" => {
+            // `policy` is the CLI-facing alias (`--policy v4` etc.)
+            "eviction" | "policy" => {
                 self.eviction =
                     EvictionKind::parse(st()?).ok_or_else(|| format!("bad eviction {v}"))?
             }
@@ -486,6 +497,17 @@ mod tests {
         let j = crate::util::json::parse(r#"{"prefetch": false}"#).unwrap();
         cfg.apply_json(&j).unwrap();
         assert_eq!(cfg.prefetch_depth, 0);
+    }
+
+    #[test]
+    fn policy_aliases() {
+        assert_eq!(EvictionKind::parse("v4"), Some(EvictionKind::Belady));
+        assert_eq!(EvictionKind::parse("belady"), Some(EvictionKind::Belady));
+        assert_eq!(EvictionKind::parse("oracle"), Some(EvictionKind::Oracle));
+        let mut cfg = RunConfig::default();
+        let j = crate::util::json::parse(r#"{"policy": "v4"}"#).unwrap();
+        cfg.apply_json(&j).unwrap();
+        assert_eq!(cfg.eviction, EvictionKind::Belady);
     }
 
     #[test]

@@ -75,6 +75,10 @@ impl RunReport {
     }
 
     pub fn summary_line(&self) -> String {
+        // a run with no transfers at all (in-core, or a cache big enough
+        // to hold everything) must print 0.0%, never NaN — route every
+        // ratio through the finite guard
+        let pct = |x: f64| if x.is_finite() { 100.0 * x } else { 0.0 };
         format!(
             "{:>12} n={:<7} ts={:<4} dev={} str={} | {:>9.3}s {:>8.2} TFlop/s | H2D {:>10} D2H {:>10} | util {:>5.1}% ovl {:>5.1}%{}{}",
             self.cfg.version.name(),
@@ -86,12 +90,12 @@ impl RunReport {
             self.tflops,
             crate::util::human_bytes(self.metrics.h2d_bytes),
             crate::util::human_bytes(self.metrics.d2h_bytes),
-            100.0 * self.work_utilization,
-            100.0 * self.metrics.prefetch_overlap(),
+            pct(self.work_utilization),
+            pct(self.metrics.prefetch_overlap()),
             if self.cfg.prefetch_depth > 0 {
                 format!(
                     " xfer {:>4.1}% (pf {}/{} late {})",
-                    100.0 * self.xfer_busy_fraction(),
+                    pct(self.xfer_busy_fraction()),
                     self.metrics.prefetch_hits,
                     self.metrics.prefetch_issued,
                     self.metrics.prefetch_late,
@@ -104,5 +108,41 @@ impl RunReport {
                 None => String::new(),
             }
         )
+    }
+
+    /// Canonical integer-only metrics JSON for the golden smoke-run gate
+    /// (`--metrics-out`, `rust/tests/golden/`). Sorted keys, two-space
+    /// indent, no floats — byte-stable across platforms and toolchains,
+    /// so CI can compare with a plain `diff`.
+    pub fn golden_metrics_string(&self) -> String {
+        let m = &self.metrics;
+        let fields: [(&str, u64); 19] = [
+            ("cache_evictions", m.cache_evictions),
+            ("cache_hits", m.cache_hits),
+            ("cache_misses", m.cache_misses),
+            ("d2h_bytes", m.d2h_bytes),
+            ("d2h_transfers", m.d2h_transfers),
+            ("device_allocs", m.device_allocs),
+            ("device_frees", m.device_frees),
+            ("flops", m.flops),
+            ("h2d_bytes", m.h2d_bytes),
+            ("h2d_transfers", m.h2d_transfers),
+            ("n_gemm", m.n_gemm),
+            ("n_potrf", m.n_potrf),
+            ("n_syrk", m.n_syrk),
+            ("n_trsm", m.n_trsm),
+            ("prefetch_dropped", m.prefetch_dropped),
+            ("prefetch_hits", m.prefetch_hits),
+            ("prefetch_issued", m.prefetch_issued),
+            ("prefetch_late", m.prefetch_late),
+            ("total_bytes", m.total_bytes()),
+        ];
+        let mut s = String::from("{\n");
+        for (i, (k, v)) in fields.iter().enumerate() {
+            let comma = if i + 1 < fields.len() { "," } else { "" };
+            s.push_str(&format!("  \"{k}\": {v}{comma}\n"));
+        }
+        s.push_str("}\n");
+        s
     }
 }

@@ -1,10 +1,14 @@
 //! Real-mode executor: streams = worker threads, kernels = PJRT
 //! executions, transfers = host-store ↔ device-buffer copies.
 //!
-//! This is Algorithm 2 verbatim: each stream walks its statically
-//! assigned job list, busy-waits on the progress table for dependencies,
-//! pulls operands through `load_tile` (Algorithm 3) under the device's
-//! cache policy, and writes factored tiles back to the host.
+//! This is Algorithm 2: each stream walks its statically assigned job
+//! list, pulls operands through `load_tile` (Algorithm 3) under the
+//! device's cache policy, and writes factored tiles back to the host.
+//! Dependencies are split by the compiled schedule
+//! ([`crate::sched::CompiledSchedule`]): cross-stream ones busy-wait on
+//! the progress table, same-stream ones are final by program order and
+//! skip the probe entirely (`deps_static` vs `deps_waited` in
+//! [`Metrics`]).
 //!
 //! With `prefetch_depth > 0` (V2/V3), one dedicated transfer worker per
 //! device additionally drains the [`crate::xfer`] plan: operands of the
@@ -31,11 +35,11 @@ use std::time::Instant;
 use anyhow::{anyhow, Result};
 
 use crate::cache::CacheTable;
-use crate::config::{RunConfig, Version};
+use crate::config::{EvictionKind, RunConfig, Version};
 use crate::metrics::{Metrics, TaskOp};
 use crate::precision::Precision;
 use crate::runtime::{DevBuf, Kernel, Runtime};
-use crate::sched::{Job, ProgressTable, Schedule};
+use crate::sched::{CompiledSchedule, Job, ProgressTable, Schedule};
 use crate::tiles::TileMatrix;
 use crate::trace::{Event, EventKind, Trace};
 use crate::xfer::{XferEngine, XferPlan};
@@ -45,6 +49,12 @@ struct Shared<'a> {
     cfg: &'a RunConfig,
     rt: &'a Runtime,
     matrix: &'a TileMatrix,
+    /// compiled schedule: static wait lists, access bases, read sets
+    ir: CompiledSchedule,
+    /// per global stream: access base of the job the stream is currently
+    /// on (`u64::MAX` once the stream drains). The per-device minimum is
+    /// the conservative Belady horizon fed to `CacheTable::set_clock`.
+    stream_base: Vec<AtomicU64>,
     progress: ProgressTable,
     caches: Vec<Mutex<CacheTable<DevBuf>>>,
     /// V3: remaining TRSMs per column; at 0 the diagonal tile is unpinned
@@ -104,6 +114,23 @@ impl<'a> Shared<'a> {
 
     fn keeps_accumulator(&self) -> bool {
         matches!(self.cfg.version, Version::V1 | Version::V2 | Version::V3)
+    }
+
+    /// Wait for dependency tile (i, j) of a job targeting `target_row` —
+    /// unless the producer runs on the same stream, in which case the
+    /// compiled schedule guarantees it is already final (program order)
+    /// and the `ProgressTable` probe is skipped entirely.
+    fn wait_dep(&self, target_row: usize, i: usize, j: usize) {
+        if self.ir.owner_gid(i) == self.ir.owner_gid(target_row) {
+            debug_assert!(
+                self.progress.is_ready(i, j),
+                "static dep ({i},{j}) of row {target_row} not final"
+            );
+            self.metrics.deps_static.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+        self.metrics.deps_waited.fetch_add(1, Ordering::Relaxed);
+        self.progress.wait_ready(i, j);
     }
 
     /// H2D upload with accounting + tracing. `dev`/`stream` for the trace.
@@ -267,25 +294,39 @@ pub fn run(cfg: &RunConfig, rt: &Runtime, matrix: &TileMatrix) -> Result<super::
 
     let tile_bytes = (cfg.ts * cfg.ts * 8) as u64;
     let operand_caching = matches!(cfg.version, Version::V2 | Version::V3 | Version::RightLooking);
-    let policy = crate::cache::policy_for(cfg.eviction, cfg.seed, &schedule);
+    // lower the schedule once: wait lists, access bases and the transfer
+    // plan's deadlines all come from the IR
+    let ir = CompiledSchedule::compile(&schedule, cfg);
     // compile (or fetch memoized) kernels BEFORE starting the clock:
     // one-time PJRT compilation is not part of the factorization time
     let kernels = KernelSet::load(rt, cfg.ts)?;
-    let plan = XferPlan::build(&schedule, cfg);
+    let plan = XferPlan::build(&ir, cfg);
+    let caches = (0..cfg.ndev)
+        .map(|dev| {
+            Mutex::new(CacheTable::with_policy(
+                cfg.device_vmem(),
+                operand_caching,
+                crate::cache::policy_for(cfg.eviction, cfg.seed, &ir, dev),
+            ))
+        })
+        .collect();
+    let stream_base = (0..schedule.total_streams())
+        .map(|gid| {
+            AtomicU64::new(if schedule.jobs[gid].is_empty() {
+                u64::MAX
+            } else {
+                ir.access_base(gid, 0)
+            })
+        })
+        .collect();
     let shared = Shared {
         cfg,
         rt,
         matrix,
+        ir,
+        stream_base,
         progress: ProgressTable::new(nt),
-        caches: (0..cfg.ndev)
-            .map(|_| {
-                Mutex::new(CacheTable::with_policy(
-                    cfg.device_vmem(),
-                    operand_caching,
-                    policy.clone(),
-                ))
-            })
-            .collect(),
+        caches,
         trsm_left: (0..nt).map(|k| AtomicU32::new((nt - k - 1) as u32)).collect(),
         metrics: Metrics::new(),
         trace: Trace::new(cfg.trace),
@@ -384,6 +425,21 @@ fn run_stream(sh: &Shared, jobs: &[Job], dev: usize, stream: usize) -> Result<()
         if sh.xfer.enabled() {
             sh.xfer.on_job_start(gid, dev, idx);
         }
+        // publish this stream's position and anchor the device's Belady
+        // clock to the min active base across its streams (conservative
+        // horizon). Belady only: other policies never read the clock,
+        // and this takes the contended device cache lock
+        if sh.uses_cache() && sh.cfg.eviction == EvictionKind::Belady {
+            sh.stream_base[gid].store(sh.ir.access_base(gid, idx), Ordering::Release);
+            let dev0 = dev * sh.cfg.streams_per_dev;
+            let min_base = (dev0..dev0 + sh.cfg.streams_per_dev)
+                .map(|g| sh.stream_base[g].load(Ordering::Acquire))
+                .min()
+                .unwrap_or(0);
+            if min_base != u64::MAX {
+                sh.caches[dev].lock().unwrap().set_clock(min_base);
+            }
+        }
         match *job {
             Job::TileLL { m, k } => run_tile_ll(sh, m, k, dev, stream, &mut scratch)?,
             Job::FactorDiagRL { k } => run_factor_diag_rl(sh, k, dev, stream, &mut scratch)?,
@@ -391,6 +447,8 @@ fn run_stream(sh: &Shared, jobs: &[Job], dev: usize, stream: usize) -> Result<()
             Job::UpdateRL { i, j, k } => run_update_rl(sh, i, j, k, dev, stream, &mut scratch)?,
         }
     }
+    // drained: stop holding the device's Belady horizon back
+    sh.stream_base[gid].store(u64::MAX, Ordering::Release);
     Ok(())
 }
 
@@ -530,7 +588,7 @@ fn run_tile_ll_inner(
         let (acc, _) = sh.upload_tile(m, k, dev, stream)?;
         let mut acc = acc;
         for n in 0..k {
-            sh.progress.wait_ready(m, n);
+            sh.wait_dep(m, m, n);
             let a = sh.load_tile(m, n, dev, stream, false)?;
             if diag {
                 acc = sh.run_kernel(
@@ -542,7 +600,7 @@ fn run_tile_ll_inner(
                     stream,
                 )?;
             } else {
-                sh.progress.wait_ready(k, n);
+                sh.wait_dep(m, k, n);
                 let b = sh.load_tile(k, n, dev, stream, false)?;
                 acc = sh.run_kernel(
                     &sh.kernels.gemm[slot],
@@ -564,7 +622,7 @@ fn run_tile_ll_inner(
                 stream,
             )?;
         } else {
-            sh.progress.wait_ready(k, k);
+            sh.wait_dep(m, k, k);
             let pin = sh.cfg.version == Version::V3;
             let l = sh.load_tile(k, k, dev, stream, pin)?;
             acc = sh.run_kernel(
@@ -581,7 +639,7 @@ fn run_tile_ll_inner(
     } else {
         // sync/async: the accumulator round-trips the host every task
         for n in 0..k {
-            sh.progress.wait_ready(m, n);
+            sh.wait_dep(m, m, n);
             let (c, _) = sh.upload_tile(m, k, dev, stream)?;
             let a = sh.load_tile(m, n, dev, stream, false)?;
             let out = if diag {
@@ -594,7 +652,7 @@ fn run_tile_ll_inner(
                     stream,
                 )?
             } else {
-                sh.progress.wait_ready(k, n);
+                sh.wait_dep(m, k, n);
                 let b = sh.load_tile(k, n, dev, stream, false)?;
                 sh.run_kernel(
                     &sh.kernels.gemm[slot],
@@ -620,7 +678,7 @@ fn run_tile_ll_inner(
                 stream,
             )?
         } else {
-            sh.progress.wait_ready(k, k);
+            sh.wait_dep(m, k, k);
             let l = sh.load_tile(k, k, dev, stream, false)?;
             sh.run_kernel(
                 &sh.kernels.trsm[slot],
@@ -669,7 +727,7 @@ fn run_factor_off_rl(
     stream: usize,
     scratch: &mut Vec<f64>,
 ) -> Result<()> {
-    sh.progress.wait_ready(k, k);
+    sh.wait_dep(m, k, k);
     let slot = prec_slot(sh.matrix.lock(m, k).prec);
     let l = sh.load_tile(k, k, dev, stream, false)?;
     let (b, _) = sh.upload_tile(m, k, dev, stream)?;
@@ -697,7 +755,7 @@ fn run_update_rl(
     stream: usize,
     scratch: &mut Vec<f64>,
 ) -> Result<()> {
-    sh.progress.wait_ready(i, k);
+    sh.wait_dep(i, i, k);
     let slot = prec_slot(sh.matrix.lock(i, j).prec);
     let a = sh.load_tile(i, k, dev, stream, false)?;
     let (c, _) = sh.upload_tile(i, j, dev, stream)?;
@@ -711,7 +769,7 @@ fn run_update_rl(
             stream,
         )?
     } else {
-        sh.progress.wait_ready(j, k);
+        sh.wait_dep(i, j, k);
         let b = sh.load_tile(j, k, dev, stream, false)?;
         sh.run_kernel(
             &sh.kernels.gemm[slot],

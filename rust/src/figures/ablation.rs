@@ -1,21 +1,77 @@
 //! Design-choice ablations beyond the paper's figures (DESIGN.md §6):
 //!
-//!  * eviction policy: LRU (paper) vs FIFO vs random vs the Belady-style
-//!    oracle that only a *static* scheduler can implement;
+//!  * cache strategy **V1–V4**: no operand cache (V1), LRU steal (V2),
+//!    LRU + diagonal pinning (V3), and V4 = V3 with exact Belady/MIN
+//!    eviction from the compiled schedule — the policy only a *static*
+//!    scheduler can implement. Reported in miss counts (the currency the
+//!    acceptance gate compares) and TFlop/s;
+//!  * eviction policy at fixed strategy: LRU (paper) vs FIFO vs random
+//!    vs the legacy global oracle vs Belady;
 //!  * left- vs right-looking traversal (the §II positioning claim);
-//!  * stream count (the async-overlap knob of Fig. 2).
+//!  * stream count (the async-overlap knob of Fig. 2);
+//!  * prefetch depth (the `xfer` engine's lookahead).
 
 use anyhow::Result;
 
 use crate::config::{EvictionKind, HwProfile, Mode, RunConfig, Version};
 use crate::util::json::Json;
 
+/// The V1–V4 cache-strategy axis: (label, version, eviction).
+pub const POLICY_AXIS: [(&str, Version, EvictionKind); 4] = [
+    ("v1", Version::V1, EvictionKind::Lru),
+    ("v2", Version::V2, EvictionKind::Lru),
+    ("v3", Version::V3, EvictionKind::Lru),
+    ("v4", Version::V3, EvictionKind::Belady),
+];
+
+/// V1–V4 cache-strategy sweep under decreasing device memory (GH200):
+/// the acceptance gate — V4's miss count must not exceed any of V1–V3 at
+/// equal capacity.
+pub fn ablation_policy(n: usize, ts: usize) -> Result<Json> {
+    println!("\n=== Ablation: cache strategy V1–V4, misses | TFlop/s (GH200, n={n}) ===");
+    println!(
+        "{:>10} {:>22} {:>22} {:>22} {:>22}",
+        "vmem GiB", "v1", "v2", "v3", "v4 (belady)"
+    );
+    let mut rows = Vec::new();
+    for vmem_gib in [40u64, 20, 10, 6] {
+        print!("{vmem_gib:>10}");
+        let mut row = vec![("vmem_gib", Json::num(vmem_gib as f64))];
+        for (label, version, eviction) in POLICY_AXIS {
+            let cfg = RunConfig {
+                n,
+                ts,
+                version,
+                mode: Mode::Model,
+                hw: HwProfile::gh200_nvlc2c(),
+                vmem_bytes: Some(vmem_gib * 1024 * 1024 * 1024),
+                streams_per_dev: 8,
+                eviction,
+                ..Default::default()
+            };
+            let r = crate::ooc::factorize(&cfg, None)?;
+            print!(" {:>12} | {:>6.1}", r.metrics.cache_misses, r.tflops);
+            row.push((label, Json::num(r.metrics.cache_misses as f64)));
+            // tflops under "<label>_tflops" so the miss key stays primary
+            row.push(match label {
+                "v1" => ("v1_tflops", Json::num(r.tflops)),
+                "v2" => ("v2_tflops", Json::num(r.tflops)),
+                "v3" => ("v3_tflops", Json::num(r.tflops)),
+                _ => ("v4_tflops", Json::num(r.tflops)),
+            });
+        }
+        println!();
+        rows.push(Json::obj(row));
+    }
+    Ok(Json::obj(vec![("figure", Json::str("ablation_policy")), ("rows", Json::Arr(rows))]))
+}
+
 /// Eviction-policy sweep under decreasing device memory (GH200, V3).
 pub fn ablation_eviction(n: usize, ts: usize) -> Result<Json> {
     println!("\n=== Ablation: eviction policy (GH200, V3, n={n}) ===");
     println!(
-        "{:>10} {:>12} {:>12} {:>12} {:>12}",
-        "vmem GiB", "lru", "fifo", "random", "oracle"
+        "{:>10} {:>12} {:>12} {:>12} {:>12} {:>12}",
+        "vmem GiB", "lru", "fifo", "random", "oracle", "belady"
     );
     let mut rows = Vec::new();
     for vmem_gib in [40u64, 20, 10, 6] {
@@ -147,6 +203,7 @@ pub fn ablation_prefetch(n: usize, ts: usize) -> Result<Json> {
 
 pub fn ablation_all(n: usize, ts: usize) -> Result<Json> {
     Ok(Json::obj(vec![
+        ("policy", ablation_policy(n, ts)?),
         ("eviction", ablation_eviction(n, ts)?),
         ("looking", ablation_looking(n, ts)?),
         ("streams", ablation_streams(n, ts)?),
@@ -157,6 +214,29 @@ pub fn ablation_all(n: usize, ts: usize) -> Result<Json> {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn v4_misses_never_exceed_v1_to_v3() {
+        // the acceptance gate: at every capacity of the default ablation
+        // matrix, V4 (Belady from the compiled schedule) must not miss
+        // more than any of V1–V3
+        let j = ablation_policy(96 * 1024, 2048).unwrap();
+        for row in j.get("rows").as_arr().unwrap() {
+            let v4 = row.get("v4").as_f64().unwrap();
+            for p in ["v1", "v2", "v3"] {
+                let other = row.get(p).as_f64().unwrap();
+                assert!(v4 <= other, "v4 misses {v4} > {p} misses {other}: {row}");
+            }
+        }
+        // and under real pressure (the tightest capacity) it must win
+        // outright against plain LRU caching
+        let rows = j.get("rows").as_arr().unwrap();
+        let tight = rows.last().unwrap();
+        assert!(
+            tight.get("v4").as_f64().unwrap() < tight.get("v1").as_f64().unwrap(),
+            "{tight}"
+        );
+    }
 
     #[test]
     fn oracle_never_loses_to_random() {

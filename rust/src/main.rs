@@ -19,7 +19,7 @@ use std::collections::VecDeque;
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use ooc_cholesky::config::{HwProfile, Mode, RunConfig, Version};
+use ooc_cholesky::config::{EvictionKind, HwProfile, Mode, RunConfig, Version};
 use ooc_cholesky::precision::Precision;
 use ooc_cholesky::runtime::Runtime;
 use ooc_cholesky::{figures, mle, ooc};
@@ -77,6 +77,11 @@ FACTORIZE FLAGS:
   --accuracy A       MxP threshold epsilon_high (default 1e-8)
   --beta B           Matern spatial range (default 0.078809)
   --seed S           workload seed
+  --policy P         cache eviction policy: lru (paper) | fifo | random |
+                     oracle (legacy global replay) | v4 (exact Belady from
+                     the compiled schedule; alias: belady)
+  --metrics-out F    write the run's metrics counters as canonical JSON
+                     (the golden smoke-run format CI diffs)
   --prefetch-depth N transfer-engine lookahead: plan the operands of the
                      next N jobs per stream onto a dedicated transfer
                      stream (V2/V3; 0 = off). The factorize summary line
@@ -135,6 +140,11 @@ fn parse_cfg(mut args: VecDeque<String>) -> Result<RunConfig> {
             "--nu" => cfg.nu = next(&mut args, "--nu")?.parse()?,
             "--nugget" => cfg.nugget = next(&mut args, "--nugget")?.parse()?,
             "--seed" => cfg.seed = next(&mut args, "--seed")?.parse()?,
+            "--policy" | "--eviction" => {
+                let v = next(&mut args, &a)?;
+                cfg.eviction = EvictionKind::parse(&v)
+                    .with_context(|| format!("bad {a} value {v:?} (lru|fifo|random|oracle|v4)"))?
+            }
             "--prefetch-depth" => {
                 cfg.prefetch_depth = next(&mut args, "--prefetch-depth")?.parse()?
             }
@@ -154,11 +164,26 @@ fn open_runtime_if(cfg: &RunConfig) -> Result<Option<Runtime>> {
     Ok(if cfg.mode == Mode::Real { Some(Runtime::open_default()?) } else { None })
 }
 
-fn cmd_factorize(args: VecDeque<String>) -> Result<()> {
-    let cfg = parse_cfg(args)?;
+fn cmd_factorize(mut args: VecDeque<String>) -> Result<()> {
+    // peel off --metrics-out before the config parser sees it
+    let mut metrics_out: Option<std::path::PathBuf> = None;
+    let mut rest = VecDeque::new();
+    while let Some(a) = args.pop_front() {
+        if a == "--metrics-out" {
+            metrics_out = Some(args.pop_front().context("--metrics-out needs a path")?.into());
+        } else {
+            rest.push_back(a);
+        }
+    }
+    let cfg = parse_cfg(rest)?;
     let rt = open_runtime_if(&cfg)?;
     let report = ooc::factorize(&cfg, rt.as_ref())?;
     println!("{}", report.summary_line());
+    if let Some(path) = metrics_out {
+        std::fs::write(&path, report.golden_metrics_string())
+            .with_context(|| format!("writing {path:?}"))?;
+        println!("(metrics JSON at {path:?})");
+    }
     if let Some(tr) = &report.trace {
         print!("{}", tr.render_ascii(100));
         let path = figures::write_result("trace_chrome", &tr.to_chrome_json())?;

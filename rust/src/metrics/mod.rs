@@ -46,6 +46,11 @@ pub struct Metrics {
     pub prefetch_dropped: AtomicU64,
     /// transfer-stream busy time, ns (wall in real mode, virtual in the DES)
     pub xfer_busy_ns: AtomicU64,
+    /// dependencies resolved statically from the compiled schedule (the
+    /// producer runs earlier on the same stream — no progress-table probe)
+    pub deps_static: AtomicU64,
+    /// dependencies that required a runtime progress-table wait
+    pub deps_waited: AtomicU64,
 }
 
 fn prec_slot(p: Precision) -> usize {
@@ -118,6 +123,8 @@ impl Metrics {
             prefetch_late: self.prefetch_late.load(Ordering::Relaxed),
             prefetch_dropped: self.prefetch_dropped.load(Ordering::Relaxed),
             xfer_busy_ns: self.xfer_busy_ns.load(Ordering::Relaxed),
+            deps_static: self.deps_static.load(Ordering::Relaxed),
+            deps_waited: self.deps_waited.load(Ordering::Relaxed),
         }
     }
 }
@@ -165,6 +172,8 @@ pub struct MetricsSnapshot {
     pub prefetch_late: u64,
     pub prefetch_dropped: u64,
     pub xfer_busy_ns: u64,
+    pub deps_static: u64,
+    pub deps_waited: u64,
 }
 
 impl MetricsSnapshot {
@@ -212,6 +221,8 @@ impl MetricsSnapshot {
             ("prefetch_dropped", Json::num(self.prefetch_dropped as f64)),
             ("prefetch_overlap", Json::num(self.prefetch_overlap())),
             ("xfer_busy_s", Json::num(self.xfer_busy_ns as f64 / 1e9)),
+            ("deps_static", Json::num(self.deps_static as f64)),
+            ("deps_waited", Json::num(self.deps_waited as f64)),
         ])
     }
 }

@@ -4,16 +4,17 @@
 //! Two interchangeable backends expose the same API (`Runtime`, `Kernel`,
 //! `DevBuf`):
 //!
-//! * [`host`] (default) — a pure-Rust executor that dispatches each
+//! * `host` (default) — a pure-Rust executor that dispatches each
 //!   artifact's *semantics* (POTRF/TRSM/GEMM/SYRK/quantize, all operands
 //!   f64 on the wire, output rounded to the kernel's logical precision)
 //!   on the host. It validates against the same oracles as the PJRT path
 //!   and keeps the whole test suite runnable offline, with no native XLA
 //!   library.
-//! * [`pjrt`] (feature `pjrt`) — the original PJRT CPU client executing
-//!   the HLO text artifacts emitted by `python/compile/aot.py`. Enabling
-//!   it requires adding the `xla` crate (xla_extension 0.5.1) to
-//!   `Cargo.toml`; see DESIGN.md §2.
+//! * `pjrt` (feature `pjrt`) — the original PJRT CPU client executing
+//!   the HLO text artifacts emitted by `python/compile/aot.py`. The
+//!   vendored `xla` stub keeps it type-checking offline; swap in the
+//!   real `xla` crate (xla_extension 0.5.1) to execute — see DESIGN.md
+//!   §2.
 //!
 //! Either way the executor-facing contract is identical: `upload` is an
 //! H2D copy producing an immutable device tile, `Kernel::run` consumes

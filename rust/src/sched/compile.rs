@@ -1,0 +1,476 @@
+//! The schedule compiler: lower a [`Schedule`] into an explicit IR.
+//!
+//! The paper's whole premise (§III-B) is that the job order is fixed
+//! *before* execution — yet most of the runtime used to rediscover that
+//! order piecemeal: the cache's oracle policy replayed the schedule with
+//! a global counter that drifted per device, the transfer plan re-derived
+//! operand lists job by job, and every dependency was re-checked against
+//! the `ProgressTable` even when the producer was the consumer's own
+//! stream. [`CompiledSchedule`] computes all of it once, ahead of time:
+//!
+//! * **read/write sets** per job, in the exact order the executors
+//!   consume them (`Job::operands` order);
+//! * **wait lists** — the subset of each job's dependencies produced on a
+//!   *different* stream. Same-stream dependencies are ordered by the
+//!   stream's own program order and need no runtime check at all;
+//! * **per-(tile, device) next-use tables** over the device-local access
+//!   sequence, giving exact reuse distances — what makes the Belady (V4)
+//!   eviction policy implementable (`cache::policy::Policy::Belady`);
+//! * **estimated job start times** from the hardware profile, from which
+//!   the transfer plan derives per-load deadlines (latest start for a
+//!   prefetch to land before its consumer) so the engine can order loads
+//!   by deadline slack instead of plain job index.
+//!
+//! The canonical linear order is the schedule's own creation order
+//! (left-looking: columns left to right, rows top to bottom — the order
+//! a single-stream DES observes exactly; multi-stream executors observe
+//! each stream's projection of it, which is what the wait lists and the
+//! per-job `access_base` anchors are defined against).
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use crate::config::{EvictionKind, RunConfig};
+use crate::sched::{device_of_row, stream_of_row, Job, Schedule};
+
+/// One job, lowered: placement, data sets, and static-analysis results.
+#[derive(Debug)]
+pub struct CompiledJob {
+    pub job: Job,
+    /// global stream id executing this job
+    pub gid: usize,
+    /// position within that stream's job list
+    pub pos: usize,
+    pub device: usize,
+    /// read-only operand tiles, in executor consumption order
+    pub reads: Vec<(usize, usize)>,
+    /// tile this job finalizes
+    pub write: (usize, usize),
+    /// reads produced by a *different* stream — the only dependencies
+    /// that need a runtime `ProgressTable` wait; everything else is
+    /// guaranteed final by the stream's own program order
+    pub waits: Vec<(usize, usize)>,
+    /// first index of this job's reads in the device-local access
+    /// sequence. The executors feed the *minimum* base across a device's
+    /// active streams to `CacheTable::set_clock` — the conservative
+    /// horizon the Belady policy compares next-uses against (a horizon
+    /// past a lagging stream would hide its pending reuses)
+    pub access_base: u64,
+    /// estimated start time on the run's hardware profile, seconds
+    /// (per-stream cumulative cost; ignores cross-stream waits — a
+    /// prioritization estimate, not a simulation)
+    pub est_start: f64,
+    /// estimated completion time, seconds
+    pub est_end: f64,
+}
+
+/// Per-device table: tile → sorted device-local access indices.
+///
+/// `next_use(tile, now)` answers "when is this tile read again at or
+/// after `now`?" in O(log uses) — the primitive behind the Belady (V4)
+/// eviction policy. Built from a [`CompiledSchedule`] (exact static
+/// reuse distances) or from any recorded access trace (tests).
+#[derive(Debug, Default)]
+pub struct NextUse {
+    uses: HashMap<(usize, usize), Vec<u64>>,
+    /// total accesses in the sequence this table indexes
+    pub total: u64,
+}
+
+impl NextUse {
+    /// Build from an explicit access sequence (0-indexed).
+    pub fn from_accesses<I: IntoIterator<Item = (usize, usize)>>(accesses: I) -> NextUse {
+        let mut uses: HashMap<(usize, usize), Vec<u64>> = HashMap::new();
+        let mut seq = 0u64;
+        for tile in accesses {
+            uses.entry(tile).or_default().push(seq);
+            seq += 1;
+        }
+        NextUse { uses, total: seq }
+    }
+
+    /// Next access of `tile` at or after `now`; `u64::MAX` if never again.
+    pub fn next_use(&self, tile: (usize, usize), now: u64) -> u64 {
+        match self.uses.get(&tile) {
+            None => u64::MAX,
+            Some(v) => match v.binary_search(&now) {
+                Ok(i) => v[i],
+                Err(i) if i < v.len() => v[i],
+                _ => u64::MAX,
+            },
+        }
+    }
+}
+
+/// The compiled schedule: the static side of the execution, made
+/// explicit. Both executors, the cache policies and the transfer plan
+/// consume this instead of re-deriving schedule facts at run time.
+#[derive(Debug)]
+pub struct CompiledSchedule {
+    pub nt: usize,
+    pub ndev: usize,
+    pub streams_per_dev: usize,
+    /// eviction kind this IR was compiled for — the next-use tables are
+    /// only materialized for the policy that consumes them
+    pub eviction: EvictionKind,
+    /// jobs in canonical linear order (the schedule's creation order)
+    pub jobs: Vec<CompiledJob>,
+    /// per global stream id: indices into `jobs`, in stream program order
+    pub stream_jobs: Vec<Vec<usize>>,
+    /// per device: exact next-use tables over the device-local sequence
+    next_use: Vec<Arc<NextUse>>,
+    /// one global next-use table over the canonical order (the legacy
+    /// oracle policy's input; built once, shared across devices)
+    global_next_use: Arc<NextUse>,
+    /// per device: total operand accesses
+    pub device_accesses: Vec<u64>,
+    /// total operand reads across all jobs
+    pub total_reads: u64,
+    /// dependencies resolved statically (same-stream program order)
+    pub static_deps: u64,
+    /// dependencies that still need a runtime wait (cross-stream)
+    pub cross_deps: u64,
+}
+
+/// Canonical sort key reproducing the schedule builders' creation order
+/// for both the left-looking and right-looking traversals.
+fn canon_key(job: &Job) -> (usize, u8, usize, usize) {
+    match *job {
+        Job::TileLL { m, k } => (k, 0, m, 0),
+        Job::FactorDiagRL { k } => (k, 0, k, 0),
+        Job::FactorOffRL { m, k } => (k, 1, m, 0),
+        Job::UpdateRL { i, j, k } => (k, 2, i, j),
+    }
+}
+
+impl CompiledSchedule {
+    /// Lower `schedule` for a run on `cfg`'s hardware. O(total operand
+    /// reads) time and memory.
+    pub fn compile(schedule: &Schedule, cfg: &RunConfig) -> CompiledSchedule {
+        let (nt, ndev, spd) = (schedule.nt, schedule.ndev, schedule.streams_per_dev);
+        let nstreams = schedule.total_streams();
+
+        // canonical order: merge the per-stream lists by creation key
+        let mut flat: Vec<(usize, usize)> = Vec::with_capacity(schedule.total_jobs());
+        for (gid, jobs) in schedule.jobs.iter().enumerate() {
+            for pos in 0..jobs.len() {
+                flat.push((gid, pos));
+            }
+        }
+        flat.sort_by_key(|&(gid, pos)| canon_key(&schedule.jobs[gid][pos]));
+
+        let tile_bytes = (cfg.ts * cfg.ts * 8) as u64;
+        let f64_prec = crate::precision::Precision::F64;
+        let kernel_cost = |flops: f64| cfg.hw.kernel_time(flops, f64_prec, cfg.ts);
+        let t3 = (cfg.ts as f64).powi(3);
+
+        let mut compiled = Vec::with_capacity(flat.len());
+        let mut stream_jobs: Vec<Vec<usize>> = vec![Vec::new(); nstreams];
+        // next-use tables are Θ(total reads) in memory; materialize only
+        // the one the run's eviction policy consumes (access bases need
+        // just the per-device counters)
+        let wants_device_tables = cfg.eviction == EvictionKind::Belady;
+        let wants_global_table = cfg.eviction == EvictionKind::Oracle;
+        let mut dev_count = vec![0u64; ndev];
+        let mut dev_seq: Vec<Vec<(usize, usize)>> = vec![Vec::new(); ndev];
+        let mut stream_clock = vec![0f64; nstreams];
+        let (mut total_reads, mut static_deps, mut cross_deps) = (0u64, 0u64, 0u64);
+
+        for (gid, pos) in flat {
+            let job = schedule.jobs[gid][pos];
+            let device = gid / spd;
+            let reads = job.operands();
+            let write = job.target();
+            let mut waits = Vec::new();
+            for &(i, j) in &reads {
+                if schedule.global_stream(i) == gid {
+                    static_deps += 1;
+                } else {
+                    cross_deps += 1;
+                    waits.push((i, j));
+                }
+            }
+            total_reads += reads.len() as u64;
+            let access_base = dev_count[device];
+            dev_count[device] += reads.len() as u64;
+            if wants_device_tables {
+                dev_seq[device].extend_from_slice(&reads);
+            }
+
+            // cost estimate: kernel flops at F64 + one transfer per read,
+            // plus the accumulator round trip — a deadline heuristic, not
+            // a model (the DES owns timing fidelity)
+            let flops = match job {
+                Job::TileLL { m, k } => crate::sched::job_flops(m, k, cfg.ts),
+                Job::FactorDiagRL { .. } => t3 / 3.0,
+                Job::FactorOffRL { .. } => t3,
+                Job::UpdateRL { i, j, .. } => {
+                    if i == j {
+                        t3
+                    } else {
+                        2.0 * t3
+                    }
+                }
+            };
+            let xfer = cfg.hw.transfer_time(tile_bytes, true, true, true);
+            let cost = kernel_cost(flops) + (reads.len() as f64 + 2.0) * xfer;
+            let est_start = stream_clock[gid];
+            let est_end = est_start + cost;
+            stream_clock[gid] = est_end;
+
+            stream_jobs[gid].push(compiled.len());
+            compiled.push(CompiledJob {
+                job,
+                gid,
+                pos,
+                device,
+                reads,
+                write,
+                waits,
+                access_base,
+                est_start,
+                est_end,
+            });
+        }
+
+        let device_accesses = dev_count;
+        let next_use = dev_seq
+            .into_iter()
+            .map(|s| Arc::new(NextUse::from_accesses(s)))
+            .collect();
+        let global_next_use = if wants_global_table {
+            let global_reads = compiled.iter().flat_map(|cj| cj.reads.iter().copied());
+            Arc::new(NextUse::from_accesses(global_reads))
+        } else {
+            Arc::new(NextUse::default())
+        };
+
+        CompiledSchedule {
+            nt,
+            ndev,
+            streams_per_dev: spd,
+            eviction: cfg.eviction,
+            jobs: compiled,
+            stream_jobs,
+            next_use,
+            global_next_use,
+            device_accesses,
+            total_reads,
+            static_deps,
+            cross_deps,
+        }
+    }
+
+    pub fn total_jobs(&self) -> usize {
+        self.jobs.len()
+    }
+
+    /// Global stream id owning tile row `m` — same helpers as
+    /// [`Schedule::global_stream`], so the static-dependency skip can
+    /// never drift from the placement the schedule actually used.
+    pub fn owner_gid(&self, m: usize) -> usize {
+        let d = device_of_row(m, self.ndev);
+        d * self.streams_per_dev + stream_of_row(m, self.ndev, self.streams_per_dev)
+    }
+
+    /// The compiled job at stream `gid`, position `pos`.
+    pub fn job_at(&self, gid: usize, pos: usize) -> &CompiledJob {
+        &self.jobs[self.stream_jobs[gid][pos]]
+    }
+
+    /// Cross-stream dependencies of (gid, pos) — the only tiles the
+    /// executor must wait on.
+    pub fn waits(&self, gid: usize, pos: usize) -> &[(usize, usize)] {
+        &self.job_at(gid, pos).waits
+    }
+
+    /// Operand read set of (gid, pos), in consumption order.
+    pub fn reads(&self, gid: usize, pos: usize) -> &[(usize, usize)] {
+        &self.job_at(gid, pos).reads
+    }
+
+    /// First device-local access index of (gid, pos)'s reads.
+    pub fn access_base(&self, gid: usize, pos: usize) -> u64 {
+        self.job_at(gid, pos).access_base
+    }
+
+    /// Exact next-use table for `dev` (the V4/Belady input). Empty
+    /// unless the compile config's eviction policy consumes it
+    /// (`oracle`/`belady`) — the tables are Θ(total reads) and skipped
+    /// otherwise.
+    pub fn next_use_table(&self, dev: usize) -> Arc<NextUse> {
+        self.next_use[dev].clone()
+    }
+
+    /// Global canonical-order next-use table (the legacy oracle input);
+    /// built once at compile time and shared by every device's policy.
+    /// Empty unless the compile config's eviction policy consumes it.
+    pub fn global_next_use(&self) -> Arc<NextUse> {
+        self.global_next_use.clone()
+    }
+
+    /// Consistency check for tests: per-stream projections match the
+    /// source schedule, wait lists never contain same-stream tiles, and
+    /// access bases tile the device sequences exactly.
+    pub fn validate(&self, schedule: &Schedule) -> Result<(), String> {
+        if self.jobs.len() != schedule.total_jobs() {
+            return Err(format!("{} jobs vs {}", self.jobs.len(), schedule.total_jobs()));
+        }
+        let mut dev_cursor = vec![HashMap::new(); self.ndev];
+        for (gid, idxs) in self.stream_jobs.iter().enumerate() {
+            if idxs.len() != schedule.jobs[gid].len() {
+                return Err(format!("stream {gid}: {} vs {}", idxs.len(), schedule.jobs[gid].len()));
+            }
+            for (pos, &i) in idxs.iter().enumerate() {
+                let cj = &self.jobs[i];
+                if cj.job != schedule.jobs[gid][pos] || cj.gid != gid || cj.pos != pos {
+                    return Err(format!("stream {gid} pos {pos}: {cj:?}"));
+                }
+                for &(r, _) in &cj.waits {
+                    if self.owner_gid(r) == gid {
+                        return Err(format!("same-stream wait in {cj:?}"));
+                    }
+                }
+                if !cj.reads.is_empty() {
+                    dev_cursor[cj.device].insert(cj.access_base, cj.reads.len() as u64);
+                }
+            }
+        }
+        for (dev, spans) in dev_cursor.iter().enumerate() {
+            let mut expect = 0u64;
+            let mut bases: Vec<_> = spans.iter().map(|(&b, &n)| (b, n)).collect();
+            bases.sort_unstable();
+            for (b, n) in bases {
+                if b != expect {
+                    return Err(format!("device {dev}: access gap at {b} (expected {expect})"));
+                }
+                expect = b + n;
+            }
+            if expect != self.device_accesses[dev] {
+                let got = self.device_accesses[dev];
+                return Err(format!("device {dev}: {got} accesses vs {expect}"));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Mode, Version};
+
+    fn cfg(n: usize, ts: usize) -> RunConfig {
+        RunConfig {
+            n,
+            ts,
+            version: Version::V2,
+            mode: Mode::Model,
+            eviction: EvictionKind::Belady,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn compile_validates_for_random_topologies() {
+        let mut rng = crate::util::rng::Rng::new(11);
+        for _ in 0..30 {
+            let nt = 1 + rng.below(16) as usize;
+            let ndev = 1 + rng.below(3) as usize;
+            let spd = 1 + rng.below(3) as usize;
+            let s = Schedule::left_looking(nt, ndev, spd);
+            let ir = CompiledSchedule::compile(&s, &cfg(nt * 128, 128));
+            ir.validate(&s).unwrap();
+            let r = Schedule::right_looking(nt, ndev, spd);
+            let irr = CompiledSchedule::compile(&r, &cfg(nt * 128, 128));
+            irr.validate(&r).unwrap();
+        }
+    }
+
+    #[test]
+    fn canonical_order_is_creation_order() {
+        // single stream: the canonical order IS the stream's job list
+        let s = Schedule::left_looking(6, 1, 1);
+        let ir = CompiledSchedule::compile(&s, &cfg(6 * 128, 128));
+        let jobs: Vec<Job> = ir.jobs.iter().map(|c| c.job).collect();
+        assert_eq!(jobs, s.jobs[0]);
+        // multi-stream: keys are non-decreasing along the linear order
+        let s = Schedule::left_looking(9, 2, 2);
+        let ir = CompiledSchedule::compile(&s, &cfg(9 * 128, 128));
+        for w in ir.jobs.windows(2) {
+            assert!(canon_key(&w[0].job) < canon_key(&w[1].job));
+        }
+    }
+
+    #[test]
+    fn wait_lists_are_cross_stream_only() {
+        let s = Schedule::left_looking(8, 2, 2);
+        let ir = CompiledSchedule::compile(&s, &cfg(8 * 128, 128));
+        for cj in &ir.jobs {
+            // same-row reads never appear in the wait list
+            let (row, _) = cj.write;
+            for &(i, _) in &cj.waits {
+                assert_ne!(ir.owner_gid(i), ir.owner_gid(row));
+            }
+            // a job whose panel row lives on its own stream waits on nothing
+            if let Job::TileLL { m, k } = cj.job {
+                if ir.owner_gid(k) == ir.owner_gid(m) {
+                    assert!(cj.waits.is_empty(), "{cj:?}");
+                }
+            }
+        }
+        assert_eq!(
+            ir.static_deps + ir.cross_deps,
+            ir.total_reads,
+            "every read classified exactly once"
+        );
+        assert!(ir.static_deps > 0, "same-row reads must resolve statically");
+    }
+
+    #[test]
+    fn next_use_tables_are_exact_per_device() {
+        let s = Schedule::left_looking(6, 2, 1);
+        let ir = CompiledSchedule::compile(&s, &cfg(6 * 128, 128));
+        // rebuild each device sequence from the IR and cross-check
+        for dev in 0..2 {
+            let mut seq = Vec::new();
+            for cj in &ir.jobs {
+                if cj.device == dev {
+                    assert_eq!(cj.access_base, seq.len() as u64);
+                    seq.extend_from_slice(&cj.reads);
+                }
+            }
+            let nu = ir.next_use_table(dev);
+            assert_eq!(nu.total, seq.len() as u64);
+            for (idx, &tile) in seq.iter().enumerate() {
+                assert_eq!(nu.next_use(tile, idx as u64), idx as u64, "self-lookup");
+            }
+            assert_eq!(nu.next_use((99, 99), 0), u64::MAX);
+        }
+    }
+
+    #[test]
+    fn next_use_from_trace() {
+        let nu = NextUse::from_accesses([(0, 0), (1, 0), (0, 0), (2, 1)]);
+        assert_eq!(nu.total, 4);
+        assert_eq!(nu.next_use((0, 0), 0), 0);
+        assert_eq!(nu.next_use((0, 0), 1), 2);
+        assert_eq!(nu.next_use((0, 0), 3), u64::MAX);
+        assert_eq!(nu.next_use((1, 0), 2), u64::MAX);
+    }
+
+    #[test]
+    fn est_times_monotone_per_stream() {
+        let s = Schedule::left_looking(10, 2, 2);
+        let ir = CompiledSchedule::compile(&s, &cfg(10 * 128, 128));
+        for gid in 0..s.total_streams() {
+            let mut prev_end = 0.0;
+            for pos in 0..ir.stream_jobs[gid].len() {
+                let cj = ir.job_at(gid, pos);
+                assert!(cj.est_start >= prev_end - 1e-15);
+                assert!(cj.est_end > cj.est_start);
+                prev_end = cj.est_end;
+            }
+        }
+    }
+}

@@ -14,9 +14,17 @@
 //!
 //! The right-looking variant (the ablation §II positions against) is
 //! expressed in the same framework with finer-grained eager tasks.
+//!
+//! [`CompiledSchedule`] (the `compile` submodule) lowers a schedule into
+//! an explicit IR — per-job read/write sets, cross-stream wait lists,
+//! exact per-(tile, device) next-use tables and estimated start times —
+//! which the executors, the cache policies (V4/Belady) and the transfer
+//! plan consume instead of re-deriving schedule facts at run time.
 
+mod compile;
 mod progress;
 
+pub use compile::{CompiledJob, CompiledSchedule, NextUse};
 pub use progress::{ProgressTable, ReadyTimes};
 
 /// One schedulable unit.

@@ -18,7 +18,8 @@ use crate::cache::TileKey;
 
 use super::plan::XferPlan;
 
-/// One queued transfer, ordered so the earliest consumer pops first.
+/// One queued transfer, ordered so the load with the least deadline
+/// slack pops first (ties broken by consumer position, then FIFO).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct QueuedLoad {
     pub tile: TileKey,
@@ -26,6 +27,9 @@ pub struct QueuedLoad {
     pub gid: usize,
     /// position of the consuming job in that stream's job list
     pub consumer_pos: usize,
+    /// latest estimated start (µs of schedule time) for the load to land
+    /// before its consumer — from the compiled schedule via the plan
+    pub deadline_us: u64,
     /// FIFO tie-break within a priority class
     pub seq: u64,
 }
@@ -33,10 +37,11 @@ pub struct QueuedLoad {
 impl Ord for QueuedLoad {
     fn cmp(&self, other: &Self) -> std::cmp::Ordering {
         // reversed: BinaryHeap is a max-heap, we want the smallest
-        // (consumer_pos, seq) — the most urgent planned load — on top
+        // (deadline, consumer_pos, seq) — the most urgent load — on top
         other
-            .consumer_pos
-            .cmp(&self.consumer_pos)
+            .deadline_us
+            .cmp(&self.deadline_us)
+            .then_with(|| other.consumer_pos.cmp(&self.consumer_pos))
             .then_with(|| other.seq.cmp(&self.seq))
             .then_with(|| (other.gid, other.tile).cmp(&(self.gid, self.tile)))
     }
@@ -186,6 +191,7 @@ impl XferEngine {
                 tile: l.tile,
                 gid,
                 consumer_pos: l.consumer_pos,
+                deadline_us: l.deadline_us,
                 seq: self.seq.fetch_add(1, Ordering::Relaxed),
             });
         }
@@ -222,7 +228,7 @@ impl XferEngine {
 mod tests {
     use super::*;
     use crate::config::{Mode, RunConfig, Version};
-    use crate::sched::Schedule;
+    use crate::sched::{CompiledSchedule, Schedule};
 
     fn engine(depth: usize) -> (Schedule, XferEngine) {
         let s = Schedule::left_looking(8, 1, 2);
@@ -235,18 +241,18 @@ mod tests {
             prefetch_depth: depth,
             ..Default::default()
         };
-        let plan = XferPlan::build(&s, &cfg);
+        let plan = XferPlan::build(&CompiledSchedule::compile(&s, &cfg), &cfg);
         let e = XferEngine::new(plan, 1, s.total_streams());
         (s, e)
     }
 
     #[test]
-    fn queue_pops_most_urgent_first() {
+    fn queue_pops_least_slack_first() {
         let q = DevQueue::new();
-        q.push(QueuedLoad { tile: (3, 0), gid: 0, consumer_pos: 9, seq: 0 });
-        q.push(QueuedLoad { tile: (1, 0), gid: 0, consumer_pos: 2, seq: 1 });
-        q.push(QueuedLoad { tile: (2, 0), gid: 0, consumer_pos: 2, seq: 2 });
-        assert_eq!(q.try_pop().unwrap().tile, (1, 0), "lowest pos, then FIFO");
+        q.push(QueuedLoad { tile: (3, 0), gid: 0, consumer_pos: 9, deadline_us: 900, seq: 0 });
+        q.push(QueuedLoad { tile: (1, 0), gid: 0, consumer_pos: 2, deadline_us: 100, seq: 1 });
+        q.push(QueuedLoad { tile: (2, 0), gid: 1, consumer_pos: 5, deadline_us: 100, seq: 2 });
+        assert_eq!(q.try_pop().unwrap().tile, (1, 0), "earliest deadline, then pos");
         assert_eq!(q.try_pop().unwrap().tile, (2, 0));
         assert_eq!(q.try_pop().unwrap().tile, (3, 0));
         assert!(q.try_pop().is_none());

@@ -10,16 +10,19 @@
 //! This module exploits that determinism in three parts:
 //!
 //! * [`plan`] — derives per-device **prefetch plans** from a
-//!   [`crate::sched::Schedule`] + cache policy: for each job position,
-//!   the operand tiles needed within a lookahead window of
-//!   `prefetch_depth` jobs, filtered by what the cache policy can
-//!   realistically keep resident (tiles V2/V3's steal pass would
+//!   [`crate::sched::CompiledSchedule`] + cache policy: for each job
+//!   position, the operand tiles needed within a lookahead window of
+//!   `prefetch_depth` jobs, each stamped with a **transfer deadline**
+//!   (latest start for the load to land before its consumer, from the
+//!   IR's estimated job start times), filtered by what the cache policy
+//!   can realistically keep resident (tiles V2/V3's steal pass would
 //!   immediately reclaim are dropped at plan time).
 //! * [`engine`] — the coordination state for one dedicated transfer
-//!   worker per device: priority queues of planned loads (earliest
-//!   consumer first), a pinned staging-buffer pool, compute-position
-//!   watermarks for **cancellation** when compute overtakes the plan,
-//!   and provenance sets for prefetch-hit accounting.
+//!   worker per device: priority queues of planned loads ordered by
+//!   deadline slack (the load closest to missing its consumer first), a
+//!   pinned staging-buffer pool, compute-position watermarks for
+//!   **cancellation** when compute overtakes the plan, and provenance
+//!   sets for prefetch-hit accounting.
 //! * overlap accounting — `prefetch_issued` / `prefetch_hits` /
 //!   `prefetch_late` / `prefetch_dropped` and the transfer-stream busy
 //!   fraction land in [`crate::metrics::Metrics`], the `Pref` lane in

@@ -1,4 +1,4 @@
-//! Prefetch planning: from the static schedule + cache policy, derive
+//! Prefetch planning: from the compiled schedule + cache policy, derive
 //! per-stream *prefetch plans* before execution begins.
 //!
 //! Because the schedule is static (§III-B), the full operand sequence of
@@ -10,6 +10,14 @@
 //! `depth` jobs before its consumer — deep enough to hide multi-tile
 //! GEMM operand trains, early enough that the cache-residency prediction
 //! below still holds.
+//!
+//! Each planned load also carries a **deadline**: the latest (estimated)
+//! time the transfer can start and still land before its consumer,
+//! computed from the [`crate::sched::CompiledSchedule`]'s per-job start
+//! estimates minus the profile's transfer time. The engine's queues pop
+//! by deadline slack — the load closest to missing its consumer goes
+//! first — instead of plain job index, so a near-deadline load for a
+//! late stream is not starved by far-future loads of an early one.
 //!
 //! The plan is filtered by what the cache policy can keep: only the
 //! operand-caching versions (V2/V3 and the right-looking ablation) get a
@@ -23,7 +31,7 @@ use std::collections::VecDeque;
 
 use crate::cache::TileKey;
 use crate::config::{RunConfig, Version};
-use crate::sched::Schedule;
+use crate::sched::{device_of_row, CompiledSchedule};
 
 /// One planned transfer: load `tile` onto the consuming stream's device
 /// before that stream reaches job position `consumer_pos`.
@@ -32,6 +40,9 @@ pub struct PlannedLoad {
     pub tile: TileKey,
     /// position (index into the stream's job list) of the consuming job
     pub consumer_pos: usize,
+    /// estimated latest start (µs of schedule time) for the load to land
+    /// before its consumer — the transfer queues' priority key
+    pub deadline_us: u64,
 }
 
 /// Per-stream plan: `triggers[p]` holds the loads to enqueue when the
@@ -65,7 +76,8 @@ impl XferPlan {
     }
 
     /// Loads to hand the transfer engine when stream `gid` starts job
-    /// position `pos` (empty for unplanned streams/positions).
+    /// position `pos` (empty for unplanned streams/positions), most
+    /// urgent deadline first.
     pub fn loads_at(&self, gid: usize, pos: usize) -> &[PlannedLoad] {
         self.streams
             .get(gid)
@@ -74,10 +86,11 @@ impl XferPlan {
             .unwrap_or(&[])
     }
 
-    /// Build the plan for a schedule under a run config. Returns a
-    /// disabled plan when `cfg.prefetch_depth == 0` or the version keeps
-    /// no operand cache (there is nowhere for a prefetch to stick).
-    pub fn build(schedule: &Schedule, cfg: &RunConfig) -> XferPlan {
+    /// Build the plan from a compiled schedule under a run config.
+    /// Returns a disabled plan when `cfg.prefetch_depth == 0` or the
+    /// version keeps no operand cache (there is nowhere for a prefetch
+    /// to stick).
+    pub fn build(ir: &CompiledSchedule, cfg: &RunConfig) -> XferPlan {
         let depth = cfg.prefetch_depth;
         let caches_operands =
             matches!(cfg.version, Version::V2 | Version::V3 | Version::RightLooking);
@@ -95,24 +108,25 @@ impl XferPlan {
         // inputs), so the estimate is conservative — an MxP run may drop
         // loads that would in fact have fit, never the reverse.
         let tile_bytes = (cfg.ts * cfg.ts * 8) as u64;
-        let resv = tile_bytes * cfg.streams_per_dev as u64;
+        let resv = tile_bytes * ir.streams_per_dev as u64;
         let usable = cfg.device_vmem().saturating_sub(resv);
         let budget_tiles =
-            ((usable / tile_bytes.max(1)) as usize / cfg.streams_per_dev.max(1)).max(1);
+            ((usable / tile_bytes.max(1)) as usize / ir.streams_per_dev.max(1)).max(1);
 
         let mut plan = XferPlan {
             depth,
-            streams: Vec::with_capacity(schedule.total_streams()),
+            streams: Vec::with_capacity(ir.stream_jobs.len()),
             total_planned: 0,
             dropped_over_budget: 0,
         };
 
-        for jobs in &schedule.jobs {
-            let mut sp = StreamPlan { triggers: vec![Vec::new(); jobs.len()] };
+        for (gid, idxs) in ir.stream_jobs.iter().enumerate() {
+            let mut sp = StreamPlan { triggers: vec![Vec::new(); idxs.len()] };
             // sliding-window accounting: (job position, tiles planned)
             let mut window: VecDeque<(usize, usize)> = VecDeque::new();
             let mut in_window = 0usize;
-            for (pos, job) in jobs.iter().enumerate().skip(1) {
+            for pos in 1..idxs.len() {
+                let cj = ir.job_at(gid, pos);
                 while let Some(&(p, n)) = window.front() {
                     if p + depth < pos {
                         window.pop_front();
@@ -122,24 +136,34 @@ impl XferPlan {
                     }
                 }
                 let trigger = pos.saturating_sub(depth);
-                let ops = job.operands();
                 let mut planned = 0usize;
-                for tile in ops {
+                for &tile in &cj.reads {
                     // never plan the job's own target (the accumulator is
                     // uploaded by the compute stream, outside the cache)
-                    if tile == job.target() {
+                    if tile == cj.write {
                         continue;
                     }
                     if in_window + planned >= budget_tiles {
                         plan.dropped_over_budget += 1;
                         continue;
                     }
-                    sp.triggers[trigger].push(PlannedLoad { tile, consumer_pos: pos });
+                    let local = device_of_row(tile.0, ir.ndev) == cj.device;
+                    let dt = cfg.hw.transfer_time(tile_bytes, true, local, true);
+                    let deadline_us = ((cj.est_start - dt).max(0.0) * 1e6) as u64;
+                    sp.triggers[trigger].push(PlannedLoad {
+                        tile,
+                        consumer_pos: pos,
+                        deadline_us,
+                    });
                     planned += 1;
                 }
                 window.push_back((pos, planned));
                 in_window += planned;
                 plan.total_planned += planned;
+            }
+            // the warmup trigger (and any window merge) pops by deadline
+            for t in &mut sp.triggers {
+                t.sort_by_key(|l| (l.deadline_us, l.consumer_pos));
             }
             plan.streams.push(sp);
         }
@@ -151,6 +175,7 @@ impl XferPlan {
 mod tests {
     use super::*;
     use crate::config::Mode;
+    use crate::sched::Schedule;
 
     fn cfg(version: Version, n: usize, ts: usize, depth: usize) -> RunConfig {
         RunConfig {
@@ -164,13 +189,17 @@ mod tests {
         }
     }
 
+    fn build(s: &Schedule, cfg: &RunConfig) -> XferPlan {
+        XferPlan::build(&CompiledSchedule::compile(s, cfg), cfg)
+    }
+
     #[test]
     fn depth_zero_or_v1_is_disabled() {
         let s = Schedule::left_looking(8, 1, 2);
-        assert!(XferPlan::build(&s, &cfg(Version::V2, 1024, 128, 0)).is_empty());
-        assert!(XferPlan::build(&s, &cfg(Version::V1, 1024, 128, 4)).is_empty());
-        assert!(XferPlan::build(&s, &cfg(Version::Sync, 1024, 128, 4)).is_empty());
-        assert!(!XferPlan::build(&s, &cfg(Version::V2, 1024, 128, 4)).is_empty());
+        assert!(build(&s, &cfg(Version::V2, 1024, 128, 0)).is_empty());
+        assert!(build(&s, &cfg(Version::V1, 1024, 128, 4)).is_empty());
+        assert!(build(&s, &cfg(Version::Sync, 1024, 128, 4)).is_empty());
+        assert!(!build(&s, &cfg(Version::V2, 1024, 128, 4)).is_empty());
     }
 
     #[test]
@@ -178,7 +207,7 @@ mod tests {
         let nt = 8;
         let s = Schedule::left_looking(nt, 1, 1);
         let depth = 3;
-        let plan = XferPlan::build(&s, &cfg(Version::V2, nt * 128, 128, depth));
+        let plan = build(&s, &cfg(Version::V2, nt * 128, 128, depth));
         for pos in 0..s.jobs[0].len() {
             for l in plan.loads_at(0, pos) {
                 assert!(l.consumer_pos > pos, "load for {} triggered at {pos}", l.consumer_pos);
@@ -195,7 +224,7 @@ mod tests {
     fn plan_covers_all_operands_when_memory_ample() {
         let nt = 6;
         let s = Schedule::left_looking(nt, 1, 1);
-        let plan = XferPlan::build(&s, &cfg(Version::V2, nt * 128, 128, 2));
+        let plan = build(&s, &cfg(Version::V2, nt * 128, 128, 2));
         // expected: every operand of every job except each stream's job 0
         let want: usize = s.jobs[0].iter().skip(1).map(|j| j.operands().len()).sum();
         assert_eq!(plan.total_planned, want);
@@ -209,7 +238,7 @@ mod tests {
         let mut c = cfg(Version::V2, nt * 128, 128, 8);
         // room for ~6 tiles total: 2 reserved accumulators + 2 per stream
         c.vmem_bytes = Some((128 * 128 * 8) as u64 * 6);
-        let plan = XferPlan::build(&s, &c);
+        let plan = build(&s, &c);
         assert!(plan.dropped_over_budget > 0, "expected budget drops");
         // no trigger window may exceed the per-stream budget (2 tiles)
         for gid in 0..s.total_streams() {
@@ -223,7 +252,7 @@ mod tests {
     fn planned_tiles_are_real_operands_of_the_consumer() {
         let nt = 10;
         let s = Schedule::left_looking(nt, 2, 2);
-        let plan = XferPlan::build(&s, &cfg(Version::V3, nt * 128, 128, 4));
+        let plan = build(&s, &cfg(Version::V3, nt * 128, 128, 4));
         for (gid, jobs) in s.jobs.iter().enumerate() {
             for pos in 0..jobs.len() {
                 for l in plan.loads_at(gid, pos) {
@@ -239,10 +268,39 @@ mod tests {
     }
 
     #[test]
+    fn deadlines_respect_consumer_order_within_a_stream() {
+        // a later consumer can never have an *earlier* deadline than a
+        // same-tile-size load for an earlier consumer on the same stream
+        let nt = 10;
+        let s = Schedule::left_looking(nt, 1, 1);
+        let c = cfg(Version::V2, nt * 128, 128, 3);
+        let plan = build(&s, &c);
+        let mut by_consumer: Vec<(usize, u64)> = Vec::new();
+        for pos in 0..s.jobs[0].len() {
+            for l in plan.loads_at(0, pos) {
+                by_consumer.push((l.consumer_pos, l.deadline_us));
+            }
+        }
+        by_consumer.sort_unstable();
+        for w in by_consumer.windows(2) {
+            if w[0].0 < w[1].0 {
+                assert!(w[0].1 <= w[1].1, "{w:?}");
+            }
+        }
+        // triggers are sorted most-urgent first
+        for pos in 0..s.jobs[0].len() {
+            let loads = plan.loads_at(0, pos);
+            for w in loads.windows(2) {
+                assert!(w[0].deadline_us <= w[1].deadline_us);
+            }
+        }
+    }
+
+    #[test]
     fn right_looking_jobs_plan_their_panel_reads() {
         let nt = 6;
         let s = Schedule::right_looking(nt, 1, 2);
-        let plan = XferPlan::build(&s, &cfg(Version::RightLooking, nt * 128, 128, 2));
+        let plan = build(&s, &cfg(Version::RightLooking, nt * 128, 128, 2));
         assert!(!plan.is_empty());
     }
 }

@@ -1,0 +1,65 @@
+//! Golden smoke-run gate: the model-mode CLI on a small fixed problem
+//! must reproduce the committed metrics JSON byte for byte.
+//!
+//! The golden format (`RunReport::golden_metrics_string`) contains only
+//! integer counters — data volumes, transfer/task/cache counts — which
+//! the DES *counts* rather than models, so they are deterministic across
+//! platforms and toolchains. Virtual times are deliberately excluded.
+//!
+//! CI runs the same problem through the CLI (`factorize … --metrics-out`)
+//! and diffs against `tests/golden/smoke_metrics.json`; this test is the
+//! local equivalent. Regenerate after an intentional behavior change
+//! with:
+//!
+//! ```text
+//! UPDATE_GOLDEN=1 cargo test --test golden
+//! ```
+
+use ooc_cholesky::config::{Mode, RunConfig, Version};
+use ooc_cholesky::ooc;
+
+/// The CI smoke-run config: `factorize --n 1024 --ts 128 --version v3
+/// --mode model --seed 42` (everything else default).
+fn smoke_cfg() -> RunConfig {
+    RunConfig {
+        n: 1024,
+        ts: 128,
+        version: Version::V3,
+        mode: Mode::Model,
+        seed: 42,
+        ..Default::default()
+    }
+}
+
+fn golden_path() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/golden/smoke_metrics.json")
+}
+
+#[test]
+fn model_smoke_run_matches_golden() {
+    let report = ooc::factorize(&smoke_cfg(), None).unwrap();
+    let got = report.golden_metrics_string();
+    if std::env::var("UPDATE_GOLDEN").is_ok() {
+        std::fs::write(golden_path(), &got).unwrap();
+        eprintln!("golden updated at {:?}", golden_path());
+        return;
+    }
+    let want = std::fs::read_to_string(golden_path()).unwrap();
+    assert_eq!(
+        got, want,
+        "smoke-run metrics drifted from tests/golden/smoke_metrics.json — if the \
+         change is intentional, regenerate with UPDATE_GOLDEN=1 cargo test --test golden"
+    );
+}
+
+#[test]
+fn golden_run_is_deterministic_and_trace_invariant() {
+    // enabling the trace (CI uploads it as an artifact) must not perturb
+    // any counted metric
+    let a = ooc::factorize(&smoke_cfg(), None).unwrap();
+    let mut cfg = smoke_cfg();
+    cfg.trace = true;
+    let b = ooc::factorize(&cfg, None).unwrap();
+    assert_eq!(a.golden_metrics_string(), b.golden_metrics_string());
+    assert_eq!(a.elapsed_s, b.elapsed_s, "virtual time must be deterministic too");
+}

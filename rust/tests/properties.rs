@@ -249,7 +249,7 @@ fn planned_prefetches_land_on_the_owning_device() {
             ..Default::default()
         };
         let s = sched::Schedule::left_looking(nt, ndev, spd);
-        let plan = XferPlan::build(&s, &cfg);
+        let plan = XferPlan::build(&sched::CompiledSchedule::compile(&s, &cfg), &cfg);
         for gid in 0..s.total_streams() {
             let sid = s.stream_id(gid);
             for pos in 0..s.jobs[gid].len() {

@@ -1,0 +1,204 @@
+//! Schedule-IR properties: the compiled schedule must be an exact,
+//! sufficient description of what the executors do, and the V4 (Belady)
+//! policy built from it must be capacity-safe and miss-optimal.
+
+use std::sync::Arc;
+
+use ooc_cholesky::cache::{CacheTable, Policy};
+use ooc_cholesky::config::{Mode, RunConfig, Version};
+use ooc_cholesky::metrics::Metrics;
+use ooc_cholesky::sched::{CompiledSchedule, NextUse, Schedule};
+use ooc_cholesky::util::rng::Rng;
+use ooc_cholesky::{exec, ooc};
+
+const TILE: u64 = 100; // uniform byte size for trace replays
+
+/// Replay a recorded access trace through a CacheTable under `policy`,
+/// returning the miss count and asserting the capacity invariant after
+/// every step.
+fn replay_trace(trace: &[(usize, usize)], policy: Policy, capacity_tiles: u64) -> u64 {
+    let met = Metrics::new();
+    let mut cache: CacheTable<()> = CacheTable::with_policy(capacity_tiles * TILE, true, policy);
+    let mut misses = 0u64;
+    for (idx, &tile) in trace.iter().enumerate() {
+        // single-stream replay: the horizon IS the current access index
+        cache.set_clock(idx as u64);
+        cache.advance_access();
+        if cache.get(tile, &met).is_none() {
+            misses += 1;
+            assert!(cache.insert(tile, TILE, Arc::new(()), &met), "nothing pinned: must admit");
+        }
+        cache.check_invariants().unwrap();
+    }
+    misses
+}
+
+#[test]
+fn v4_is_capacity_safe_and_never_misses_more_than_other_policies() {
+    // Belady/MIN with the exact future (the recorded trace itself) is
+    // provably optimal among demand-caching policies at uniform tile
+    // size — LRU, FIFO and random can tie but never beat it; and the
+    // replay asserts the byte budget is respected on every access.
+    let mut rng = Rng::new(0x5EED_CAFE);
+    for trial in 0..40 {
+        let universe = 4 + rng.below(12) as usize;
+        let len = 50 + rng.below(400) as usize;
+        let trace: Vec<(usize, usize)> = (0..len)
+            .map(|_| {
+                let t = rng.below(universe as u64) as usize;
+                (t, t / 2)
+            })
+            .collect();
+        let cap = 2 + rng.below(universe as u64 / 2 + 1);
+        let belady = Arc::new(NextUse::from_accesses(trace.iter().copied()));
+        let v4 = replay_trace(&trace, Policy::Belady(belady), cap);
+        for other in [Policy::Lru, Policy::Fifo, Policy::Random(trial)] {
+            let name = other.name();
+            let m = replay_trace(&trace, other, cap);
+            assert!(
+                v4 <= m,
+                "trial {trial}: belady {v4} misses > {name} {m} (cap {cap}, len {len})"
+            );
+        }
+        // sanity: misses are at least the distinct-tile compulsory floor
+        let distinct = {
+            let mut s = trace.clone();
+            s.sort_unstable();
+            s.dedup();
+            s.len() as u64
+        };
+        assert!(v4 >= distinct, "trial {trial}: {v4} < compulsory {distinct}");
+    }
+}
+
+#[test]
+fn des_observed_order_matches_compiled_schedule() {
+    // For every stream, the order the DES starts jobs must be exactly
+    // the compiled per-stream job list; with a single stream the global
+    // observed order must equal the IR's canonical linear order.
+    for (ndev, spd) in [(1usize, 1usize), (1, 4), (2, 2), (3, 1)] {
+        let nt = 10;
+        let cfg = RunConfig {
+            n: nt * 128,
+            ts: 128,
+            version: Version::V3,
+            mode: Mode::Model,
+            ndev,
+            streams_per_dev: spd,
+            ..Default::default()
+        };
+        let schedule = Schedule::left_looking(nt, ndev, spd);
+        let ir = CompiledSchedule::compile(&schedule, &cfg);
+        ir.validate(&schedule).unwrap();
+
+        let shape = ooc::build_shape(&cfg);
+        let mut order = Vec::new();
+        exec::model::run_recording_order(&cfg, &shape, &mut order).unwrap();
+        assert_eq!(order.len(), schedule.total_jobs());
+
+        // per-stream projection: positions strictly sequential, and the
+        // job at each position is the compiled job
+        let mut cursor = vec![0usize; schedule.total_streams()];
+        for &(gid, pos) in &order {
+            assert_eq!(pos, cursor[gid], "stream {gid} ran out of order");
+            assert_eq!(ir.job_at(gid, pos).job, schedule.jobs[gid][pos]);
+            cursor[gid] += 1;
+        }
+        for (gid, &c) in cursor.iter().enumerate() {
+            assert_eq!(c, schedule.jobs[gid].len(), "stream {gid} incomplete");
+        }
+
+        if ndev * spd == 1 {
+            let observed: Vec<_> =
+                order.iter().map(|&(gid, pos)| schedule.jobs[gid][pos]).collect();
+            let canonical: Vec<_> = ir.jobs.iter().map(|cj| cj.job).collect();
+            assert_eq!(observed, canonical, "single stream must follow canonical order");
+        }
+
+        // determinism: a second run observes the identical order
+        let mut order2 = Vec::new();
+        exec::model::run_recording_order(&cfg, &shape, &mut order2).unwrap();
+        assert_eq!(order, order2);
+    }
+}
+
+#[test]
+fn compiled_wait_lists_are_sufficient() {
+    // Replaying the observed DES order, every job's cross-stream waits
+    // must already be finalized when the job starts — i.e. the IR's wait
+    // lists capture ALL dependencies the runtime actually needs.
+    for version in [Version::V3, Version::RightLooking] {
+        let cfg = RunConfig {
+            n: 8 * 128,
+            ts: 128,
+            version,
+            mode: Mode::Model,
+            ndev: 2,
+            streams_per_dev: 2,
+            ..Default::default()
+        };
+        let schedule = match version {
+            Version::RightLooking => Schedule::right_looking(8, 2, 2),
+            _ => Schedule::left_looking(8, 2, 2),
+        };
+        let ir = CompiledSchedule::compile(&schedule, &cfg);
+        let shape = ooc::build_shape(&cfg);
+        let mut order = Vec::new();
+        exec::model::run_recording_order(&cfg, &shape, &mut order).unwrap();
+
+        let mut finalized = std::collections::HashSet::new();
+        for &(gid, pos) in &order {
+            let cj = ir.job_at(gid, pos);
+            for w in &cj.waits {
+                assert!(
+                    finalized.contains(w),
+                    "{version:?}: job {:?} started before cross-stream dep {w:?}",
+                    cj.job
+                );
+            }
+            // same-stream reads must also be final — the static guarantee
+            // wait_dep relies on (the producer precedes in program order)
+            for r in &cj.reads {
+                if ir.owner_gid(r.0) == gid {
+                    assert!(
+                        finalized.contains(r),
+                        "{version:?}: static dep {r:?} of {:?} not final",
+                        cj.job
+                    );
+                }
+            }
+            finalized.insert(cj.write);
+        }
+    }
+}
+
+#[test]
+fn v4_end_to_end_in_des_under_pressure() {
+    // pressured DES run with one stream per device: the device-local
+    // execution order is exactly the canonical order, so Belady is the
+    // true MIN and can never regress misses vs V3's LRU; determinism of
+    // the run must hold too
+    let mk = |eviction| RunConfig {
+        n: 24 * 1024,
+        ts: 2048,
+        version: Version::V3,
+        mode: Mode::Model,
+        ndev: 2,
+        streams_per_dev: 1,
+        vmem_bytes: Some((2048 * 2048 * 8) as u64 * 40), // 40 tiles vs 78 in play
+        eviction,
+        ..Default::default()
+    };
+    let v3 = ooc::factorize(&mk(ooc_cholesky::config::EvictionKind::Lru), None).unwrap();
+    let v4 = ooc::factorize(&mk(ooc_cholesky::config::EvictionKind::Belady), None).unwrap();
+    assert!(v3.metrics.cache_evictions > 0, "no pressure — test misconfigured");
+    assert!(
+        v4.metrics.cache_misses <= v3.metrics.cache_misses,
+        "v4 {} > v3 {}",
+        v4.metrics.cache_misses,
+        v3.metrics.cache_misses
+    );
+    let v4b = ooc::factorize(&mk(ooc_cholesky::config::EvictionKind::Belady), None).unwrap();
+    assert_eq!(v4.metrics.cache_misses, v4b.metrics.cache_misses);
+    assert_eq!(v4.elapsed_s, v4b.elapsed_s);
+}
