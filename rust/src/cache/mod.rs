@@ -15,6 +15,14 @@
 //! device buffers — a steal drops the table's reference, and the actual
 //! device memory is released when in-flight users drop theirs), while the
 //! DES stores `()` and only the byte accounting matters.
+//!
+//! **Byte-width invariant.** Entries are charged at the tile's *logical*
+//! precision width (`ts² · Precision::width()`, the `bytes` both
+//! executors pass from the compiled schedule / host tile tags), never a
+//! flat ts²·8. Occupancy is therefore precision-true under every policy
+//! V1–V4 including Belady: a 4-precision run can hold up to 8× more
+//! tiles than an FP64-only run at the same capacity — the cache half of
+//! the paper's §IV-C data-movement economics.
 
 mod policy;
 
@@ -517,6 +525,27 @@ mod tests {
         let mut c: CacheTable<u32> = CacheTable::new(1000, false);
         assert!(!c.insert_prefetched((0, 0), 100, Arc::new(7)));
         assert!(!c.peek((0, 0)));
+    }
+
+    #[test]
+    fn logical_width_charging_widens_capacity() {
+        // the byte-width invariant: a budget that holds exactly one
+        // FP64 tile (8 w² bytes) holds eight FP8 tiles (w² each) — low
+        // precision widens effective capacity with no eviction at all
+        let met = m();
+        let f64_tile = 8 * 100u64;
+        let f8_tile = 100u64;
+        let mut c: CacheTable<u32> = CacheTable::new(f64_tile, true);
+        for k in 0..8 {
+            assert!(c.insert((k, 0), f8_tile, Arc::new(k as u32), &met));
+        }
+        assert_eq!(c.len(), 8);
+        assert_eq!(met.snapshot().cache_evictions, 0);
+        // one full-width insert now steals every low-precision entry
+        assert!(c.insert((9, 9), f64_tile, Arc::new(9), &met));
+        assert_eq!(c.len(), 1);
+        assert_eq!(met.snapshot().cache_evictions, 8);
+        c.check_invariants().unwrap();
     }
 
     #[test]

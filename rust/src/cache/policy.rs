@@ -19,9 +19,26 @@
 //!   horizon under which the victim is the resident tile with the
 //!   farthest next use that no stream can still be short of.
 //!
+//! Victim *selection* is size-oblivious (LRU age, insertion order,
+//! next-use distance), but victims free their **logical** byte width —
+//! `CacheTable` charges every entry at `ts² · Precision::width()` — so
+//! evicting one FP64 tile makes room for up to eight FP8 tiles. Under
+//! mixed precision every policy therefore operates on precision-true
+//! occupancy; the Belady trace-replay optimality proof in
+//! `rust/tests/schedule_ir.rs` assumes uniform tile size and is exact
+//! only for single-precision runs.
+//!
 //! `benches/schedule.rs` and the `ablation` CLI (`--policy v4`) compare
 //! the policies; `rust/tests/schedule_ir.rs` holds the optimality
 //! property test on recorded traces.
+//!
+//! ```
+//! use ooc_cholesky::sched::NextUse;
+//! // a recorded access trace: (0,0) is reused at index 3, (1,0) never
+//! let nu = NextUse::from_accesses([(0, 0), (1, 0), (2, 0), (0, 0)]);
+//! assert_eq!(nu.next_use((0, 0), 1), 3);
+//! assert_eq!(nu.next_use((1, 0), 2), u64::MAX); // Belady's victim
+//! ```
 
 use std::sync::Arc;
 

@@ -106,6 +106,20 @@ impl EvictionKind {
     ];
 }
 
+/// The 1- to 4-precision enabled sets of the paper's Fig. 4 variants —
+/// the `--precisions` ablation axis (every set contains F64, as
+/// [`RunConfig::validate`] requires). Order: coarsest set first, so
+/// byte volumes are non-increasing along the axis.
+pub fn precision_variants() -> [(&'static str, Vec<Precision>); 4] {
+    use Precision as P;
+    [
+        ("fp64", vec![P::F64]),
+        ("2prec", vec![P::F32, P::F64]),
+        ("3prec", vec![P::F16, P::F32, P::F64]),
+        ("4prec", vec![P::F8, P::F16, P::F32, P::F64]),
+    ]
+}
+
 /// Real execution (PJRT kernels, wall clock) or modeled (DES, virtual clock).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Mode {
@@ -515,6 +529,18 @@ mod tests {
         let mut cfg = RunConfig::default();
         let j = crate::util::json::parse(r#"{"bogus": 1}"#).unwrap();
         assert!(cfg.apply_json(&j).is_err());
+    }
+
+    #[test]
+    fn precision_variants_all_valid() {
+        for (label, set) in precision_variants() {
+            assert!(set.contains(&Precision::F64), "{label} must include f64");
+            let cfg = RunConfig { precisions: set.clone(), ..Default::default() };
+            cfg.validate().unwrap();
+            // sets are nested: each variant extends the previous one
+            let n = label.chars().next().unwrap().to_digit(10).unwrap_or(1);
+            assert_eq!(set.len(), n as usize);
+        }
     }
 
     #[test]

@@ -178,7 +178,7 @@ impl<'a> Shared<'a> {
         let bytes = (ts * ts) as u64 * prec.width();
         let t0 = self.now();
         self.rt.download(buf, scratch)?;
-        self.metrics.record_d2h(bytes);
+        self.metrics.record_d2h(bytes, prec);
         self.trace.record(Event {
             device: dev as u16,
             stream: stream as u16,
@@ -294,9 +294,9 @@ pub fn run(cfg: &RunConfig, rt: &Runtime, matrix: &TileMatrix) -> Result<super::
 
     let tile_bytes = (cfg.ts * cfg.ts * 8) as u64;
     let operand_caching = matches!(cfg.version, Version::V2 | Version::V3 | Version::RightLooking);
-    // lower the schedule once: wait lists, access bases and the transfer
-    // plan's deadlines all come from the IR
-    let ir = CompiledSchedule::compile(&schedule, cfg);
+    // lower the schedule once: wait lists, access bases, per-access byte
+    // widths and the transfer plan's deadlines all come from the IR
+    let ir = CompiledSchedule::compile_with_precisions(&schedule, cfg, &matrix.precision_map());
     // compile (or fetch memoized) kernels BEFORE starting the clock:
     // one-time PJRT compilation is not part of the factorization time
     let kernels = KernelSet::load(rt, cfg.ts)?;

@@ -9,11 +9,14 @@
 //!    vs the legacy global oracle vs Belady;
 //!  * left- vs right-looking traversal (the §II positioning claim);
 //!  * stream count (the async-overlap knob of Fig. 2);
-//!  * prefetch depth (the `xfer` engine's lookahead).
+//!  * prefetch depth (the `xfer` engine's lookahead);
+//!  * enabled precision set 1–4 (the `--precisions` axis): counted H2D
+//!    bytes and miss count per variant — the data-movement side of the
+//!    MxP story (fewer bytes per tile *and* more tiles resident).
 
 use anyhow::Result;
 
-use crate::config::{EvictionKind, HwProfile, Mode, RunConfig, Version};
+use crate::config::{precision_variants, EvictionKind, HwProfile, Mode, RunConfig, Version};
 use crate::util::json::Json;
 
 /// The V1–V4 cache-strategy axis: (label, version, eviction).
@@ -201,6 +204,61 @@ pub fn ablation_prefetch(n: usize, ts: usize) -> Result<Json> {
     Ok(Json::obj(vec![("figure", Json::str("ablation_prefetch")), ("rows", Json::Arr(rows))]))
 }
 
+/// Enabled-precision-set sweep (the `--precisions` axis): 1- to
+/// 4-precision variants at fixed accuracy 1e-5 under weak correlation
+/// (the paper's most downcast-friendly regime), at a capacity tight
+/// enough that residency matters. H2D bytes are *counted* at logical
+/// widths, so the byte column is exact; misses show the capacity side
+/// (smaller tiles -> more of the working set stays resident).
+pub fn ablation_precisions(n: usize, ts: usize) -> Result<Json> {
+    println!("\n=== Ablation: enabled precisions (GH200, V3, n={n}, acc=1e-5, weak corr) ===");
+    println!(
+        "{:>8} {:>14} {:>14} {:>12} {:>10}",
+        "set", "H2D GB", "D2H GB", "misses", "TFlop/s"
+    );
+    let mut rows = Vec::new();
+    for (label, set) in precision_variants() {
+        let cfg = RunConfig {
+            n,
+            ts,
+            version: Version::V3,
+            mode: Mode::Model,
+            hw: HwProfile::gh200_nvlc2c(),
+            // tight enough that the FP64-only triangle churns while the
+            // downcast variants stay resident (4 GiB at the default
+            // n=48k/ts=2048: the DES mock measures 1326 FP64 misses vs
+            // 299 compulsory for the 4-precision set)
+            vmem_bytes: Some(4 * 1024 * 1024 * 1024),
+            streams_per_dev: 8,
+            beta: 0.02627, // weak correlation
+            precisions: set.clone(),
+            accuracy: 1e-5,
+            ..Default::default()
+        };
+        let r = crate::ooc::factorize(&cfg, None)?;
+        println!(
+            "{label:>8} {:>14.2} {:>14.2} {:>12} {:>10.1}",
+            r.metrics.h2d_bytes as f64 / 1e9,
+            r.metrics.d2h_bytes as f64 / 1e9,
+            r.metrics.cache_misses,
+            r.tflops,
+        );
+        rows.push(Json::obj(vec![
+            ("variant", Json::str(label)),
+            ("nprec", Json::num(set.len() as f64)),
+            ("h2d_bytes", Json::num(r.metrics.h2d_bytes as f64)),
+            ("d2h_bytes", Json::num(r.metrics.d2h_bytes as f64)),
+            (
+                "h2d_by_prec",
+                Json::arr(r.metrics.h2d_by_prec.iter().map(|&b| Json::num(b as f64))),
+            ),
+            ("cache_misses", Json::num(r.metrics.cache_misses as f64)),
+            ("tflops", Json::num(r.tflops)),
+        ]));
+    }
+    Ok(Json::obj(vec![("figure", Json::str("ablation_precisions")), ("rows", Json::Arr(rows))]))
+}
+
 pub fn ablation_all(n: usize, ts: usize) -> Result<Json> {
     Ok(Json::obj(vec![
         ("policy", ablation_policy(n, ts)?),
@@ -208,6 +266,7 @@ pub fn ablation_all(n: usize, ts: usize) -> Result<Json> {
         ("looking", ablation_looking(n, ts)?),
         ("streams", ablation_streams(n, ts)?),
         ("prefetch", ablation_prefetch(n, ts)?),
+        ("precisions", ablation_precisions(n, ts)?),
     ]))
 }
 
@@ -270,6 +329,36 @@ mod tests {
             assert!(ovl4 > 0.0, "depth 4 hid nothing");
             let ovl0 = rows[base].get("overlap").as_f64().unwrap();
             assert_eq!(ovl0, 0.0, "depth 0 must not prefetch");
+        }
+    }
+
+    #[test]
+    fn more_precisions_never_move_more_bytes() {
+        // the --precisions axis: enabling more (lower) precisions can
+        // only lower each tile's chosen width, so counted H2D/D2H bytes
+        // are non-increasing along fp64 -> 2prec -> 3prec -> 4prec, and
+        // the 4-precision variant is strictly below FP64-only; the wider
+        // effective capacity must also not cost misses
+        let j = ablation_precisions(48 * 1024, 2048).unwrap();
+        let rows = j.get("rows").as_arr().unwrap();
+        let h2d = |r: &Json| r.get("h2d_bytes").as_f64().unwrap();
+        for w in rows.windows(2) {
+            assert!(h2d(&w[1]) <= h2d(&w[0]), "{:?}", (h2d(&w[0]), h2d(&w[1])));
+        }
+        assert!(h2d(&rows[3]) < h2d(&rows[0]), "4prec must be strictly cheaper");
+        let miss = |r: &Json| r.get("cache_misses").as_f64().unwrap();
+        for w in rows.windows(2) {
+            assert!(miss(&w[1]) <= miss(&w[0]), "misses grew along the axis");
+        }
+        assert!(
+            miss(&rows[3]) < miss(&rows[0]),
+            "at this capacity the 4-precision working set must stay resident"
+        );
+        // the per-precision split partitions the total
+        for r in rows {
+            let parts: f64 =
+                r.get("h2d_by_prec").as_arr().unwrap().iter().map(|b| b.as_f64().unwrap()).sum();
+            assert_eq!(parts, h2d(r), "{r}");
         }
     }
 

@@ -11,8 +11,8 @@ pub mod fig8;
 pub mod fig9;
 
 pub use ablation::{
-    ablation_all, ablation_eviction, ablation_looking, ablation_policy, ablation_prefetch,
-    ablation_streams, POLICY_AXIS,
+    ablation_all, ablation_eviction, ablation_looking, ablation_policy, ablation_precisions,
+    ablation_prefetch, ablation_streams, POLICY_AXIS,
 };
 pub use fig10::fig10_kl_divergence;
 pub use fig6::fig6_single_gpu;

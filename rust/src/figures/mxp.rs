@@ -71,16 +71,21 @@ pub fn fig11_mxp_perf(sizes: &[usize], ts: usize) -> Result<Json> {
     ]))
 }
 
-/// Figure 12: MxP data-movement volume per correlation level (exact counts).
+/// Figure 12: MxP data-movement volume per correlation level (exact
+/// counts). Each cell also records the per-precision H2D/D2H byte
+/// splits (`[f8, f16, f32, f64]`, counted at logical widths — they
+/// partition the direction totals exactly), so the figure can stack the
+/// volume bars by precision like the paper does.
 pub fn fig12_mxp_volumes(sizes: &[usize], ts: usize) -> Result<Json> {
     let mut panels = Vec::new();
+    let by_prec = |h: &[u64; 4]| Json::arr(h.iter().map(|&b| Json::num(b as f64)));
     for (beta, label) in BETAS {
         println!("\n=== Fig 12: MxP volumes (GB) on GH200, beta={beta} ({label}) ===");
         print!("{:>10} {:>10}", "n", "fp64");
         for acc in ACCURACIES {
             print!(" {acc:>10.0e}");
         }
-        println!();
+        println!("   (per-acc H2D split f8/f16/f32/f64 in the JSON)");
         let mut rows = Vec::new();
         for &n in sizes {
             let n = super::fig6::round_to(n, ts);
@@ -90,6 +95,8 @@ pub fn fig12_mxp_volumes(sizes: &[usize], ts: usize) -> Result<Json> {
             let mut row = vec![
                 ("n", Json::num(n as f64)),
                 ("fp64_bytes", Json::num(r64.metrics.total_bytes() as f64)),
+                ("fp64_h2d_by_prec", by_prec(&r64.metrics.h2d_by_prec)),
+                ("fp64_d2h_by_prec", by_prec(&r64.metrics.d2h_by_prec)),
             ];
             for acc in ACCURACIES {
                 let r = crate::ooc::factorize(&mxp_cfg(n, ts, beta, Some(acc)), None)?;
@@ -97,6 +104,14 @@ pub fn fig12_mxp_volumes(sizes: &[usize], ts: usize) -> Result<Json> {
                 row.push((
                     Box::leak(format!("bytes_{acc:.0e}").into_boxed_str()),
                     Json::num(r.metrics.total_bytes() as f64),
+                ));
+                row.push((
+                    Box::leak(format!("h2d_by_prec_{acc:.0e}").into_boxed_str()),
+                    by_prec(&r.metrics.h2d_by_prec),
+                ));
+                row.push((
+                    Box::leak(format!("d2h_by_prec_{acc:.0e}").into_boxed_str()),
+                    by_prec(&r.metrics.d2h_by_prec),
                 ));
             }
             println!();
@@ -170,6 +185,27 @@ mod tests {
             let hi = row.get("bytes_1e-8").as_f64().unwrap();
             assert!(lo <= hi, "{row}");
         }
+    }
+
+    #[test]
+    fn fig12_per_precision_split_is_counted() {
+        // the per-precision rows are counted, not modeled: the FP64-only
+        // column lives entirely in the f64 slot, and every MxP split is
+        // an exact partition with some low-precision traffic under weak
+        // correlation at accuracy 1e-5
+        let j = fig12_mxp_volumes(&[64 * 1024], 2048).unwrap();
+        let weak = &j.get("panels").as_arr().unwrap()[0];
+        let row = &weak.get("rows").as_arr().unwrap()[0];
+        let arr = |k: &str| -> Vec<f64> {
+            row.get(k).as_arr().unwrap().iter().map(|b| b.as_f64().unwrap()).collect()
+        };
+        let f64_split = arr("fp64_h2d_by_prec");
+        assert_eq!(f64_split[0] + f64_split[1] + f64_split[2], 0.0, "{row}");
+        assert!(f64_split[3] > 0.0);
+        let mxp = arr("h2d_by_prec_1e-5");
+        assert!(mxp[0] + mxp[1] + mxp[2] > 0.0, "no low-precision H2D: {row}");
+        // strictly fewer H2D bytes than FP64-only at identical config
+        assert!(mxp.iter().sum::<f64>() < f64_split.iter().sum::<f64>(), "{row}");
     }
 
     #[test]

@@ -14,8 +14,34 @@
 //! * **runtime** — PJRT CPU client loading those artifacts; Python never
 //!   runs on the request path.
 //!
+//! # Module map
+//!
+//! The static-schedule-knows-everything pipeline, in dataflow order:
+//!
+//! | module | role |
+//! |---|---|
+//! | [`config`] | [`config::RunConfig`] + calibrated [`config::HwProfile`]s (A100/H100/GH200) |
+//! | [`matern`] | Matérn covariance workload generator (the geospatial substrate) |
+//! | [`tiles`] | host tile store ([`tiles::TileMatrix`]) and shape-only DES input ([`tiles::MatrixShape`]) |
+//! | [`precision`] | logical tile precisions, grid quantization, Higham–Mary selection ([`precision::PrecisionMap`]) |
+//! | [`sched`] | static schedule + the compiled IR ([`sched::CompiledSchedule`]: wait lists, per-access byte widths, next-use tables, start estimates) |
+//! | [`xfer`] | schedule-driven transfer engine (byte-true prefetch plans + per-device transfer workers) |
+//! | [`cache`] | byte-budgeted device tile cache, policies V1–V4 incl. Belady |
+//! | [`exec`] | the two executors: [`exec::real`] (PJRT kernels) and [`exec::model`] (DES) |
+//! | [`metrics`] | exact counted volumes, split per precision both directions |
+//! | [`ooc`] | front-door drivers: workload → precision map → factorize |
+//! | [`figures`] | paper-figure harnesses (Figs. 6–13) + ablations |
+//! | [`mle`], [`refine`], [`tune`], [`trace`], [`baseline`], [`runtime`], [`util`] | MLE demo, iterative refinement, tile autotuner, event traces, host oracle, PJRT/host backends, support code |
+//!
+//! **Byte-width invariant** (the paper's §IV-C data-movement economics):
+//! a tile tagged with precision `p` costs `ts² · p.width()` bytes on
+//! every path — the compiled schedule stamps it, the transfer plan
+//! budgets it, the cache charges it, and the metrics count it. An FP8
+//! tile is 8× cheaper than FP64 everywhere, which both shrinks wire
+//! volume and widens effective cache capacity.
+//!
 //! See DESIGN.md for the system inventory and EXPERIMENTS.md for the
-//! paper-vs-measured record.
+//! paper-vs-measured record; README.md has the quickstart.
 
 pub mod baseline;
 pub mod cache;

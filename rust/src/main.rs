@@ -61,7 +61,8 @@ USAGE:
   ooc-cholesky kl [flags]            MxP KL-divergence accuracy sweep
   ooc-cholesky export [flags]        factorize and write the factor as .npy
   ooc-cholesky tune [flags]          autotune the tile size (model mode)
-  ooc-cholesky ablation [flags]      eviction/traversal/stream ablations
+  ooc-cholesky ablation [flags]      cache/eviction/traversal/stream/prefetch/
+                                     precision-set ablations
   ooc-cholesky artifacts             list AOT kernel artifacts
 
 FACTORIZE FLAGS:

@@ -3,6 +3,13 @@
 //! Volumes are **exact counts** — every H2D/D2H the coordinator issues
 //! adds the logical byte width of the moved tile — so Figure 8/12 shapes
 //! are reproduced by construction, not by modeling.
+//!
+//! Both directions keep a per-precision split (`h2d_by_prec` /
+//! `d2h_by_prec`, `[f8, f16, f32, f64]`) that partitions the totals
+//! exactly: each transfer is recorded once, under the moved tile's
+//! logical precision. The split surfaces in the factorize summary line,
+//! the report JSON, the golden `--metrics-out` format, and the Fig. 12
+//! harness.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 
@@ -15,8 +22,13 @@ pub struct Metrics {
     /// we follow H2D/D2H and map to the figure labels at render time)
     pub h2d_bytes: AtomicU64,
     pub d2h_bytes: AtomicU64,
-    /// per logical precision H2D byte split [f8, f16, f32, f64]
+    /// per logical precision H2D byte split [f8, f16, f32, f64] —
+    /// partitions `h2d_bytes` exactly (every transfer is recorded with
+    /// the moved tile's precision)
     pub h2d_by_prec: [AtomicU64; 4],
+    /// per logical precision D2H byte split [f8, f16, f32, f64] —
+    /// partitions `d2h_bytes` exactly
+    pub d2h_by_prec: [AtomicU64; 4],
     pub h2d_transfers: AtomicU64,
     pub d2h_transfers: AtomicU64,
     /// cache behaviour
@@ -73,8 +85,9 @@ impl Metrics {
         self.h2d_transfers.fetch_add(1, Ordering::Relaxed);
     }
 
-    pub fn record_d2h(&self, bytes: u64) {
+    pub fn record_d2h(&self, bytes: u64, prec: Precision) {
         self.d2h_bytes.fetch_add(bytes, Ordering::Relaxed);
+        self.d2h_by_prec[prec_slot(prec)].fetch_add(bytes, Ordering::Relaxed);
         self.d2h_transfers.fetch_add(1, Ordering::Relaxed);
     }
 
@@ -105,6 +118,12 @@ impl Metrics {
                 self.h2d_by_prec[1].load(Ordering::Relaxed),
                 self.h2d_by_prec[2].load(Ordering::Relaxed),
                 self.h2d_by_prec[3].load(Ordering::Relaxed),
+            ],
+            d2h_by_prec: [
+                self.d2h_by_prec[0].load(Ordering::Relaxed),
+                self.d2h_by_prec[1].load(Ordering::Relaxed),
+                self.d2h_by_prec[2].load(Ordering::Relaxed),
+                self.d2h_by_prec[3].load(Ordering::Relaxed),
             ],
             h2d_transfers: self.h2d_transfers.load(Ordering::Relaxed),
             d2h_transfers: self.d2h_transfers.load(Ordering::Relaxed),
@@ -155,6 +174,7 @@ pub struct MetricsSnapshot {
     pub h2d_bytes: u64,
     pub d2h_bytes: u64,
     pub h2d_by_prec: [u64; 4],
+    pub d2h_by_prec: [u64; 4],
     pub h2d_transfers: u64,
     pub d2h_transfers: u64,
     pub cache_hits: u64,
@@ -204,6 +224,10 @@ impl MetricsSnapshot {
                 "h2d_by_prec",
                 Json::arr(self.h2d_by_prec.iter().map(|&b| Json::num(b as f64))),
             ),
+            (
+                "d2h_by_prec",
+                Json::arr(self.d2h_by_prec.iter().map(|&b| Json::num(b as f64))),
+            ),
             ("h2d_transfers", Json::num(self.h2d_transfers as f64)),
             ("d2h_transfers", Json::num(self.d2h_transfers as f64)),
             ("cache_hits", Json::num(self.cache_hits as f64)),
@@ -248,7 +272,7 @@ mod tests {
         let m = Metrics::new();
         m.record_h2d(100, Precision::F16);
         m.record_h2d(50, Precision::F64);
-        m.record_d2h(30, );
+        m.record_d2h(30, Precision::F8);
         m.record_task(TaskOp::Gemm, 64);
         m.record_task(TaskOp::Potrf, 64);
         let s = m.snapshot();
@@ -256,6 +280,9 @@ mod tests {
         assert_eq!(s.h2d_by_prec[1], 100);
         assert_eq!(s.h2d_by_prec[3], 50);
         assert_eq!(s.d2h_bytes, 30);
+        assert_eq!(s.d2h_by_prec, [30, 0, 0, 0]);
+        assert_eq!(s.h2d_by_prec.iter().sum::<u64>(), s.h2d_bytes);
+        assert_eq!(s.d2h_by_prec.iter().sum::<u64>(), s.d2h_bytes);
         assert_eq!(s.total_bytes(), 180);
         assert_eq!(s.n_gemm, 1);
         assert_eq!(s.flops, 2 * 64 * 64 * 64 + 64 * 64 * 64 / 3);
@@ -274,6 +301,7 @@ mod tests {
         let j = s.to_json();
         assert!(j.get("total_bytes").as_f64().is_some());
         assert_eq!(j.get("h2d_by_prec").as_arr().unwrap().len(), 4);
+        assert_eq!(j.get("d2h_by_prec").as_arr().unwrap().len(), 4);
         assert!(j.get("prefetch_overlap").as_f64().is_some());
     }
 

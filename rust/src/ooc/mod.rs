@@ -136,7 +136,7 @@ fn run_incore_real(cfg: &RunConfig, rt: &Runtime, matrix: &TileMatrix) -> Result
 
     let mut l = vec![0.0; n * n];
     rt.download(&out, &mut l)?;
-    metrics.record_d2h(full_bytes);
+    metrics.record_d2h(full_bytes, Precision::F64);
     let t_d = t0.elapsed().as_secs_f64();
     trace.record(crate::trace::Event {
         device: 0,

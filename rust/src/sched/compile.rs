@@ -10,27 +10,53 @@
 //!
 //! * **read/write sets** per job, in the exact order the executors
 //!   consume them (`Job::operands` order);
+//! * **per-access byte widths** — every read and write is stamped with
+//!   the tile's *logical* byte size (`ts² · Precision::width()`) from the
+//!   run's [`crate::precision::PrecisionMap`]. This is the invariant the
+//!   whole data-movement layer leans on: the transfer plan budgets its
+//!   prefetch windows in these bytes, the cache charges entries at the
+//!   same widths, and the metrics count them — so an FP8 tile costs
+//!   ts²·1 everywhere, never ts²·8 (§IV-C of the paper: mixed precision
+//!   shrinks *bytes moved*, not just flops);
 //! * **wait lists** — the subset of each job's dependencies produced on a
 //!   *different* stream. Same-stream dependencies are ordered by the
 //!   stream's own program order and need no runtime check at all;
 //! * **per-(tile, device) next-use tables** over the device-local access
 //!   sequence, giving exact reuse distances — what makes the Belady (V4)
 //!   eviction policy implementable (`cache::policy::Policy::Belady`);
-//! * **estimated job start times** from the hardware profile, from which
-//!   the transfer plan derives per-load deadlines (latest start for a
-//!   prefetch to land before its consumer) so the engine can order loads
-//!   by deadline slack instead of plain job index.
+//! * **estimated job start times** from the hardware profile — kernel
+//!   cost at the job's *compute* precision (the highest precision among
+//!   its tiles) plus per-read transfers at each read's logical width —
+//!   from which the transfer plan derives per-load deadlines (latest
+//!   start for a prefetch to land before its consumer) so the engine can
+//!   order loads by deadline slack instead of plain job index.
 //!
 //! The canonical linear order is the schedule's own creation order
 //! (left-looking: columns left to right, rows top to bottom — the order
 //! a single-stream DES observes exactly; multi-stream executors observe
 //! each stream's projection of it, which is what the wait lists and the
 //! per-job `access_base` anchors are defined against).
+//!
+//! ```
+//! use ooc_cholesky::config::RunConfig;
+//! use ooc_cholesky::sched::{CompiledSchedule, Schedule};
+//!
+//! let s = Schedule::left_looking(4, 1, 1);
+//! let cfg = RunConfig { n: 512, ts: 128, ..Default::default() };
+//! // `compile` assumes uniform FP64; MxP runs pass their PrecisionMap
+//! // via `compile_with_precisions` instead.
+//! let ir = CompiledSchedule::compile(&s, &cfg);
+//! assert_eq!(ir.total_jobs(), s.total_jobs());
+//! let job = ir.job_at(0, 1);
+//! // uniform FP64: every access is charged the full ts²·8 bytes
+//! assert!(job.read_bytes.iter().all(|&b| b == 128 * 128 * 8));
+//! ```
 
 use std::collections::HashMap;
 use std::sync::Arc;
 
 use crate::config::{EvictionKind, RunConfig};
+use crate::precision::{Precision, PrecisionMap};
 use crate::sched::{device_of_row, stream_of_row, Job, Schedule};
 
 /// One job, lowered: placement, data sets, and static-analysis results.
@@ -44,8 +70,15 @@ pub struct CompiledJob {
     pub device: usize,
     /// read-only operand tiles, in executor consumption order
     pub reads: Vec<(usize, usize)>,
+    /// logical byte width of each read, parallel to `reads`:
+    /// `ts² · width(precision of the tile)` — what the transfer plan
+    /// budgets and the wire-volume metrics count for this access
+    pub read_bytes: Vec<u64>,
     /// tile this job finalizes
     pub write: (usize, usize),
+    /// logical byte width of the written tile (its accumulator upload
+    /// and write-back both move this many bytes)
+    pub write_bytes: u64,
     /// reads produced by a *different* stream — the only dependencies
     /// that need a runtime `ProgressTable` wait; everything else is
     /// guaranteed final by the stream's own program order
@@ -144,10 +177,25 @@ fn canon_key(job: &Job) -> (usize, u8, usize, usize) {
 }
 
 impl CompiledSchedule {
-    /// Lower `schedule` for a run on `cfg`'s hardware. O(total operand
-    /// reads) time and memory.
+    /// Lower `schedule` for a uniform-FP64 run on `cfg`'s hardware —
+    /// every access is charged the full ts²·8 bytes. MxP runs must use
+    /// [`CompiledSchedule::compile_with_precisions`] so the IR's byte
+    /// widths (and everything budgeted from them) are precision-true.
     pub fn compile(schedule: &Schedule, cfg: &RunConfig) -> CompiledSchedule {
+        let pm = PrecisionMap::uniform(schedule.nt, Precision::F64);
+        Self::compile_with_precisions(schedule, cfg, &pm)
+    }
+
+    /// Lower `schedule` for a run on `cfg`'s hardware, stamping every
+    /// read/write with its logical byte width from `pm`. O(total operand
+    /// reads) time and memory.
+    pub fn compile_with_precisions(
+        schedule: &Schedule,
+        cfg: &RunConfig,
+        pm: &PrecisionMap,
+    ) -> CompiledSchedule {
         let (nt, ndev, spd) = (schedule.nt, schedule.ndev, schedule.streams_per_dev);
+        assert_eq!(pm.nt(), nt, "precision map shape mismatch");
         let nstreams = schedule.total_streams();
 
         // canonical order: merge the per-stream lists by creation key
@@ -159,9 +207,7 @@ impl CompiledSchedule {
         }
         flat.sort_by_key(|&(gid, pos)| canon_key(&schedule.jobs[gid][pos]));
 
-        let tile_bytes = (cfg.ts * cfg.ts * 8) as u64;
-        let f64_prec = crate::precision::Precision::F64;
-        let kernel_cost = |flops: f64| cfg.hw.kernel_time(flops, f64_prec, cfg.ts);
+        let wordsq = (cfg.ts * cfg.ts) as u64;
         let t3 = (cfg.ts as f64).powi(3);
 
         let mut compiled = Vec::with_capacity(flat.len());
@@ -181,8 +227,17 @@ impl CompiledSchedule {
             let device = gid / spd;
             let reads = job.operands();
             let write = job.target();
+            let write_prec = pm.get(write.0, write.1);
+            let write_bytes = wordsq * write_prec.width();
             let mut waits = Vec::new();
+            let mut read_bytes = Vec::with_capacity(reads.len());
+            // the job's compute precision: kernels run at the highest
+            // precision among their tiles (lower operands are up-cast)
+            let mut compute_prec = write_prec;
             for &(i, j) in &reads {
+                let p = pm.get(i, j);
+                read_bytes.push(wordsq * p.width());
+                compute_prec = compute_prec.max(p);
                 if schedule.global_stream(i) == gid {
                     static_deps += 1;
                 } else {
@@ -197,9 +252,10 @@ impl CompiledSchedule {
                 dev_seq[device].extend_from_slice(&reads);
             }
 
-            // cost estimate: kernel flops at F64 + one transfer per read,
-            // plus the accumulator round trip — a deadline heuristic, not
-            // a model (the DES owns timing fidelity)
+            // cost estimate: kernel flops at the compute precision + one
+            // transfer per read at its logical width, plus the
+            // accumulator round trip at the write width — a deadline
+            // heuristic, not a model (the DES owns timing fidelity)
             let flops = match job {
                 Job::TileLL { m, k } => crate::sched::job_flops(m, k, cfg.ts),
                 Job::FactorDiagRL { .. } => t3 / 3.0,
@@ -212,8 +268,11 @@ impl CompiledSchedule {
                     }
                 }
             };
-            let xfer = cfg.hw.transfer_time(tile_bytes, true, true, true);
-            let cost = kernel_cost(flops) + (reads.len() as f64 + 2.0) * xfer;
+            let mut cost = cfg.hw.kernel_time(flops, compute_prec, cfg.ts)
+                + 2.0 * cfg.hw.transfer_time(write_bytes, true, true, true);
+            for &b in &read_bytes {
+                cost += cfg.hw.transfer_time(b, true, true, true);
+            }
             let est_start = stream_clock[gid];
             let est_end = est_start + cost;
             stream_clock[gid] = est_end;
@@ -225,7 +284,9 @@ impl CompiledSchedule {
                 pos,
                 device,
                 reads,
+                read_bytes,
                 write,
+                write_bytes,
                 waits,
                 access_base,
                 est_start,
@@ -457,6 +518,42 @@ mod tests {
         assert_eq!(nu.next_use((0, 0), 1), 2);
         assert_eq!(nu.next_use((0, 0), 3), u64::MAX);
         assert_eq!(nu.next_use((1, 0), 2), u64::MAX);
+    }
+
+    #[test]
+    fn read_bytes_follow_the_precision_map() {
+        use crate::precision::{Precision, PrecisionMap};
+        let nt = 6;
+        let s = Schedule::left_looking(nt, 2, 2);
+        let c = cfg(nt * 128, 128);
+        // off-diagonal tiles at FP8, diagonals FP64 (the selector's rule)
+        let mut pm = PrecisionMap::uniform(nt, Precision::F64);
+        for i in 0..nt {
+            for j in 0..i {
+                pm.set(i, j, Precision::F8);
+            }
+        }
+        let ir = CompiledSchedule::compile_with_precisions(&s, &c, &pm);
+        let wordsq = 128u64 * 128;
+        for cj in &ir.jobs {
+            assert_eq!(cj.reads.len(), cj.read_bytes.len());
+            for (r, &(i, j)) in cj.reads.iter().enumerate() {
+                let want = wordsq * pm.get(i, j).width();
+                assert_eq!(cj.read_bytes[r], want, "read ({i},{j}) of {:?}", cj.job);
+            }
+            assert_eq!(cj.write_bytes, wordsq * pm.get(cj.write.0, cj.write.1).width());
+        }
+        // the uniform-FP64 wrapper charges every access at full width
+        let ir64 = CompiledSchedule::compile(&s, &c);
+        for cj in &ir64.jobs {
+            assert!(cj.read_bytes.iter().all(|&b| b == wordsq * 8));
+            assert_eq!(cj.write_bytes, wordsq * 8);
+        }
+        // cheaper tiles -> earlier estimated finish for the same schedule
+        let last = |ir: &CompiledSchedule| {
+            ir.jobs.iter().map(|c| c.est_end).fold(0.0f64, f64::max)
+        };
+        assert!(last(&ir) < last(&ir64), "MxP est times must shrink");
     }
 
     #[test]

@@ -166,6 +166,19 @@ impl TileMatrix {
         }
     }
 
+    /// Snapshot of the per-tile precision tags (the map
+    /// `apply_precision` installed, or uniform F64 for a fresh matrix) —
+    /// what the schedule compiler stamps byte widths from in real mode.
+    pub fn precision_map(&self) -> PrecisionMap {
+        let mut pm = PrecisionMap::uniform(self.nt, Precision::F64);
+        for i in 0..self.nt {
+            for j in 0..=i {
+                pm.set(i, j, self.lock(i, j).prec);
+            }
+        }
+        pm
+    }
+
     /// Logical bytes of the stored lower triangle.
     pub fn total_bytes(&self) -> u64 {
         let ts = self.ts;

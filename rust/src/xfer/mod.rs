@@ -16,7 +16,12 @@
 //!   (latest start for the load to land before its consumer, from the
 //!   IR's estimated job start times), filtered by what the cache policy
 //!   can realistically keep resident (tiles V2/V3's steal pass would
-//!   immediately reclaim are dropped at plan time).
+//!   immediately reclaim are dropped at plan time). The residency
+//!   budget and the deadlines are **precision-true**: every load is
+//!   charged the compiled schedule's logical byte width for its tile
+//!   (ts² · `Precision::width()`), so mixed-precision runs plan deeper
+//!   windows — and later viable start times — than an FP64-blind plan
+//!   would at the same vmem budget.
 //! * [`engine`] — the coordination state for one dedicated transfer
 //!   worker per device: priority queues of planned loads ordered by
 //!   deadline slack (the load closest to missing its consumer first), a
@@ -33,6 +38,25 @@
 //! device draining the queues into the device `CacheTable`, and
 //! `exec::model` simulates the same plan on a per-device virtual
 //! transfer stream so the Fig. 6/7 model curves reflect overlap depth.
+//!
+//! ```
+//! use ooc_cholesky::config::{Mode, RunConfig, Version};
+//! use ooc_cholesky::sched::{CompiledSchedule, Schedule};
+//! use ooc_cholesky::xfer::XferPlan;
+//!
+//! let cfg = RunConfig {
+//!     n: 1024, ts: 128, version: Version::V2, mode: Mode::Model,
+//!     prefetch_depth: 2, ..Default::default()
+//! };
+//! let s = Schedule::left_looking(cfg.nt(), cfg.ndev, cfg.streams_per_dev);
+//! let plan = XferPlan::build(&CompiledSchedule::compile(&s, &cfg), &cfg);
+//! assert!(!plan.is_empty());
+//! // every planned load carries the byte width the budget charged it —
+//! // uniform FP64 here, so the full ts²·8
+//! for l in plan.loads_at(0, 0) {
+//!     assert_eq!(l.bytes, 128 * 128 * 8);
+//! }
+//! ```
 
 pub mod engine;
 pub mod plan;

@@ -26,6 +26,14 @@
 //! steal pass would immediately reclaim are never planned (the
 //! "don't prefetch what V2/V3 would steal" rule). Dropped loads are
 //! counted in [`XferPlan::dropped_over_budget`].
+//!
+//! The residency budget is accounted in **logical bytes**, taken from
+//! the compiled schedule's per-read widths: an FP8 operand charges
+//! ts²·1 of the window, an FP64 operand ts²·8. Low-precision tiles are
+//! therefore cheaper to hold, and a mixed-precision run plans deeper
+//! windows at the same vmem budget — the data-movement half of the
+//! paper's MxP economics (§IV-C). Deadlines use the same widths: a
+//! smaller tile transfers faster, so its latest viable start is later.
 
 use std::collections::VecDeque;
 
@@ -43,6 +51,9 @@ pub struct PlannedLoad {
     /// estimated latest start (µs of schedule time) for the load to land
     /// before its consumer — the transfer queues' priority key
     pub deadline_us: u64,
+    /// logical bytes on the wire (ts² · precision width, from the
+    /// compiled schedule) — what the residency budget charged this load
+    pub bytes: u64,
 }
 
 /// Per-stream plan: `triggers[p]` holds the loads to enqueue when the
@@ -99,19 +110,22 @@ impl XferPlan {
         }
 
         // Residency budget: device memory minus one accumulator
-        // reservation per stream, split evenly across the device's
-        // streams. A window whose operand train exceeds this would see
-        // its head stolen before the consumer arrives, so the tail is
-        // dropped at plan time instead of churning the cache at run time.
-        // Tiles are charged at full f64 width: per-tile precisions are
-        // assigned later (by the precision manager, outside the plan's
-        // inputs), so the estimate is conservative — an MxP run may drop
-        // loads that would in fact have fit, never the reverse.
-        let tile_bytes = (cfg.ts * cfg.ts * 8) as u64;
-        let resv = tile_bytes * ir.streams_per_dev as u64;
+        // reservation per stream (accumulators live at full f64 storage
+        // width, matching the executors' reservations), split evenly
+        // across the device's streams. A window whose operand train
+        // exceeds this would see its head stolen before the consumer
+        // arrives, so the tail is dropped at plan time instead of
+        // churning the cache at run time. Each load is charged at its
+        // *logical* width from the compiled schedule — low-precision
+        // tiles are cheaper, so an MxP run plans deeper windows at the
+        // same vmem budget instead of conservatively dropping loads that
+        // would in fact have fit.
+        let tile_f64 = (cfg.ts * cfg.ts * 8) as u64;
+        let resv = tile_f64 * ir.streams_per_dev as u64;
         let usable = cfg.device_vmem().saturating_sub(resv);
-        let budget_tiles =
-            ((usable / tile_bytes.max(1)) as usize / ir.streams_per_dev.max(1)).max(1);
+        // at least one full-width tile per window, like the executors'
+        // "a job's own operands always fit" floor
+        let budget_bytes = (usable / ir.streams_per_dev.max(1) as u64).max(tile_f64);
 
         let mut plan = XferPlan {
             depth,
@@ -122,44 +136,48 @@ impl XferPlan {
 
         for (gid, idxs) in ir.stream_jobs.iter().enumerate() {
             let mut sp = StreamPlan { triggers: vec![Vec::new(); idxs.len()] };
-            // sliding-window accounting: (job position, tiles planned)
-            let mut window: VecDeque<(usize, usize)> = VecDeque::new();
-            let mut in_window = 0usize;
+            // sliding-window accounting: (job position, bytes planned)
+            let mut window: VecDeque<(usize, u64)> = VecDeque::new();
+            let mut in_window = 0u64;
             for pos in 1..idxs.len() {
                 let cj = ir.job_at(gid, pos);
-                while let Some(&(p, n)) = window.front() {
+                while let Some(&(p, b)) = window.front() {
                     if p + depth < pos {
                         window.pop_front();
-                        in_window -= n;
+                        in_window -= b;
                     } else {
                         break;
                     }
                 }
                 let trigger = pos.saturating_sub(depth);
-                let mut planned = 0usize;
-                for &tile in &cj.reads {
+                let mut planned = 0u64;
+                let mut nplanned = 0usize;
+                for (r, &tile) in cj.reads.iter().enumerate() {
                     // never plan the job's own target (the accumulator is
                     // uploaded by the compute stream, outside the cache)
                     if tile == cj.write {
                         continue;
                     }
-                    if in_window + planned >= budget_tiles {
+                    let bytes = cj.read_bytes[r];
+                    if in_window + planned + bytes > budget_bytes {
                         plan.dropped_over_budget += 1;
                         continue;
                     }
                     let local = device_of_row(tile.0, ir.ndev) == cj.device;
-                    let dt = cfg.hw.transfer_time(tile_bytes, true, local, true);
+                    let dt = cfg.hw.transfer_time(bytes, true, local, true);
                     let deadline_us = ((cj.est_start - dt).max(0.0) * 1e6) as u64;
                     sp.triggers[trigger].push(PlannedLoad {
                         tile,
                         consumer_pos: pos,
                         deadline_us,
+                        bytes,
                     });
-                    planned += 1;
+                    planned += bytes;
+                    nplanned += 1;
                 }
                 window.push_back((pos, planned));
                 in_window += planned;
-                plan.total_planned += planned;
+                plan.total_planned += nplanned;
             }
             // the warmup trigger (and any window merge) pops by deadline
             for t in &mut sp.triggers {
@@ -292,6 +310,45 @@ mod tests {
             let loads = plan.loads_at(0, pos);
             for w in loads.windows(2) {
                 assert!(w[0].deadline_us <= w[1].deadline_us);
+            }
+        }
+    }
+
+    #[test]
+    fn low_precision_tiles_deepen_the_window() {
+        use crate::precision::{Precision, PrecisionMap};
+        // same schedule + vmem, one plan precision-blind (all FP64), one
+        // with FP8 off-diagonals: the MxP plan must fit strictly more of
+        // the window (fewer budget drops) and charge each load its
+        // logical width
+        let nt = 16;
+        let s = Schedule::left_looking(nt, 1, 2);
+        let mut c = cfg(Version::V2, nt * 128, 128, 8);
+        c.vmem_bytes = Some((128 * 128 * 8) as u64 * 6);
+        let plan64 = build(&s, &c);
+        assert!(plan64.dropped_over_budget > 0, "need budget pressure");
+
+        let mut pm = PrecisionMap::uniform(nt, Precision::F64);
+        for i in 0..nt {
+            for j in 0..i {
+                pm.set(i, j, Precision::F8);
+            }
+        }
+        let ir = CompiledSchedule::compile_with_precisions(&s, &c, &pm);
+        let mxp = XferPlan::build(&ir, &c);
+        assert!(
+            mxp.dropped_over_budget < plan64.dropped_over_budget,
+            "MxP drops {} !< FP64 drops {}",
+            mxp.dropped_over_budget,
+            plan64.dropped_over_budget
+        );
+        assert!(mxp.total_planned > plan64.total_planned);
+        for gid in 0..s.total_streams() {
+            for pos in 0..s.jobs[gid].len() {
+                for l in mxp.loads_at(gid, pos) {
+                    let want = (128 * 128) as u64 * pm.get(l.tile.0, l.tile.1).width();
+                    assert_eq!(l.bytes, want, "load {:?} charged wrong width", l.tile);
+                }
             }
         }
     }

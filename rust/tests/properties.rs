@@ -226,6 +226,118 @@ fn block_cyclic_ownership_round_trips() {
 }
 
 #[test]
+fn per_precision_volumes_partition_totals_under_random_maps() {
+    // property: for ANY per-tile precision assignment, the counted
+    // per-precision H2D/D2H splits sum exactly to the direction totals,
+    // and the accumulator-resident versions write each tile back exactly
+    // once at its logical width (d2h == PrecisionMap::total_bytes)
+    use ooc_cholesky::precision::{Precision, PrecisionMap};
+    use ooc_cholesky::tiles::MatrixShape;
+    let mut rng = Rng::new(0x9EC15);
+    for trial in 0..16 {
+        let ts = 128usize;
+        let nt = 2 + rng.below(14) as usize;
+        let ndev = 1 + rng.below(3) as usize;
+        let spd = 1 + rng.below(3) as usize;
+        let version = [Version::V1, Version::V2, Version::V3][rng.below(3) as usize];
+        let mut pm = PrecisionMap::uniform(nt, Precision::F64);
+        for i in 0..nt {
+            for j in 0..i {
+                pm.set(i, j, ALL_PRECISIONS[rng.below(4) as usize]);
+            }
+        }
+        let tile_f64 = (ts * ts * 8) as u64;
+        let cfg = RunConfig {
+            n: nt * ts,
+            ts,
+            version,
+            mode: Mode::Model,
+            ndev,
+            streams_per_dev: spd,
+            vmem_bytes: Some(tile_f64 * (2 * spd as u64 + 4 + rng.below(24))),
+            prefetch_depth: rng.below(4) as usize,
+            seed: trial,
+            ..Default::default()
+        };
+        let shape = MatrixShape::with_map(nt * ts, ts, pm.clone());
+        let r = ooc_cholesky::exec::model::run(&cfg, &shape).unwrap();
+        let m = &r.metrics;
+        assert_eq!(
+            m.h2d_by_prec.iter().sum::<u64>(),
+            m.h2d_bytes,
+            "trial {trial}: H2D split does not partition the total"
+        );
+        assert_eq!(
+            m.d2h_by_prec.iter().sum::<u64>(),
+            m.d2h_bytes,
+            "trial {trial}: D2H split does not partition the total"
+        );
+        // V1-V3 write each tile back exactly once, at logical width
+        assert_eq!(
+            m.d2h_bytes,
+            pm.total_bytes(ts),
+            "trial {trial} {}: write-back volume not precision-true",
+            version.name()
+        );
+    }
+}
+
+#[test]
+fn mxp_counted_h2d_strictly_below_fp64_at_equal_capacity() {
+    // the acceptance gate: with 4 precisions enabled at accuracy 1e-5
+    // (weak correlation), the *counted* H2D bytes must be strictly lower
+    // than the FP64-only run at identical n/ts/capacity — the paper's
+    // §IV-C data-movement claim, on exact counters rather than the model
+    // 2 GiB holds ~61 FP64 tiles of the 136-tile triangle, so the
+    // FP64-only run churns (the DES mock measures 288 misses / 209
+    // evictions) while the 4-precision working set fits outright
+    let base = RunConfig {
+        n: 32 * 1024,
+        ts: 2048,
+        version: Version::V3,
+        mode: Mode::Model,
+        streams_per_dev: 8,
+        vmem_bytes: Some(2 * 1024 * 1024 * 1024),
+        beta: 0.02627, // weak correlation -> aggressive downcasts
+        accuracy: 1e-5,
+        ..Default::default()
+    };
+    let f64_only = ooc::factorize(&base, None).unwrap();
+    let mxp = ooc::factorize(
+        &RunConfig { precisions: ALL_PRECISIONS.to_vec(), ..base.clone() },
+        None,
+    )
+    .unwrap();
+    assert!(
+        mxp.precision_histogram[0] + mxp.precision_histogram[1] + mxp.precision_histogram[2] > 0,
+        "no tiles downcast: {:?}",
+        mxp.precision_histogram
+    );
+    assert!(
+        mxp.metrics.h2d_bytes < f64_only.metrics.h2d_bytes,
+        "MxP H2D {} !< FP64 H2D {}",
+        mxp.metrics.h2d_bytes,
+        f64_only.metrics.h2d_bytes
+    );
+    // wider effective capacity: at this pressure the MxP run must miss
+    // strictly less (low-precision tiles keep the working set resident)
+    assert!(
+        mxp.metrics.cache_misses < f64_only.metrics.cache_misses,
+        "MxP misses {} !< FP64 misses {}",
+        mxp.metrics.cache_misses,
+        f64_only.metrics.cache_misses
+    );
+    // and the histogram is surfaced end to end
+    assert!(mxp.metrics.h2d_by_prec[3] > 0, "diagonals stay f64");
+    let line = mxp.summary_line();
+    assert!(line.contains("h2d/prec"), "summary line missing the split: {line}");
+    let j = mxp.metrics.to_json();
+    assert_eq!(j.get("h2d_by_prec").as_arr().unwrap().len(), 4);
+    let golden = mxp.golden_metrics_string();
+    assert!(golden.contains("h2d_bytes_f8"), "golden format missing the split");
+}
+
+#[test]
 fn planned_prefetches_land_on_the_owning_device() {
     // property: every xfer::plan load is queued for the device that owns
     // the consuming job's target row — plans never cross devices

@@ -1,0 +1,56 @@
+#!/usr/bin/env python3
+"""Markdown link checker for the docs CI gate.
+
+Verifies that every relative link target in the given markdown files
+exists on disk (anchors are stripped; http(s)/mailto links are
+skipped). No dependencies beyond the standard library, so it runs in
+any CI image and in toolchain-less containers.
+
+Usage: python3 tools/check_links.py README.md DESIGN.md EXPERIMENTS.md
+Exit status 1 if any link is broken.
+"""
+import os
+import re
+import sys
+
+# [text](target) — excludes images' leading "!" context only in that the
+# target rules are identical, so images are checked too.
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+
+def check(path):
+    broken = []
+    base = os.path.dirname(os.path.abspath(path))
+    with open(path, encoding="utf-8") as f:
+        text = f.read()
+    # drop fenced code blocks: shell snippets legitimately contain
+    # bracketed text that is not a link
+    text = re.sub(r"```.*?```", "", text, flags=re.S)
+    for target in LINK_RE.findall(text):
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        file_part = target.split("#", 1)[0]
+        if not file_part:  # pure in-page anchor
+            continue
+        if not os.path.exists(os.path.join(base, file_part)):
+            broken.append((path, target))
+    return broken
+
+def main(argv):
+    if len(argv) < 2:
+        print(__doc__)
+        return 2
+    broken = []
+    for path in argv[1:]:
+        if not os.path.exists(path):
+            broken.append((path, "<file itself missing>"))
+            continue
+        broken.extend(check(path))
+    for path, target in broken:
+        print(f"BROKEN: {path}: ({target})")
+    if broken:
+        return 1
+    print(f"ok: {len(argv) - 1} file(s), no broken relative links")
+    return 0
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))
