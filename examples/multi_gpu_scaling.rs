@@ -42,6 +42,30 @@ fn main() -> anyhow::Result<()> {
         );
     }
 
+    println!("\n=== D2D routing vs host-only (gh200-quad, 4 GPUs, 128k) ===");
+    for (label, d2d_routing) in
+        [("topology-routed (NVLink peers)", true), ("host-only baseline", false)]
+    {
+        let cfg = RunConfig {
+            n: 128 * 1024,
+            ts: 2048,
+            version: Version::V3,
+            mode: Mode::Model,
+            hw: HwProfile::gh200_quad(),
+            ndev: 4,
+            streams_per_dev: 8,
+            d2d_routing,
+            ..Default::default()
+        };
+        let r = ooc::factorize(&cfg, None)?;
+        println!(
+            "  {label:<34} {:>8.1} TFlop/s  h2d {:>7.1} GB  d2d {:>7.1} GB",
+            r.tflops,
+            r.metrics.h2d_bytes as f64 / 1e9,
+            r.metrics.d2d_bytes as f64 / 1e9,
+        );
+    }
+
     println!("\n=== NUMA placement ablation (4 GPUs, 128k) ===");
     for (label, remote_gbps) in
         [("block-cyclic NUMA-aware (paper)", 100.0), ("all-remote worst case", 0.0)]

@@ -14,7 +14,7 @@ fn main() -> anyhow::Result<()> {
     let n = 160 * 1024;
 
     println!("=== 160k x 160k FP64 Cholesky, one GPU, out-of-core ===");
-    for hw_name in HwProfile::ALL_NAMES {
+    for hw_name in HwProfile::SINGLE_GPU_NAMES {
         let hw = HwProfile::by_name(hw_name).unwrap();
         let ts = if hw.h2d_gbps < 100.0 { 4096 } else { 2048 };
         println!("\n--- {} (tile {ts}) ---", hw.name);

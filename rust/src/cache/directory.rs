@@ -1,0 +1,287 @@
+//! The global tile-residency directory: which devices hold which tile
+//! copies, at which precision, clean or dirty.
+//!
+//! The paper's multi-GPU story (§V-B) needs an answer the per-device
+//! [`crate::cache::CacheTable`]s cannot give: *"does some other device
+//! already hold this tile?"* The directory is that answer — one shared
+//! table the executors keep in sync with every cache insert, eviction
+//! and invalidation, consulted by the D2D routing path (a read whose
+//! compiled route says `Peer { src }` is served over the peer link only
+//! when the directory confirms `src` still holds a clean copy; otherwise
+//! it falls back to the host).
+//!
+//! Invariants (checked by [`ResidencyDirectory::check_invariants`] and
+//! the randomized property tests):
+//!
+//! * **clean ⊆ cache** — every clean entry corresponds to a live entry
+//!   in that device's cache table. Evictions and invalidations must be
+//!   reported via [`ResidencyDirectory::record_evict`]; the
+//!   [`crate::cache::CacheTable`] eviction log exists so no steal can be
+//!   missed.
+//! * **single dirty owner** — at most one device is marked dirty for a
+//!   tile, set by [`ResidencyDirectory::begin_write`] (which also
+//!   invalidates every stale clean copy — the caller drops them from the
+//!   corresponding caches) and cleared by
+//!   [`ResidencyDirectory::end_write`] once the write-back lands on the
+//!   host. Dirty entries describe the writer's accumulator, which lives
+//!   outside the cache tables, so the subset invariant applies to clean
+//!   entries only.
+
+use crate::precision::Precision;
+
+use super::TileKey;
+
+#[derive(Debug, Default, Clone)]
+struct TileEntry {
+    /// clean holders: (device, storage precision), at most one per device
+    clean: Vec<(usize, Precision)>,
+    /// the single dirty owner, if a write is in flight
+    dirty: Option<(usize, Precision)>,
+}
+
+type DirMap = std::collections::HashMap<
+    TileKey,
+    TileEntry,
+    std::hash::BuildHasherDefault<super::TileHasher>,
+>;
+
+/// Global residency directory for one run (all devices).
+#[derive(Debug)]
+pub struct ResidencyDirectory {
+    ndev: usize,
+    tiles: DirMap,
+}
+
+impl ResidencyDirectory {
+    pub fn new(ndev: usize) -> ResidencyDirectory {
+        ResidencyDirectory { ndev, tiles: Default::default() }
+    }
+
+    pub fn ndev(&self) -> usize {
+        self.ndev
+    }
+
+    /// A clean copy of `tile` entered `dev`'s cache (demand load,
+    /// prefetch, or peer copy). Idempotent per device.
+    pub fn record_load(&mut self, tile: TileKey, dev: usize, prec: Precision) {
+        debug_assert!(dev < self.ndev);
+        let e = self.tiles.entry(tile).or_default();
+        if !e.clean.iter().any(|&(d, _)| d == dev) {
+            e.clean.push((dev, prec));
+        }
+    }
+
+    /// `dev`'s copy of `tile` left its cache (steal or invalidation).
+    /// No-op if the directory never knew about it.
+    pub fn record_evict(&mut self, tile: TileKey, dev: usize) {
+        if let Some(e) = self.tiles.get_mut(&tile) {
+            e.clean.retain(|&(d, _)| d != dev);
+            if e.clean.is_empty() && e.dirty.is_none() {
+                self.tiles.remove(&tile);
+            }
+        }
+    }
+
+    /// `dev` starts (re)writing `tile`: it becomes the single dirty
+    /// owner, and every clean copy anywhere is stale. Returns the
+    /// devices whose cached copies must be dropped (the caller
+    /// invalidates those cache tables — including `dev`'s own, since the
+    /// accumulator lives outside the cache).
+    pub fn begin_write(&mut self, tile: TileKey, dev: usize, prec: Precision) -> Vec<usize> {
+        debug_assert!(dev < self.ndev);
+        let e = self.tiles.entry(tile).or_default();
+        debug_assert!(
+            e.dirty.is_none(),
+            "second dirty owner for {tile:?}: {:?} then {dev}",
+            e.dirty
+        );
+        let stale: Vec<usize> = e.clean.iter().map(|&(d, _)| d).collect();
+        e.clean.clear();
+        e.dirty = Some((dev, prec));
+        stale
+    }
+
+    /// The write-back of `tile` from `dev` landed on the host: the dirty
+    /// marker clears. The written buffer is *not* retained in any cache
+    /// (accumulators are released), so no clean entry appears here —
+    /// future residency comes from demand loads.
+    pub fn end_write(&mut self, tile: TileKey, dev: usize) {
+        if let Some(e) = self.tiles.get_mut(&tile) {
+            debug_assert_eq!(e.dirty.map(|(d, _)| d), Some(dev), "{tile:?}");
+            e.dirty = None;
+            if e.clean.is_empty() {
+                self.tiles.remove(&tile);
+            }
+        }
+    }
+
+    /// Does `dev` hold a clean copy of `tile`? (The D2D routing probe.)
+    pub fn clean_holder(&self, tile: TileKey, dev: usize) -> bool {
+        self.tiles
+            .get(&tile)
+            .map(|e| e.clean.iter().any(|&(d, _)| d == dev))
+            .unwrap_or(false)
+    }
+
+    /// All devices holding a clean copy of `tile`.
+    pub fn holders(&self, tile: TileKey) -> Vec<(usize, Precision)> {
+        self.tiles.get(&tile).map(|e| e.clean.clone()).unwrap_or_default()
+    }
+
+    /// The dirty owner of `tile`, if a write is in flight.
+    pub fn dirty_owner(&self, tile: TileKey) -> Option<usize> {
+        self.tiles.get(&tile).and_then(|e| e.dirty.map(|(d, _)| d))
+    }
+
+    /// Number of tiles with at least one recorded copy.
+    pub fn len(&self) -> usize {
+        self.tiles.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tiles.is_empty()
+    }
+
+    /// Check both directory invariants against the caches' ground truth:
+    /// `resident(dev, tile)` must say whether `dev`'s cache currently
+    /// holds `tile`. Clean entries must be a subset of live cache
+    /// entries, per-device entries unique, and dirty owners single by
+    /// construction (re-checked here for belt and braces).
+    pub fn check_invariants(
+        &self,
+        resident: impl Fn(usize, TileKey) -> bool,
+    ) -> Result<(), String> {
+        for (&tile, e) in &self.tiles {
+            let mut seen = vec![false; self.ndev];
+            for &(d, _) in &e.clean {
+                if d >= self.ndev {
+                    return Err(format!("{tile:?}: bogus device {d}"));
+                }
+                if seen[d] {
+                    return Err(format!("{tile:?}: duplicate clean entry on device {d}"));
+                }
+                seen[d] = true;
+                if !resident(d, tile) {
+                    return Err(format!(
+                        "{tile:?}: directory says device {d} holds it, cache disagrees"
+                    ));
+                }
+            }
+            if e.clean.is_empty() && e.dirty.is_none() {
+                return Err(format!("{tile:?}: empty entry not reaped"));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const P: Precision = Precision::F64;
+
+    #[test]
+    fn load_evict_roundtrip() {
+        let mut d = ResidencyDirectory::new(2);
+        d.record_load((3, 1), 0, P);
+        d.record_load((3, 1), 1, Precision::F16);
+        d.record_load((3, 1), 0, P); // idempotent
+        assert!(d.clean_holder((3, 1), 0) && d.clean_holder((3, 1), 1));
+        assert_eq!(d.holders((3, 1)).len(), 2);
+        d.record_evict((3, 1), 0);
+        assert!(!d.clean_holder((3, 1), 0));
+        assert!(d.clean_holder((3, 1), 1));
+        d.record_evict((3, 1), 1);
+        assert!(d.is_empty(), "empty entries are reaped");
+        d.record_evict((9, 9), 0); // unknown tile: no-op
+    }
+
+    #[test]
+    fn write_invalidates_all_clean_copies() {
+        let mut d = ResidencyDirectory::new(3);
+        d.record_load((4, 2), 0, P);
+        d.record_load((4, 2), 2, P);
+        let stale = d.begin_write((4, 2), 1, P);
+        assert_eq!({ let mut s = stale.clone(); s.sort_unstable(); s }, vec![0, 2]);
+        assert!(!d.clean_holder((4, 2), 0) && !d.clean_holder((4, 2), 2));
+        assert_eq!(d.dirty_owner((4, 2)), Some(1));
+        d.end_write((4, 2), 1);
+        assert_eq!(d.dirty_owner((4, 2)), None);
+        assert!(d.is_empty());
+    }
+
+    #[test]
+    #[cfg_attr(not(debug_assertions), ignore)]
+    #[should_panic(expected = "second dirty owner")]
+    fn two_dirty_owners_rejected() {
+        let mut d = ResidencyDirectory::new(2);
+        d.begin_write((0, 0), 0, P);
+        d.begin_write((0, 0), 1, P);
+    }
+
+    #[test]
+    fn invariant_check_catches_directory_cache_drift() {
+        let mut d = ResidencyDirectory::new(2);
+        d.record_load((1, 0), 0, P);
+        // cache agrees -> ok
+        d.check_invariants(|dev, tile| dev == 0 && tile == (1, 0)).unwrap();
+        // cache lost the entry without record_evict -> violation
+        assert!(d.check_invariants(|_, _| false).is_err());
+    }
+
+    #[test]
+    fn random_op_sequences_preserve_invariants() {
+        // drive the directory with a random but legal op sequence against
+        // a mirrored model of per-device cache contents; the invariants
+        // must hold after every step
+        let mut rng = crate::util::rng::Rng::new(0xD1CE);
+        for trial in 0..30 {
+            let ndev = 1 + rng.below(4) as usize;
+            let mut d = ResidencyDirectory::new(ndev);
+            let mut caches: Vec<std::collections::HashSet<TileKey>> =
+                vec![Default::default(); ndev];
+            let mut dirty: Option<(TileKey, usize)> = None;
+            for _ in 0..400 {
+                let tile = (rng.below(6) as usize, rng.below(6) as usize);
+                let dev = rng.below(ndev as u64) as usize;
+                match rng.below(4) {
+                    0 => {
+                        // a load may only add a clean copy of a tile that
+                        // is not mid-write (executors load final tiles)
+                        if dirty.map(|(t, _)| t != tile).unwrap_or(true) {
+                            caches[dev].insert(tile);
+                            d.record_load(tile, dev, P);
+                        }
+                    }
+                    1 => {
+                        caches[dev].remove(&tile);
+                        d.record_evict(tile, dev);
+                    }
+                    2 => {
+                        if dirty.is_none() {
+                            // drop the stale copies the directory reports
+                            for stale in d.begin_write(tile, dev, P) {
+                                caches[stale].remove(&tile);
+                            }
+                            dirty = Some((tile, dev));
+                        }
+                    }
+                    _ => {
+                        if let Some((t, w)) = dirty.take() {
+                            d.end_write(t, w);
+                        }
+                    }
+                }
+                d.check_invariants(|dev, t| caches[dev].contains(&t))
+                    .unwrap_or_else(|e| panic!("trial {trial}: {e}"));
+                // single dirty owner, globally
+                let owners = (0..6)
+                    .flat_map(|i| (0..6).map(move |j| (i, j)))
+                    .filter(|&t| d.dirty_owner(t).is_some())
+                    .count();
+                assert!(owners <= 1, "trial {trial}: {owners} dirty tiles");
+            }
+        }
+    }
+}

@@ -24,8 +24,10 @@
 //! tiles than an FP64-only run at the same capacity — the cache half of
 //! the paper's §IV-C data-movement economics.
 
+mod directory;
 mod policy;
 
+pub use directory::ResidencyDirectory;
 pub use policy::{expected_access_count, Policy};
 
 use std::collections::HashMap;
@@ -100,6 +102,11 @@ pub struct CacheTable<T> {
     /// `access_base` across the device's *active* streams, set by the
     /// executors at job start (never advanced mid-job)
     belady_clock: u64,
+    /// keys removed since the last [`CacheTable::drain_evicted`] — every
+    /// steal and invalidation lands here so the executors can mirror the
+    /// removals into the [`ResidencyDirectory`] (its clean-subset
+    /// invariant depends on no removal going unreported)
+    evicted_log: Vec<TileKey>,
 }
 
 /// Build the [`Policy`] for device `dev` from the run config. The
@@ -145,6 +152,7 @@ impl<T> CacheTable<T> {
             policy,
             access_seq: 0,
             belady_clock: 0,
+            evicted_log: Vec::new(),
         }
     }
 
@@ -210,6 +218,26 @@ impl<T> CacheTable<T> {
     /// whether a planned load is still worth performing.
     pub fn peek(&self, key: TileKey) -> bool {
         self.operand_caching && self.entries.contains_key(&key)
+    }
+
+    /// Payload fetch that perturbs nothing — the D2D path's read of a
+    /// *peer* cache. A peer copy is sourced without bumping the owner's
+    /// LRU or counting a hit/miss on its metrics: the owning device
+    /// neither requested nor benefits from this access, so its eviction
+    /// order and hit-rate accounting must not see it.
+    pub fn peek_get(&self, key: TileKey) -> Option<Arc<T>> {
+        if !self.operand_caching {
+            return None;
+        }
+        self.entries.get(&key).map(|e| e.payload.clone())
+    }
+
+    /// Drain the keys removed (stolen or invalidated) since the last
+    /// call. The executors feed these to the
+    /// [`ResidencyDirectory`] so it never claims a copy the cache no
+    /// longer holds.
+    pub fn drain_evicted(&mut self) -> Vec<TileKey> {
+        std::mem::take(&mut self.evicted_log)
     }
 
     /// Would `bytes` fit without stealing anything?
@@ -298,6 +326,7 @@ impl<T> CacheTable<T> {
                 Some(k) => {
                     let e = self.entries.remove(&k).unwrap();
                     self.cached_bytes -= e.bytes;
+                    self.evicted_log.push(k);
                     metrics.cache_evictions.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
                 }
                 None => return false, // everything pinned
@@ -342,10 +371,12 @@ impl<T> CacheTable<T> {
     }
 
     /// Drop a tile outright (e.g. a stale pre-factor copy after the
-    /// factored version was written back).
+    /// factored version was written back, or a directory-driven
+    /// invalidation on write).
     pub fn invalidate(&mut self, key: TileKey) {
         if let Some(e) = self.entries.remove(&key) {
             self.cached_bytes -= e.bytes;
+            self.evicted_log.push(key);
         }
     }
 
@@ -546,6 +577,37 @@ mod tests {
         assert_eq!(c.len(), 1);
         assert_eq!(met.snapshot().cache_evictions, 8);
         c.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn eviction_log_reports_every_removal() {
+        let met = m();
+        let mut c: CacheTable<u32> = CacheTable::new(200, true);
+        c.insert((0, 0), 100, Arc::new(0), &met);
+        c.insert((1, 0), 100, Arc::new(1), &met);
+        assert!(c.drain_evicted().is_empty(), "no removals yet");
+        c.insert((2, 0), 100, Arc::new(2), &met); // steals (0,0)
+        c.invalidate((1, 0));
+        let mut gone = c.drain_evicted();
+        gone.sort_unstable();
+        assert_eq!(gone, vec![(0, 0), (1, 0)]);
+        assert!(c.drain_evicted().is_empty(), "drain empties the log");
+    }
+
+    #[test]
+    fn peek_get_returns_payload_without_perturbing() {
+        let met = m();
+        let mut c: CacheTable<u32> = CacheTable::new(300, true);
+        c.insert((0, 0), 100, Arc::new(7), &met);
+        c.insert((1, 0), 100, Arc::new(8), &met);
+        let before = met.snapshot();
+        assert_eq!(*c.peek_get((0, 0)).unwrap(), 7);
+        assert!(c.peek_get((9, 9)).is_none());
+        assert_eq!(met.snapshot(), before, "peek_get must not count hits/misses");
+        // (0,0) stays LRU despite the peer read: the next steal takes it
+        c.insert((2, 0), 100, Arc::new(9), &met);
+        c.insert((3, 0), 100, Arc::new(10), &met);
+        assert!(!c.peek((0, 0)), "peer reads must not refresh LRU order");
     }
 
     #[test]

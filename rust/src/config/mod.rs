@@ -10,6 +10,15 @@
 //! about a GPU SKU + interconnect: per-precision peak rates, link
 //! bandwidths/latency, memory capacity, and the malloc/free cost that
 //! penalizes the paper's `async` baseline.
+//!
+//! [`LinkModel`] expands a profile into the full per-link topology of an
+//! `ndev`-device node — one H2D/D2H link per (host NUMA domain, device)
+//! pair and one D2D link per device pair — with NUMA locality,
+//! pinned/pageable derating, and per-link latency folded into the link
+//! parameters at build time. Every transfer-time question in the stack
+//! (DES copy engines, compile-time start estimates, prefetch deadlines,
+//! peer-vs-host routing) goes through a [`Link`], never through ad-hoc
+//! scalar bandwidth pairs.
 
 use std::collections::BTreeMap;
 
@@ -137,10 +146,16 @@ pub struct HwProfile {
     pub h2d_gbps: f64,
     /// D2H bandwidth GB/s
     pub d2h_gbps: f64,
-    /// per-transfer latency, µs
+    /// per-transfer latency on host links, µs
     pub latency_us: f64,
     /// bandwidth to a NUMA-remote host memory, GB/s (multi-GPU GH200)
     pub numa_remote_gbps: f64,
+    /// device↔device peer link bandwidth GB/s: NVLink-class on the GH200
+    /// profiles, PCIe-P2P-class (slightly below the host link, bouncing
+    /// through the switch) on the PCIe SKUs
+    pub d2d_gbps: f64,
+    /// per-transfer latency on peer links, µs
+    pub d2d_latency_us: f64,
     /// pageable-memory bandwidth derating (sync baseline w/o pinning)
     pub pageable_factor: f64,
     /// device memory, GiB
@@ -150,6 +165,69 @@ pub struct HwProfile {
     /// fraction of peak a ts×ts GEMM achieves (surface-to-volume):
     /// eff = ts / (ts + eff_knee)
     pub eff_knee: f64,
+}
+
+/// One directed link: everything needed to time a transfer over it.
+/// NUMA locality and pinned/pageable derating are folded into `gbps` by
+/// [`HwProfile::link_model`], so call sites never thread those flags.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Link {
+    /// effective bandwidth, GB/s
+    pub gbps: f64,
+    /// per-transfer latency, µs
+    pub latency_us: f64,
+}
+
+impl Link {
+    /// Seconds to move `bytes` over this link.
+    pub fn time(&self, bytes: u64) -> f64 {
+        self.latency_us * 1e-6 + bytes as f64 / (self.gbps * 1e9)
+    }
+}
+
+/// The full link topology of an `ndev`-device node, expanded from a
+/// [`HwProfile`]: host↔device links per (host NUMA domain, device) pair
+/// — host memory for a tile row is allocated NUMA-local to the row's
+/// owning device (Fig. 5b), so the *owner* index selects the domain —
+/// and device↔device peer links per device pair. Built once per run (and
+/// once per compile, always pinned) and consulted by the DES copy
+/// engines, the schedule compiler's start estimates, the transfer plan's
+/// deadlines, and the peer-vs-host routing decision.
+#[derive(Debug, Clone)]
+pub struct LinkModel {
+    pub ndev: usize,
+    /// `h2d[owner][dst]`: host NUMA domain of `owner` → device `dst`
+    h2d: Vec<Vec<Link>>,
+    /// `d2h[src][owner]`: device `src` → host NUMA domain of `owner`
+    d2h: Vec<Vec<Link>>,
+    /// `d2d[src][dst]`: peer link (src == dst entries are unused)
+    d2d: Vec<Vec<Link>>,
+}
+
+impl LinkModel {
+    pub fn h2d(&self, owner: usize, dst: usize) -> &Link {
+        &self.h2d[owner][dst]
+    }
+    pub fn d2h(&self, src: usize, owner: usize) -> &Link {
+        &self.d2h[src][owner]
+    }
+    pub fn d2d(&self, src: usize, dst: usize) -> &Link {
+        debug_assert_ne!(src, dst, "no self peer link");
+        &self.d2d[src][dst]
+    }
+
+    /// Seconds to load `bytes` from the host domain of `owner` onto `dst`.
+    pub fn h2d_time(&self, bytes: u64, owner: usize, dst: usize) -> f64 {
+        self.h2d[owner][dst].time(bytes)
+    }
+    /// Seconds to write `bytes` from `src` back to the host domain of `owner`.
+    pub fn d2h_time(&self, bytes: u64, src: usize, owner: usize) -> f64 {
+        self.d2h[src][owner].time(bytes)
+    }
+    /// Seconds to copy `bytes` device-to-device over the peer link.
+    pub fn d2d_time(&self, bytes: u64, src: usize, dst: usize) -> f64 {
+        self.d2d[src][dst].time(bytes)
+    }
 }
 
 impl HwProfile {
@@ -172,16 +250,41 @@ impl HwProfile {
         flops / (self.tflops_for(p) * 1e12 * self.efficiency(ts))
     }
 
-    /// Seconds to move `bytes` H2D (`to_device=true`) or D2H.
-    pub fn transfer_time(&self, bytes: u64, to_device: bool, numa_local: bool, pinned: bool) -> f64 {
-        let mut gbps = if to_device { self.h2d_gbps } else { self.d2h_gbps };
-        if !numa_local {
-            gbps = gbps.min(self.numa_remote_gbps);
-        }
-        if !pinned {
-            gbps *= self.pageable_factor;
-        }
-        self.latency_us * 1e-6 + bytes as f64 / (gbps * 1e9)
+    /// Expand this profile into the per-link topology of an `ndev` node.
+    /// NUMA locality (a device reaching another domain's host memory is
+    /// capped at `numa_remote_gbps`) and the pinned/pageable derating are
+    /// folded into each link's effective bandwidth here — call sites
+    /// never pass locality or pinning flags again.
+    pub fn link_model(&self, ndev: usize, pinned: bool) -> LinkModel {
+        let derate = |mut gbps: f64, local: bool| {
+            if !local {
+                gbps = gbps.min(self.numa_remote_gbps);
+            }
+            if !pinned {
+                gbps *= self.pageable_factor;
+            }
+            gbps
+        };
+        let host_link = |base: f64, owner: usize, dev: usize| Link {
+            gbps: derate(base, owner == dev),
+            latency_us: self.latency_us,
+        };
+        let h2d = (0..ndev)
+            .map(|o| (0..ndev).map(|d| host_link(self.h2d_gbps, o, d)).collect())
+            .collect();
+        let d2h = (0..ndev)
+            .map(|s| (0..ndev).map(|o| host_link(self.d2h_gbps, o, s)).collect())
+            .collect();
+        // peer links are device-paged DMA: the pageable derating never
+        // applies, and every pair shares the preset's peer class
+        let d2d = (0..ndev)
+            .map(|_| {
+                (0..ndev)
+                    .map(|_| Link { gbps: self.d2d_gbps, latency_us: self.d2d_latency_us })
+                    .collect()
+            })
+            .collect();
+        LinkModel { ndev, h2d, d2h, d2d }
     }
 
     pub fn vmem_bytes(&self) -> u64 {
@@ -199,6 +302,10 @@ impl HwProfile {
             d2h_gbps: 25.0,
             latency_us: 10.0,
             numa_remote_gbps: 25.0,
+            // PCIe-peer preset: P2P through the switch lands slightly
+            // below the host link, so the router prefers host sourcing
+            d2d_gbps: 22.0,
+            d2d_latency_us: 10.0,
             pageable_factor: 0.55,
             vmem_gib: 80.0,
             malloc_us: 120.0,
@@ -217,6 +324,9 @@ impl HwProfile {
             d2h_gbps: 50.0,
             latency_us: 8.0,
             numa_remote_gbps: 50.0,
+            // PCIe-peer preset (Gen5 P2P through the switch)
+            d2d_gbps: 45.0,
+            d2d_latency_us: 8.0,
             pageable_factor: 0.55,
             vmem_gib: 80.0,
             malloc_us: 110.0,
@@ -235,10 +345,30 @@ impl HwProfile {
             d2h_gbps: 450.0,
             latency_us: 2.0,
             numa_remote_gbps: 100.0,
+            // NVLink-peer preset: NVLink 4 between superchips beats the
+            // 100 GB/s cross-Grace host path 3:1, so cross-device reads
+            // route device-to-device
+            d2d_gbps: 300.0,
+            d2d_latency_us: 2.0,
             pageable_factor: 0.85, // C2C cache-coherent; pinning matters less
             vmem_gib: 80.0,
             malloc_us: 100.0,
             eff_knee: 160.0,
+        }
+    }
+
+    /// Four GH200 superchips in one NVLink-connected node (§V-B's
+    /// scaling testbed). Same per-chip rates as [`Self::gh200_nvlc2c`];
+    /// what changes is the topology the link model expands to: each GPU
+    /// sees its own Grace at 450 GB/s, a *remote* Grace at only
+    /// 100 GB/s, and every peer GPU over NVLink at 300 GB/s — so at
+    /// `ndev > 1` the router sources cross-device tiles from peers
+    /// instead of round-tripping the cross-Grace host path.
+    pub fn gh200_quad() -> Self {
+        HwProfile {
+            name: "gh200-quad".into(),
+            vmem_gib: 96.0, // the quad node ships the 96 GB HBM3e variant
+            ..Self::gh200_nvlc2c()
         }
     }
 
@@ -247,11 +377,20 @@ impl HwProfile {
             "a100" | "a100-pcie4" => Some(Self::a100_pcie4()),
             "h100" | "h100-pcie5" => Some(Self::h100_pcie5()),
             "gh200" | "gh200-nvlc2c" => Some(Self::gh200_nvlc2c()),
+            "gh200-quad" | "quad" => Some(Self::gh200_quad()),
             _ => None,
         }
     }
 
-    pub const ALL_NAMES: [&'static str; 3] = ["a100-pcie4", "h100-pcie5", "gh200-nvlc2c"];
+    pub const ALL_NAMES: [&'static str; 4] =
+        ["a100-pcie4", "h100-pcie5", "gh200-nvlc2c", "gh200-quad"];
+
+    /// The single-GPU SKUs the per-device figures sweep (Figs. 6/8).
+    /// `gh200-quad` is excluded: at `ndev == 1` it differs from
+    /// `gh200-nvlc2c` only in memory size — it exists for the
+    /// multi-device harnesses (Fig. 9, `figure scaling`).
+    pub const SINGLE_GPU_NAMES: [&'static str; 3] =
+        ["a100-pcie4", "h100-pcie5", "gh200-nvlc2c"];
 }
 
 /// Everything one factorization run needs.
@@ -287,6 +426,13 @@ pub struct RunConfig {
     /// effective for the operand-caching versions V2/V3 only — see
     /// [`crate::xfer`])
     pub prefetch_depth: usize,
+    /// topology-aware routing: when true (default), the schedule
+    /// compiler sources a cross-device read from the peer holding it
+    /// whenever the link model says the D2D link beats the host path
+    /// (`--routing host` disables it — the host-only baseline the D2D
+    /// acceptance test compares against). No-op at `ndev == 1` and for
+    /// versions without an operand cache.
+    pub d2d_routing: bool,
     /// capture an event trace
     pub trace: bool,
     /// verify factor against the pure-Rust oracle (real mode, small n)
@@ -313,6 +459,7 @@ impl Default for RunConfig {
             seed: 42,
             eviction: EvictionKind::Lru,
             prefetch_depth: 0,
+            d2d_routing: true,
             trace: false,
             verify: false,
         }
@@ -419,6 +566,13 @@ impl RunConfig {
                     if v.as_bool().ok_or("prefetch: expected bool")? { 1 } else { 0 }
             }
             "prefetch_depth" => self.prefetch_depth = num()? as usize,
+            "routing" => {
+                self.d2d_routing = match st()? {
+                    "d2d" | "peer" => true,
+                    "host" => false,
+                    other => return Err(format!("bad routing {other:?} (d2d|host)")),
+                }
+            }
             "trace" => self.trace = v.as_bool().ok_or("trace: expected bool")?,
             "verify" => self.verify = v.as_bool().ok_or("verify: expected bool")?,
             other => return Err(format!("unknown config key {other:?}")),
@@ -454,6 +608,7 @@ impl RunConfig {
         m.insert("seed".into(), Json::num(self.seed as f64));
         m.insert("eviction".into(), Json::str(self.eviction.name()));
         m.insert("prefetch_depth".into(), Json::num(self.prefetch_depth as f64));
+        m.insert("routing".into(), Json::str(if self.d2d_routing { "d2d" } else { "host" }));
         Json::Obj(m)
     }
 }
@@ -525,6 +680,20 @@ mod tests {
     }
 
     #[test]
+    fn routing_key_parses() {
+        let mut cfg = RunConfig::default();
+        assert!(cfg.d2d_routing, "topology routing is the default");
+        let j = crate::util::json::parse(r#"{"routing": "host"}"#).unwrap();
+        cfg.apply_json(&j).unwrap();
+        assert!(!cfg.d2d_routing);
+        let j = crate::util::json::parse(r#"{"routing": "d2d"}"#).unwrap();
+        cfg.apply_json(&j).unwrap();
+        assert!(cfg.d2d_routing);
+        let j = crate::util::json::parse(r#"{"routing": "bogus"}"#).unwrap();
+        assert!(cfg.apply_json(&j).is_err());
+    }
+
+    #[test]
     fn unknown_key_rejected() {
         let mut cfg = RunConfig::default();
         let j = crate::util::json::parse(r#"{"bogus": 1}"#).unwrap();
@@ -548,7 +717,7 @@ mod tests {
         for name in HwProfile::ALL_NAMES {
             let hw = HwProfile::by_name(name).unwrap();
             assert!(hw.tflops[0] > 0.0 && hw.tflops[3] >= hw.tflops[2]);
-            assert!(hw.h2d_gbps > 0.0);
+            assert!(hw.h2d_gbps > 0.0 && hw.d2d_gbps > 0.0);
             assert!(hw.efficiency(256) > 0.4 && hw.efficiency(256) < 1.0);
             // bigger tiles -> better efficiency
             assert!(hw.efficiency(2048) > hw.efficiency(256));
@@ -557,21 +726,56 @@ mod tests {
         let gh = HwProfile::gh200_nvlc2c();
         let h1 = HwProfile::h100_pcie5();
         assert!(gh.h2d_gbps / h1.h2d_gbps >= 5.0);
+        // NVLink-peer vs PCIe-peer presets: on the GH200s the peer link
+        // beats the cross-NUMA host path (routing prefers D2D); on the
+        // PCIe SKUs it does not (routing stays host-only)
+        for name in ["gh200-nvlc2c", "gh200-quad"] {
+            let hw = HwProfile::by_name(name).unwrap();
+            assert!(hw.d2d_gbps > hw.numa_remote_gbps, "{name}");
+        }
+        for name in ["a100-pcie4", "h100-pcie5"] {
+            let hw = HwProfile::by_name(name).unwrap();
+            assert!(hw.d2d_gbps < hw.numa_remote_gbps.min(hw.h2d_gbps), "{name}");
+        }
+        assert_eq!(HwProfile::gh200_quad().tflops, gh.tflops, "same silicon per chip");
     }
 
     #[test]
-    fn transfer_time_monotone() {
+    fn link_model_folds_locality_and_pinning() {
         let hw = HwProfile::h100_pcie5();
-        let t1 = hw.transfer_time(1 << 20, true, true, true);
-        let t2 = hw.transfer_time(1 << 24, true, true, true);
-        assert!(t2 > t1);
-        // pageable slower than pinned; NUMA-remote slower than local
-        assert!(hw.transfer_time(1 << 24, true, true, false) > t2);
-        let gh = HwProfile::gh200_nvlc2c();
+        let lm = hw.link_model(2, true);
+        let t1 = lm.h2d_time(1 << 20, 0, 0);
+        let t2 = lm.h2d_time(1 << 24, 0, 0);
+        assert!(t2 > t1, "time monotone in bytes");
+        // pageable links are derated
+        let pageable = hw.link_model(2, false);
+        assert!(pageable.h2d_time(1 << 24, 0, 0) > t2);
         assert!(
-            gh.transfer_time(1 << 24, true, false, true)
-                > gh.transfer_time(1 << 24, true, true, true)
+            (pageable.h2d(0, 0).gbps - hw.h2d_gbps * hw.pageable_factor).abs() < 1e-12,
+            "derating applied exactly once"
         );
+        // NUMA-remote host links are capped; peer links are not derated
+        let gh = HwProfile::gh200_nvlc2c().link_model(4, false);
+        assert!(gh.h2d_time(1 << 24, 1, 0) > gh.h2d_time(1 << 24, 0, 0));
+        assert_eq!(gh.d2d(0, 1).gbps, HwProfile::gh200_nvlc2c().d2d_gbps);
+        // symmetric presets: every (owner, dst) pair mirrors (dst, owner)
+        for a in 0..4 {
+            for b in 0..4 {
+                assert_eq!(gh.h2d(a, b), gh.h2d(b, a));
+                assert_eq!(gh.h2d(a, b).gbps, gh.d2h(b, a).gbps);
+            }
+        }
+    }
+
+    #[test]
+    fn gh200_quad_routes_peers_pcie_routes_host() {
+        // the routing predicate the schedule compiler applies, stated on
+        // the link model itself: D2D wins on the quad, loses on PCIe
+        let bytes = (2048 * 2048 * 8) as u64;
+        let quad = HwProfile::gh200_quad().link_model(4, true);
+        assert!(quad.d2d_time(bytes, 1, 0) < quad.h2d_time(bytes, 1, 0));
+        let pcie = HwProfile::a100_pcie4().link_model(4, true);
+        assert!(pcie.d2d_time(bytes, 1, 0) >= pcie.h2d_time(bytes, 1, 0));
     }
 
     #[test]

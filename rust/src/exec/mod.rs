@@ -79,9 +79,17 @@ impl RunReport {
         // to hold everything) must print 0.0%, never NaN — route every
         // ratio through the finite guard
         let pct = |x: f64| if x.is_finite() { 100.0 * x } else { 0.0 };
-        let h = &self.metrics.h2d_by_prec;
+        let split = |label: &str, s: &[u64; 4]| {
+            format!(
+                "{label} f8:{} f16:{} f32:{} f64:{}",
+                crate::util::human_bytes(s[0]),
+                crate::util::human_bytes(s[1]),
+                crate::util::human_bytes(s[2]),
+                crate::util::human_bytes(s[3]),
+            )
+        };
         format!(
-            "{:>12} n={:<7} ts={:<4} dev={} str={} | {:>9.3}s {:>8.2} TFlop/s | H2D {:>10} D2H {:>10} | h2d/prec f8:{} f16:{} f32:{} f64:{} | util {:>5.1}% ovl {:>5.1}%{}{}",
+            "{:>12} n={:<7} ts={:<4} dev={} str={} | {:>9.3}s {:>8.2} TFlop/s | H2D {:>10} D2H {:>10} D2D {:>10} | {} | {} | {} | util {:>5.1}% ovl {:>5.1}%{}{}",
             self.cfg.version.name(),
             self.cfg.n,
             self.cfg.ts,
@@ -91,10 +99,10 @@ impl RunReport {
             self.tflops,
             crate::util::human_bytes(self.metrics.h2d_bytes),
             crate::util::human_bytes(self.metrics.d2h_bytes),
-            crate::util::human_bytes(h[0]),
-            crate::util::human_bytes(h[1]),
-            crate::util::human_bytes(h[2]),
-            crate::util::human_bytes(h[3]),
+            crate::util::human_bytes(self.metrics.d2d_bytes),
+            split("h2d/prec", &self.metrics.h2d_by_prec),
+            split("d2h/prec", &self.metrics.d2h_by_prec),
+            split("d2d/prec", &self.metrics.d2d_by_prec),
             pct(self.work_utilization),
             pct(self.metrics.prefetch_overlap()),
             if self.cfg.prefetch_depth > 0 {
@@ -119,13 +127,19 @@ impl RunReport {
     /// (`--metrics-out`, `rust/tests/golden/`). Sorted keys, two-space
     /// indent, no floats — byte-stable across platforms and toolchains,
     /// so CI can compare with a plain `diff`. Includes the per-precision
-    /// H2D/D2H byte splits (each partitions its direction's total).
+    /// H2D/D2H/D2D byte splits (each partitions its direction's total).
     pub fn golden_metrics_string(&self) -> String {
         let m = &self.metrics;
-        let fields: [(&str, u64); 27] = [
+        let fields: [(&str, u64); 33] = [
             ("cache_evictions", m.cache_evictions),
             ("cache_hits", m.cache_hits),
             ("cache_misses", m.cache_misses),
+            ("d2d_bytes", m.d2d_bytes),
+            ("d2d_bytes_f16", m.d2d_by_prec[1]),
+            ("d2d_bytes_f32", m.d2d_by_prec[2]),
+            ("d2d_bytes_f64", m.d2d_by_prec[3]),
+            ("d2d_bytes_f8", m.d2d_by_prec[0]),
+            ("d2d_transfers", m.d2d_transfers),
             ("d2h_bytes", m.d2h_bytes),
             ("d2h_bytes_f16", m.d2h_by_prec[1]),
             ("d2h_bytes_f32", m.d2h_by_prec[2]),

@@ -34,12 +34,14 @@ use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 
-use crate::cache::CacheTable;
+use crate::cache::{CacheTable, ResidencyDirectory};
 use crate::config::{EvictionKind, RunConfig, Version};
 use crate::metrics::{Metrics, TaskOp};
 use crate::precision::Precision;
 use crate::runtime::{DevBuf, Kernel, Runtime};
-use crate::sched::{CompiledSchedule, Job, ProgressTable, Schedule};
+use crate::sched::{
+    device_of_row, route_read, CompiledSchedule, Job, ProgressTable, ReadSrc, Schedule,
+};
 use crate::tiles::TileMatrix;
 use crate::trace::{Event, EventKind, Trace};
 use crate::xfer::{XferEngine, XferPlan};
@@ -57,6 +59,10 @@ struct Shared<'a> {
     stream_base: Vec<AtomicU64>,
     progress: ProgressTable,
     caches: Vec<Mutex<CacheTable<DevBuf>>>,
+    /// global residency directory: which devices hold which tile copies.
+    /// Lock order is cache -> directory, never the reverse; the D2D
+    /// probe takes the directory lock alone.
+    dir: Mutex<ResidencyDirectory>,
     /// V3: remaining TRSMs per column; at 0 the diagonal tile is unpinned
     trsm_left: Vec<AtomicU32>,
     metrics: Metrics,
@@ -191,6 +197,72 @@ impl<'a> Shared<'a> {
         Ok(())
     }
 
+    /// Mirror a cache's removals into the residency directory. Must be
+    /// called under the same cache-lock hold as the mutation so no
+    /// removal is ever reported against refreshed state (lock order:
+    /// cache, then directory).
+    fn sync_dir_locked(&self, dev: usize, cache: &mut CacheTable<DevBuf>) {
+        let gone = cache.drain_evicted();
+        if !gone.is_empty() {
+            let mut dir = self.dir.lock().unwrap();
+            for t in gone {
+                dir.record_evict(t, dev);
+            }
+        }
+    }
+
+    /// The peer-sourcing probe shared by the demand path and the
+    /// transfer worker: for a compiled [`ReadSrc::Peer`] route, confirm
+    /// the copy against the residency directory, then fetch the peer's
+    /// payload without perturbing its cache. `None` means fall back to
+    /// the host. Lock discipline: the directory lock and the peer cache
+    /// lock are each taken alone, in terminating scopes.
+    fn probe_peer(&self, route: ReadSrc, tile: (usize, usize)) -> Option<(usize, Arc<DevBuf>)> {
+        let ReadSrc::Peer { src } = route else {
+            return None;
+        };
+        if !self.dir.lock().unwrap().clean_holder(tile, src) {
+            return None;
+        }
+        self.caches[src].lock().unwrap().peek_get(tile).map(|b| (src, b))
+    }
+
+    /// D2D peer copy: stage the peer device's buffer through the pinned
+    /// pool and upload it to `dev` — the bounce-buffer path real PCIe
+    /// P2P-less systems use, counted as peer (d2d) traffic at the
+    /// tile's logical width. The peer cache was only peeked, so the
+    /// owner's LRU and hit accounting never see this access.
+    #[allow(clippy::too_many_arguments)]
+    fn peer_copy_tile(
+        &self,
+        peer: &DevBuf,
+        i: usize,
+        j: usize,
+        prec: Precision,
+        src: usize,
+        dev: usize,
+        stream: usize,
+    ) -> Result<(DevBuf, u64)> {
+        let ts = self.cfg.ts;
+        let t0 = self.now();
+        let mut stage = self.xfer.staging.acquire(ts * ts);
+        self.rt.download(peer, &mut stage)?;
+        let buf = self.rt.upload(&stage, ts)?;
+        self.xfer.staging.release(stage);
+        let bytes = (ts * ts) as u64 * prec.width();
+        self.metrics.record_d2d(bytes, prec);
+        self.metrics.device_allocs.fetch_add(1, Ordering::Relaxed);
+        self.trace.record(Event {
+            device: dev as u16,
+            stream: stream as u16,
+            kind: EventKind::D2D,
+            label: format!("d2d({i},{j})<-{src}"),
+            t0,
+            t1: self.now(),
+        });
+        Ok((buf, bytes))
+    }
+
     /// Algorithm 3: fetch a read-only (final) tile through the device
     /// cache. Returns the device buffer (cached or transient).
     fn load_tile(
@@ -219,8 +291,25 @@ impl<'a> Shared<'a> {
         } else {
             self.metrics.cache_misses.fetch_add(1, Ordering::Relaxed);
         }
-        // miss: upload outside the cache lock (the copy is the slow part)
-        let (buf, bytes) = self.upload_tile(i, j, dev, stream)?;
+        // miss: copy outside the cache lock (the copy is the slow part).
+        // The compiled route decides the source: a peer device's cached
+        // copy over the D2D link when the link model prefers it AND the
+        // residency directory confirms the copy is still there; the
+        // host (NUMA domain of the owning row) otherwise.
+        let prec = self.matrix.lock(i, j).prec;
+        let route = route_read(
+            &self.ir.links,
+            self.ir.routing,
+            (self.cfg.ts * self.cfg.ts) as u64 * prec.width(),
+            device_of_row(i, self.cfg.ndev),
+            dev,
+        );
+        let (buf, bytes) = match self.probe_peer(route, (i, j)) {
+            Some((src, peer_buf)) => {
+                self.peer_copy_tile(&peer_buf, i, j, prec, src, dev, stream)?
+            }
+            None => self.upload_tile(i, j, dev, stream)?,
+        };
         let buf = Arc::new(buf);
         if self.uses_cache() {
             if self.xfer.enabled() {
@@ -229,7 +318,10 @@ impl<'a> Shared<'a> {
                 self.xfer.take_prefetched(dev, (i, j));
             }
             let mut cache = self.caches[dev].lock().unwrap();
-            cache.insert((i, j), bytes, buf.clone(), &self.metrics);
+            if cache.insert((i, j), bytes, buf.clone(), &self.metrics) {
+                self.dir.lock().unwrap().record_load((i, j), dev, prec);
+            }
+            self.sync_dir_locked(dev, &mut cache);
             if pin {
                 cache.pin((i, j));
             }
@@ -244,10 +336,11 @@ impl<'a> Shared<'a> {
             return;
         }
         if self.trsm_left[k].fetch_sub(1, Ordering::AcqRel) == 1 {
-            for cache in &self.caches {
+            for (d, cache) in self.caches.iter().enumerate() {
                 let mut c = cache.lock().unwrap();
                 c.unpin((k, k));
                 c.invalidate((k, k)); // never read again: free the space
+                self.sync_dir_locked(d, &mut c);
             }
         }
     }
@@ -327,6 +420,7 @@ pub fn run(cfg: &RunConfig, rt: &Runtime, matrix: &TileMatrix) -> Result<super::
         stream_base,
         progress: ProgressTable::new(nt),
         caches,
+        dir: Mutex::new(ResidencyDirectory::new(cfg.ndev)),
         trsm_left: (0..nt).map(|k| AtomicU32::new((nt - k - 1) as u32)).collect(),
         metrics: Metrics::new(),
         trace: Trace::new(cfg.trace),
@@ -440,12 +534,31 @@ fn run_stream(sh: &Shared, jobs: &[Job], dev: usize, stream: usize) -> Result<()
                 sh.caches[dev].lock().unwrap().set_clock(min_base);
             }
         }
+        // directory write lifecycle: the job's target is dirty on this
+        // device for the job's duration (single dirty owner); stale
+        // cached copies anywhere are dropped up front. Reads of a tile
+        // only happen after it is final, so no reader can race this.
+        let (wi, wj) = job.target();
+        {
+            let wprec = sh.matrix.lock(wi, wj).prec;
+            let stale = sh.dir.lock().unwrap().begin_write((wi, wj), dev, wprec);
+            for d in stale {
+                let mut c = sh.caches[d].lock().unwrap();
+                c.invalidate((wi, wj));
+                // the directory already dropped the write target, so its
+                // record_evict is a no-op — but syncing (rather than
+                // discarding the log) keeps any other pending removal
+                // from being silently swallowed
+                sh.sync_dir_locked(d, &mut c);
+            }
+        }
         match *job {
             Job::TileLL { m, k } => run_tile_ll(sh, m, k, dev, stream, &mut scratch)?,
             Job::FactorDiagRL { k } => run_factor_diag_rl(sh, k, dev, stream, &mut scratch)?,
             Job::FactorOffRL { m, k } => run_factor_off_rl(sh, m, k, dev, stream, &mut scratch)?,
             Job::UpdateRL { i, j, k } => run_update_rl(sh, i, j, k, dev, stream, &mut scratch)?,
         }
+        sh.dir.lock().unwrap().end_write((wi, wj), dev);
     }
     // drained: stop holding the device's Belady horizon back
     sh.stream_base[gid].store(u64::MAX, Ordering::Release);
@@ -482,12 +595,21 @@ fn run_xfer_worker(sh: &Shared, dev: usize) {
                 continue;
             }
         }
-        // stage through the pinned pool under the tile lock (short),
-        // upload from the staging buffer outside it
+        // routed source: a peer device's cached copy when the plan says
+        // so and the directory confirms it; the host tile otherwise
+        let peer = sh.probe_peer(load.src, (i, j));
+        // stage through the pinned pool (under the tile lock for host
+        // sources — short), upload from the staging buffer outside it
         let t0 = sh.now();
         let mut stage = sh.xfer.staging.acquire(ts * ts);
-        stage.copy_from_slice(&sh.matrix.lock(i, j).data);
-        let uploaded = sh.rt.upload(&stage, ts);
+        let staged = match &peer {
+            Some((_, peer_buf)) => sh.rt.download(peer_buf, &mut stage),
+            None => {
+                stage.copy_from_slice(&sh.matrix.lock(i, j).data);
+                Ok(())
+            }
+        };
+        let uploaded = staged.and_then(|()| sh.rt.upload(&stage, ts));
         sh.xfer.staging.release(stage);
         let buf = match uploaded {
             Ok(b) => Arc::new(b),
@@ -508,11 +630,15 @@ fn run_xfer_worker(sh: &Shared, dev: usize) {
             let ok = cache.insert_prefetched((i, j), bytes, buf);
             if ok {
                 sh.xfer.mark_prefetched(dev, (i, j));
+                sh.dir.lock().unwrap().record_load((i, j), dev, prec);
             }
             ok
         };
         if inserted {
-            sh.metrics.record_h2d(bytes, prec);
+            match &peer {
+                Some(_) => sh.metrics.record_d2d(bytes, prec),
+                None => sh.metrics.record_h2d(bytes, prec),
+            }
             sh.metrics.device_allocs.fetch_add(1, Ordering::Relaxed);
             sh.metrics.prefetch_issued.fetch_add(1, Ordering::Relaxed);
             sh.metrics.xfer_busy_ns.fetch_add(((t1 - t0) * 1e9) as u64, Ordering::Relaxed);
@@ -548,7 +674,12 @@ fn run_tile_ll(
         // reserve device space for the accumulator (may steal cache)
         let deadline = Instant::now() + std::time::Duration::from_secs(30);
         loop {
-            let ok = sh.caches[dev].lock().unwrap().reserve(tile_bytes, &sh.metrics);
+            let ok = {
+                let mut c = sh.caches[dev].lock().unwrap();
+                let ok = c.reserve(tile_bytes, &sh.metrics);
+                sh.sync_dir_locked(dev, &mut c);
+                ok
+            };
             if ok {
                 break;
             }

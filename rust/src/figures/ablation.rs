@@ -259,6 +259,59 @@ pub fn ablation_precisions(n: usize, ts: usize) -> Result<Json> {
     Ok(Json::obj(vec![("figure", Json::str("ablation_precisions")), ("rows", Json::Arr(rows))]))
 }
 
+/// Device-count sweep at fixed per-device pressure (2 GiB/device,
+/// gh200_quad): the h2d-vs-d2d byte split per point shows how much of
+/// the cross-device operand traffic the topology routing moves off the
+/// host links as devices are added — alongside the split, the row
+/// carries misses and TFlop/s so capacity effects stay visible.
+pub fn ablation_ndev(n: usize, ts: usize) -> Result<Json> {
+    println!("\n=== Ablation: device count (gh200-quad, V3, n={n}, 2 GiB/device) ===");
+    println!(
+        "{:>6} {:>12} {:>12} {:>10} {:>12} {:>10}",
+        "ndev", "H2D GB", "D2D GB", "d2d share", "misses", "TFlop/s"
+    );
+    let mut rows = Vec::new();
+    for ndev in [1usize, 2, 4] {
+        let cfg = RunConfig {
+            n,
+            ts,
+            version: Version::V3,
+            mode: Mode::Model,
+            hw: HwProfile::gh200_quad(),
+            ndev,
+            vmem_bytes: Some(2 * 1024 * 1024 * 1024),
+            streams_per_dev: 8,
+            ..Default::default()
+        };
+        let r = crate::ooc::factorize(&cfg, None)?;
+        let m = &r.metrics;
+        let loads = (m.h2d_bytes + m.d2d_bytes) as f64;
+        let share = if loads > 0.0 { m.d2d_bytes as f64 / loads } else { 0.0 };
+        println!(
+            "{ndev:>6} {:>12.2} {:>12.2} {:>9.1}% {:>12} {:>10.1}",
+            m.h2d_bytes as f64 / 1e9,
+            m.d2d_bytes as f64 / 1e9,
+            100.0 * share,
+            m.cache_misses,
+            r.tflops,
+        );
+        rows.push(Json::obj(vec![
+            ("ndev", Json::num(ndev as f64)),
+            ("h2d_bytes", Json::num(m.h2d_bytes as f64)),
+            ("d2d_bytes", Json::num(m.d2d_bytes as f64)),
+            ("d2d_share", Json::num(share)),
+            (
+                "d2d_by_prec",
+                Json::arr(m.d2d_by_prec.iter().map(|&b| Json::num(b as f64))),
+            ),
+            ("cache_misses", Json::num(m.cache_misses as f64)),
+            ("tflops", Json::num(r.tflops)),
+            ("elapsed_s", Json::num(r.elapsed_s)),
+        ]));
+    }
+    Ok(Json::obj(vec![("figure", Json::str("ablation_ndev")), ("rows", Json::Arr(rows))]))
+}
+
 pub fn ablation_all(n: usize, ts: usize) -> Result<Json> {
     Ok(Json::obj(vec![
         ("policy", ablation_policy(n, ts)?),
@@ -267,6 +320,7 @@ pub fn ablation_all(n: usize, ts: usize) -> Result<Json> {
         ("streams", ablation_streams(n, ts)?),
         ("prefetch", ablation_prefetch(n, ts)?),
         ("precisions", ablation_precisions(n, ts)?),
+        ("ndev", ablation_ndev(n, ts)?),
     ]))
 }
 
@@ -359,6 +413,26 @@ mod tests {
             let parts: f64 =
                 r.get("h2d_by_prec").as_arr().unwrap().iter().map(|b| b.as_f64().unwrap()).sum();
             assert_eq!(parts, h2d(r), "{r}");
+        }
+    }
+
+    #[test]
+    fn ndev_axis_shifts_bytes_onto_peer_links() {
+        let j = ablation_ndev(32 * 1024, 2048).unwrap();
+        let rows = j.get("rows").as_arr().unwrap();
+        let get = |r: &Json, k: &str| r.get(k).as_f64().unwrap();
+        assert_eq!(get(&rows[0], "d2d_bytes"), 0.0, "one device cannot peer");
+        assert_eq!(get(&rows[0], "d2d_share"), 0.0);
+        for r in &rows[1..] {
+            assert!(get(r, "d2d_bytes") > 0.0, "multi-device point moved no peer bytes: {r}");
+            assert!(
+                get(r, "h2d_bytes") < get(&rows[0], "h2d_bytes"),
+                "peer sourcing must take load off the host links: {r}"
+            );
+            // the split partitions the d2d total
+            let parts: f64 =
+                r.get("d2d_by_prec").as_arr().unwrap().iter().map(|b| b.as_f64().unwrap()).sum();
+            assert_eq!(parts, get(r, "d2d_bytes"), "{r}");
         }
     }
 

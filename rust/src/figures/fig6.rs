@@ -32,7 +32,7 @@ pub fn tile_size_for(hw: &HwProfile) -> usize {
 
 pub fn fig6_single_gpu(sizes: &[usize]) -> Result<Json> {
     let mut profiles = Vec::new();
-    for hw_name in HwProfile::ALL_NAMES {
+    for hw_name in HwProfile::SINGLE_GPU_NAMES {
         let hw = HwProfile::by_name(hw_name).unwrap();
         let ts = tile_size_for(&hw);
         let mut series = Vec::new();
@@ -103,7 +103,7 @@ mod tests {
     fn small_sweep_runs() {
         let j = fig6_single_gpu(&[8 * 1024, 96 * 1024, 160 * 1024]).unwrap();
         let profiles = j.get("profiles").as_arr().unwrap();
-        assert_eq!(profiles.len(), 3);
+        assert_eq!(profiles.len(), HwProfile::SINGLE_GPU_NAMES.len());
         // the paper's headline shape on each profile: V3 beats async at
         // the largest (OOC) size, and the in-core baseline is OOM there
         for p in profiles {

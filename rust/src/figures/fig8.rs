@@ -9,7 +9,7 @@ use crate::util::json::Json;
 
 pub fn fig8_volumes(sizes: &[usize]) -> Result<Json> {
     let mut out = Vec::new();
-    for hw_name in HwProfile::ALL_NAMES {
+    for hw_name in HwProfile::SINGLE_GPU_NAMES {
         let hw = HwProfile::by_name(hw_name).unwrap();
         let ts = super::fig6::tile_size_for(&hw);
         println!("\n=== Fig 8: {} (volumes, GB) ===", hw.name);

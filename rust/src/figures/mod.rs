@@ -9,16 +9,18 @@ pub mod fig6;
 pub mod fig7;
 pub mod fig8;
 pub mod fig9;
+pub mod scaling;
 
 pub use ablation::{
-    ablation_all, ablation_eviction, ablation_looking, ablation_policy, ablation_precisions,
-    ablation_prefetch, ablation_streams, POLICY_AXIS,
+    ablation_all, ablation_eviction, ablation_looking, ablation_ndev, ablation_policy,
+    ablation_precisions, ablation_prefetch, ablation_streams, POLICY_AXIS,
 };
 pub use fig10::fig10_kl_divergence;
 pub use fig6::fig6_single_gpu;
 pub use fig7::fig7_traces;
 pub use fig8::fig8_volumes;
 pub use fig9::fig9_multi_gpu;
+pub use scaling::scaling;
 
 mod mxp;
 pub use mxp::{fig11_mxp_perf, fig12_mxp_volumes, fig13_mxp_traces};

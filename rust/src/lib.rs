@@ -20,17 +20,17 @@
 //!
 //! | module | role |
 //! |---|---|
-//! | [`config`] | [`config::RunConfig`] + calibrated [`config::HwProfile`]s (A100/H100/GH200) |
+//! | [`config`] | [`config::RunConfig`] + calibrated [`config::HwProfile`]s (A100/H100/GH200/GH200-quad) and the per-link topology model ([`config::LinkModel`]: H2D/D2H/D2D bandwidth + latency matrix) |
 //! | [`matern`] | Matérn covariance workload generator (the geospatial substrate) |
 //! | [`tiles`] | host tile store ([`tiles::TileMatrix`]) and shape-only DES input ([`tiles::MatrixShape`]) |
 //! | [`precision`] | logical tile precisions, grid quantization, Higham–Mary selection ([`precision::PrecisionMap`]) |
-//! | [`sched`] | static schedule + the compiled IR ([`sched::CompiledSchedule`]: wait lists, per-access byte widths, next-use tables, start estimates) |
+//! | [`sched`] | static schedule + the compiled IR ([`sched::CompiledSchedule`]: wait lists, per-access byte widths, next-use tables, start estimates, per-read source routes [`sched::ReadSrc`]) |
 //! | [`xfer`] | schedule-driven transfer engine (byte-true prefetch plans + per-device transfer workers) |
-//! | [`cache`] | byte-budgeted device tile cache, policies V1–V4 incl. Belady |
+//! | [`cache`] | byte-budgeted device tile cache (policies V1–V4 incl. Belady) + the global tile-residency directory ([`cache::ResidencyDirectory`]) behind D2D peer sourcing |
 //! | [`exec`] | the two executors: [`exec::real`] (PJRT kernels) and [`exec::model`] (DES) |
-//! | [`metrics`] | exact counted volumes, split per precision both directions |
+//! | [`metrics`] | exact counted volumes, split per precision in all three directions (h2d/d2h/d2d) |
 //! | [`ooc`] | front-door drivers: workload → precision map → factorize |
-//! | [`figures`] | paper-figure harnesses (Figs. 6–13) + ablations |
+//! | [`figures`] | paper-figure harnesses (Figs. 6–13, the gh200-quad scaling sweep) + ablations |
 //! | [`mle`], [`refine`], [`tune`], [`trace`], [`baseline`], [`runtime`], [`util`] | MLE demo, iterative refinement, tile autotuner, event traces, host oracle, PJRT/host backends, support code |
 //!
 //! **Byte-width invariant** (the paper's §IV-C data-movement economics):

@@ -9,7 +9,7 @@
 //!                        [--precisions f8,f16,f32,f64] [--accuracy 1e-6]
 //!                        [--beta 0.078809] [--prefetch-depth 4] [--trace]
 //!                        [--verify] [--config file.json]
-//! ooc-cholesky figure <6|7|8|9|10|11|12|13|all> [--quick]
+//! ooc-cholesky figure <6|7|8|9|10|11|12|13|scaling|all> [--quick]
 //! ooc-cholesky mle     [--n 1024] [--ts 128] [--beta ...]    # end-to-end MLE demo
 //! ooc-cholesky kl      [--n 1024] [--ts 128]                 # KL accuracy sweep
 //! ooc-cholesky artifacts                                      # list compiled kernels
@@ -56,7 +56,8 @@ ooc-cholesky — mixed-precision out-of-core tile Cholesky (static scheduling)
 
 USAGE:
   ooc-cholesky factorize [flags]     run one factorization (real or model)
-  ooc-cholesky figure <id> [--quick] regenerate a paper figure (6..13 or all)
+  ooc-cholesky figure <id> [--quick] regenerate a paper figure (6..13,
+                                     scaling, or all)
   ooc-cholesky mle [flags]           end-to-end geospatial MLE demo
   ooc-cholesky kl [flags]            MxP KL-divergence accuracy sweep
   ooc-cholesky export [flags]        factorize and write the factor as .npy
@@ -73,7 +74,7 @@ FACTORIZE FLAGS:
   --ndev D           number of (simulated) devices
   --streams S        streams per device
   --vmem-mib M       device memory budget (forces OOC at small scale)
-  --hw H             a100|h100|gh200 hardware profile (model mode)
+  --hw H             a100|h100|gh200|gh200-quad hardware profile (model mode)
   --precisions P,... subset of f8,f16,f32,f64 (default f64)
   --accuracy A       MxP threshold epsilon_high (default 1e-8)
   --beta B           Matern spatial range (default 0.078809)
@@ -88,6 +89,9 @@ FACTORIZE FLAGS:
                      stream (V2/V3; 0 = off). The factorize summary line
                      reports the resulting overlap %.
   --prefetch         alias for --prefetch-depth 1 (legacy)
+  --routing R        d2d (default): source cross-device reads from a peer
+                     GPU whenever the link model says the D2D link beats
+                     the host path; host: host-only routing baseline
   --trace            record + print the event timeline
   --verify           check the factor against the host oracle (n<=8192)
   --config FILE      JSON config (flags override)
@@ -150,6 +154,13 @@ fn parse_cfg(mut args: VecDeque<String>) -> Result<RunConfig> {
                 cfg.prefetch_depth = next(&mut args, "--prefetch-depth")?.parse()?
             }
             "--prefetch" => cfg.prefetch_depth = cfg.prefetch_depth.max(1),
+            "--routing" => {
+                cfg.d2d_routing = match next(&mut args, "--routing")?.as_str() {
+                    "d2d" | "peer" => true,
+                    "host" => false,
+                    other => bail!("bad --routing {other:?} (d2d|host)"),
+                }
+            }
             "--trace" => cfg.trace = true,
             "--verify" => cfg.verify = true,
             other => bail!("unknown flag {other:?}"),
@@ -242,14 +253,21 @@ fn cmd_figure(mut args: VecDeque<String>) -> Result<()> {
             "13" => {
                 figures::fig13_mxp_traces(if quick { 32 * 1024 } else { 100 * 1024 }, 2048, 100)?
             }
+            "scaling" => figures::scaling(if quick { 64 * 1024 } else { 160 * 1024 }, 2048)?,
             other => bail!("unknown figure {other:?}"),
         };
-        let path = figures::write_result(&format!("fig{id}"), &j)?;
+        // numeric ids land as fig<N>.json; named harnesses keep their name
+        let name = if id.chars().all(|c| c.is_ascii_digit()) {
+            format!("fig{id}")
+        } else {
+            id.to_string()
+        };
+        let path = figures::write_result(&name, &j)?;
         println!("\nwrote {path:?}");
         Ok(())
     };
     if id == "all" {
-        for id in ["6", "7", "8", "9", "10", "11", "12", "13"] {
+        for id in ["6", "7", "8", "9", "10", "11", "12", "13", "scaling"] {
             run_one(id)?;
         }
         Ok(())

@@ -4,12 +4,15 @@
 //! adds the logical byte width of the moved tile — so Figure 8/12 shapes
 //! are reproduced by construction, not by modeling.
 //!
-//! Both directions keep a per-precision split (`h2d_by_prec` /
-//! `d2h_by_prec`, `[f8, f16, f32, f64]`) that partitions the totals
-//! exactly: each transfer is recorded once, under the moved tile's
-//! logical precision. The split surfaces in the factorize summary line,
-//! the report JSON, the golden `--metrics-out` format, and the Fig. 12
-//! harness.
+//! Transferred bytes are split **three ways** — host→device (`h2d`),
+//! device→host (`d2h`), and device→device peer traffic (`d2d`, the
+//! topology-routed loads of [`crate::sched::ReadSrc::Peer`]) — and each
+//! direction keeps a per-precision split (`*_by_prec`,
+//! `[f8, f16, f32, f64]`) that partitions its total exactly: each
+//! transfer is recorded once, in one direction, under the moved tile's
+//! logical precision. All three splits surface in the factorize summary
+//! line, the report JSON, the golden `--metrics-out` format, and the
+//! Fig. 12 harness.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 
@@ -29,8 +32,15 @@ pub struct Metrics {
     /// per logical precision D2H byte split [f8, f16, f32, f64] —
     /// partitions `d2h_bytes` exactly
     pub d2h_by_prec: [AtomicU64; 4],
+    /// device→device bytes: cross-device reads served over a peer link
+    /// instead of the host path (multi-GPU routing)
+    pub d2d_bytes: AtomicU64,
+    /// per logical precision D2D byte split [f8, f16, f32, f64] —
+    /// partitions `d2d_bytes` exactly
+    pub d2d_by_prec: [AtomicU64; 4],
     pub h2d_transfers: AtomicU64,
     pub d2h_transfers: AtomicU64,
+    pub d2d_transfers: AtomicU64,
     /// cache behaviour
     pub cache_hits: AtomicU64,
     pub cache_misses: AtomicU64,
@@ -91,6 +101,12 @@ impl Metrics {
         self.d2h_transfers.fetch_add(1, Ordering::Relaxed);
     }
 
+    pub fn record_d2d(&self, bytes: u64, prec: Precision) {
+        self.d2d_bytes.fetch_add(bytes, Ordering::Relaxed);
+        self.d2d_by_prec[prec_slot(prec)].fetch_add(bytes, Ordering::Relaxed);
+        self.d2d_transfers.fetch_add(1, Ordering::Relaxed);
+    }
+
     pub fn record_task(&self, op: TaskOp, ts: usize) {
         let t = ts as u64;
         let flops = match op {
@@ -125,8 +141,16 @@ impl Metrics {
                 self.d2h_by_prec[2].load(Ordering::Relaxed),
                 self.d2h_by_prec[3].load(Ordering::Relaxed),
             ],
+            d2d_bytes: self.d2d_bytes.load(Ordering::Relaxed),
+            d2d_by_prec: [
+                self.d2d_by_prec[0].load(Ordering::Relaxed),
+                self.d2d_by_prec[1].load(Ordering::Relaxed),
+                self.d2d_by_prec[2].load(Ordering::Relaxed),
+                self.d2d_by_prec[3].load(Ordering::Relaxed),
+            ],
             h2d_transfers: self.h2d_transfers.load(Ordering::Relaxed),
             d2h_transfers: self.d2h_transfers.load(Ordering::Relaxed),
+            d2d_transfers: self.d2d_transfers.load(Ordering::Relaxed),
             cache_hits: self.cache_hits.load(Ordering::Relaxed),
             cache_misses: self.cache_misses.load(Ordering::Relaxed),
             cache_evictions: self.cache_evictions.load(Ordering::Relaxed),
@@ -175,8 +199,11 @@ pub struct MetricsSnapshot {
     pub d2h_bytes: u64,
     pub h2d_by_prec: [u64; 4],
     pub d2h_by_prec: [u64; 4],
+    pub d2d_bytes: u64,
+    pub d2d_by_prec: [u64; 4],
     pub h2d_transfers: u64,
     pub d2h_transfers: u64,
+    pub d2d_transfers: u64,
     pub cache_hits: u64,
     pub cache_misses: u64,
     pub cache_evictions: u64,
@@ -197,8 +224,10 @@ pub struct MetricsSnapshot {
 }
 
 impl MetricsSnapshot {
+    /// All counted interconnect traffic: host links both ways plus the
+    /// peer (D2D) links.
     pub fn total_bytes(&self) -> u64 {
-        self.h2d_bytes + self.d2h_bytes
+        self.h2d_bytes + self.d2h_bytes + self.d2d_bytes
     }
 
     /// Fraction of demand operand fetches the transfer stream hid: loads
@@ -228,8 +257,14 @@ impl MetricsSnapshot {
                 "d2h_by_prec",
                 Json::arr(self.d2h_by_prec.iter().map(|&b| Json::num(b as f64))),
             ),
+            ("d2d_bytes", Json::num(self.d2d_bytes as f64)),
+            (
+                "d2d_by_prec",
+                Json::arr(self.d2d_by_prec.iter().map(|&b| Json::num(b as f64))),
+            ),
             ("h2d_transfers", Json::num(self.h2d_transfers as f64)),
             ("d2h_transfers", Json::num(self.d2h_transfers as f64)),
+            ("d2d_transfers", Json::num(self.d2d_transfers as f64)),
             ("cache_hits", Json::num(self.cache_hits as f64)),
             ("cache_misses", Json::num(self.cache_misses as f64)),
             ("cache_evictions", Json::num(self.cache_evictions as f64)),
@@ -273,6 +308,7 @@ mod tests {
         m.record_h2d(100, Precision::F16);
         m.record_h2d(50, Precision::F64);
         m.record_d2h(30, Precision::F8);
+        m.record_d2d(20, Precision::F32);
         m.record_task(TaskOp::Gemm, 64);
         m.record_task(TaskOp::Potrf, 64);
         let s = m.snapshot();
@@ -281,9 +317,13 @@ mod tests {
         assert_eq!(s.h2d_by_prec[3], 50);
         assert_eq!(s.d2h_bytes, 30);
         assert_eq!(s.d2h_by_prec, [30, 0, 0, 0]);
+        assert_eq!(s.d2d_bytes, 20);
+        assert_eq!(s.d2d_by_prec, [0, 0, 20, 0]);
+        assert_eq!(s.d2d_transfers, 1);
         assert_eq!(s.h2d_by_prec.iter().sum::<u64>(), s.h2d_bytes);
         assert_eq!(s.d2h_by_prec.iter().sum::<u64>(), s.d2h_bytes);
-        assert_eq!(s.total_bytes(), 180);
+        assert_eq!(s.d2d_by_prec.iter().sum::<u64>(), s.d2d_bytes);
+        assert_eq!(s.total_bytes(), 200, "d2d counts toward the grand total");
         assert_eq!(s.n_gemm, 1);
         assert_eq!(s.flops, 2 * 64 * 64 * 64 + 64 * 64 * 64 / 3);
     }
@@ -302,6 +342,8 @@ mod tests {
         assert!(j.get("total_bytes").as_f64().is_some());
         assert_eq!(j.get("h2d_by_prec").as_arr().unwrap().len(), 4);
         assert_eq!(j.get("d2h_by_prec").as_arr().unwrap().len(), 4);
+        assert_eq!(j.get("d2d_by_prec").as_arr().unwrap().len(), 4);
+        assert!(j.get("d2d_bytes").as_f64().is_some());
         assert!(j.get("prefetch_overlap").as_f64().is_some());
     }
 

@@ -21,6 +21,14 @@
 //! * **wait lists** — the subset of each job's dependencies produced on a
 //!   *different* stream. Same-stream dependencies are ordered by the
 //!   stream's own program order and need no runtime check at all;
+//! * **read routes** — each read's *source device*, resolved against the
+//!   run's [`crate::config::LinkModel`]: a cross-device read whose peer
+//!   (D2D) link beats the host path is stamped [`ReadSrc::Peer`] with
+//!   the owning device as the preferred source (the executors confirm
+//!   residency against the [`crate::cache::ResidencyDirectory`] at run
+//!   time and fall back to the host when the copy is gone). Local reads,
+//!   host-cheaper topologies (PCIe peers), `--routing host`, and
+//!   versions without an operand cache all resolve to [`ReadSrc::Host`];
 //! * **per-(tile, device) next-use tables** over the device-local access
 //!   sequence, giving exact reuse distances — what makes the Belady (V4)
 //!   eviction policy implementable (`cache::policy::Policy::Belady`);
@@ -55,9 +63,44 @@
 use std::collections::HashMap;
 use std::sync::Arc;
 
-use crate::config::{EvictionKind, RunConfig};
+use crate::config::{EvictionKind, LinkModel, RunConfig, Version};
 use crate::precision::{Precision, PrecisionMap};
 use crate::sched::{device_of_row, stream_of_row, Job, Schedule};
+
+/// Compile-time source of one operand read.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReadSrc {
+    /// load from host memory (the NUMA domain of the tile row's owner)
+    Host,
+    /// prefer the peer copy on device `src` over the host path; the
+    /// executors fall back to [`ReadSrc::Host`] when the residency
+    /// directory says the copy is gone
+    Peer { src: usize },
+}
+
+/// The routing predicate, shared verbatim by the compiler and both
+/// executors so the recorded route can never drift from the runtime
+/// decision: prefer the owning device's peer copy exactly when the D2D
+/// link moves this read's bytes faster than the host link from the
+/// owner's NUMA domain. `enabled` folds in `--routing`, `ndev > 1`, and
+/// whether the version keeps an operand cache (no cache ⇒ no peer copy
+/// can ever exist).
+pub fn route_read(
+    links: &LinkModel,
+    enabled: bool,
+    bytes: u64,
+    owner: usize,
+    dst: usize,
+) -> ReadSrc {
+    if enabled
+        && owner != dst
+        && links.d2d_time(bytes, owner, dst) < links.h2d_time(bytes, owner, dst)
+    {
+        ReadSrc::Peer { src: owner }
+    } else {
+        ReadSrc::Host
+    }
+}
 
 /// One job, lowered: placement, data sets, and static-analysis results.
 #[derive(Debug)]
@@ -74,6 +117,8 @@ pub struct CompiledJob {
     /// `ts² · width(precision of the tile)` — what the transfer plan
     /// budgets and the wire-volume metrics count for this access
     pub read_bytes: Vec<u64>,
+    /// compile-time source route of each read, parallel to `reads`
+    pub read_src: Vec<ReadSrc>,
     /// tile this job finalizes
     pub write: (usize, usize),
     /// logical byte width of the written tile (its accumulator upload
@@ -146,6 +191,14 @@ pub struct CompiledSchedule {
     /// eviction kind this IR was compiled for — the next-use tables are
     /// only materialized for the policy that consumes them
     pub eviction: EvictionKind,
+    /// the pinned link model the IR's routes, start estimates and (via
+    /// the transfer plan) deadlines were computed against
+    pub links: LinkModel,
+    /// whether peer routing was active at compile time (ndev > 1,
+    /// `--routing d2d`, operand-caching version)
+    pub routing: bool,
+    /// reads routed to a peer (D2D) across the whole schedule
+    pub peer_routed: u64,
     /// jobs in canonical linear order (the schedule's creation order)
     pub jobs: Vec<CompiledJob>,
     /// per global stream id: indices into `jobs`, in stream program order
@@ -197,6 +250,15 @@ impl CompiledSchedule {
         let (nt, ndev, spd) = (schedule.nt, schedule.ndev, schedule.streams_per_dev);
         assert_eq!(pm.nt(), nt, "precision map shape mismatch");
         let nstreams = schedule.total_streams();
+        // estimates (and the plan's deadlines derived from them) always
+        // assume pinned staging — the same convention the executors use
+        // for everything except the sync baseline
+        let links = cfg.hw.link_model(ndev, true);
+        // peer routing needs somewhere for a peer copy to live: only the
+        // operand-caching versions can ever serve a D2D read
+        let routing = cfg.d2d_routing
+            && ndev > 1
+            && matches!(cfg.version, Version::V2 | Version::V3 | Version::RightLooking);
 
         // canonical order: merge the per-stream lists by creation key
         let mut flat: Vec<(usize, usize)> = Vec::with_capacity(schedule.total_jobs());
@@ -222,6 +284,7 @@ impl CompiledSchedule {
         let mut stream_clock = vec![0f64; nstreams];
         let (mut total_reads, mut static_deps, mut cross_deps) = (0u64, 0u64, 0u64);
 
+        let mut peer_routed = 0u64;
         for (gid, pos) in flat {
             let job = schedule.jobs[gid][pos];
             let device = gid / spd;
@@ -231,12 +294,19 @@ impl CompiledSchedule {
             let write_bytes = wordsq * write_prec.width();
             let mut waits = Vec::new();
             let mut read_bytes = Vec::with_capacity(reads.len());
+            let mut read_src = Vec::with_capacity(reads.len());
             // the job's compute precision: kernels run at the highest
             // precision among their tiles (lower operands are up-cast)
             let mut compute_prec = write_prec;
             for &(i, j) in &reads {
                 let p = pm.get(i, j);
-                read_bytes.push(wordsq * p.width());
+                let bytes = wordsq * p.width();
+                read_bytes.push(bytes);
+                let src = route_read(&links, routing, bytes, device_of_row(i, ndev), device);
+                if matches!(src, ReadSrc::Peer { .. }) {
+                    peer_routed += 1;
+                }
+                read_src.push(src);
                 compute_prec = compute_prec.max(p);
                 if schedule.global_stream(i) == gid {
                     static_deps += 1;
@@ -268,10 +338,20 @@ impl CompiledSchedule {
                     }
                 }
             };
+            // the accumulator round trip is always NUMA-local (jobs run
+            // on the device owning their target row); each read is
+            // charged on its *routed* link — a D2D-sourced operand
+            // estimates cheaper than a cross-NUMA host fetch, which is
+            // what pushes its prefetch deadline later
             let mut cost = cfg.hw.kernel_time(flops, compute_prec, cfg.ts)
-                + 2.0 * cfg.hw.transfer_time(write_bytes, true, true, true);
-            for &b in &read_bytes {
-                cost += cfg.hw.transfer_time(b, true, true, true);
+                + links.h2d_time(write_bytes, device, device)
+                + links.d2h_time(write_bytes, device, device);
+            for (r, &(i, _)) in reads.iter().enumerate() {
+                let b = read_bytes[r];
+                cost += match read_src[r] {
+                    ReadSrc::Peer { src } => links.d2d_time(b, src, device),
+                    ReadSrc::Host => links.h2d_time(b, device_of_row(i, ndev), device),
+                };
             }
             let est_start = stream_clock[gid];
             let est_end = est_start + cost;
@@ -285,6 +365,7 @@ impl CompiledSchedule {
                 device,
                 reads,
                 read_bytes,
+                read_src,
                 write,
                 write_bytes,
                 waits,
@@ -311,6 +392,9 @@ impl CompiledSchedule {
             ndev,
             streams_per_dev: spd,
             eviction: cfg.eviction,
+            links,
+            routing,
+            peer_routed,
             jobs: compiled,
             stream_jobs,
             next_use,
@@ -390,6 +474,22 @@ impl CompiledSchedule {
                 for &(r, _) in &cj.waits {
                     if self.owner_gid(r) == gid {
                         return Err(format!("same-stream wait in {cj:?}"));
+                    }
+                }
+                if cj.read_src.len() != cj.reads.len() {
+                    return Err(format!("route list shape mismatch in {cj:?}"));
+                }
+                for (r, &tile) in cj.reads.iter().enumerate() {
+                    let owner = device_of_row(tile.0, self.ndev);
+                    let want =
+                        route_read(&self.links, self.routing, cj.read_bytes[r], owner, cj.device);
+                    if cj.read_src[r] != want {
+                        return Err(format!("route drift for {tile:?} in {cj:?}"));
+                    }
+                    if let ReadSrc::Peer { src } = cj.read_src[r] {
+                        if src == cj.device || src != owner {
+                            return Err(format!("bogus peer source {src} in {cj:?}"));
+                        }
                     }
                 }
                 if !cj.reads.is_empty() {
@@ -554,6 +654,75 @@ mod tests {
             ir.jobs.iter().map(|c| c.est_end).fold(0.0f64, f64::max)
         };
         assert!(last(&ir) < last(&ir64), "MxP est times must shrink");
+    }
+
+    #[test]
+    fn routes_follow_the_link_model() {
+        use crate::config::HwProfile;
+        let nt = 12;
+        let s = Schedule::left_looking(nt, 2, 2);
+        // NVLink peers (gh200): every cross-device read routes D2D
+        let mut c = cfg(nt * 128, 128);
+        c.hw = HwProfile::gh200_quad();
+        let ir = CompiledSchedule::compile(&s, &c);
+        assert!(ir.routing && ir.peer_routed > 0);
+        let mut cross = 0u64;
+        for cj in &ir.jobs {
+            for (r, &(i, _)) in cj.reads.iter().enumerate() {
+                let owner = device_of_row(i, 2);
+                if owner == cj.device {
+                    assert_eq!(cj.read_src[r], ReadSrc::Host, "local reads never peer-route");
+                } else {
+                    cross += 1;
+                    assert_eq!(cj.read_src[r], ReadSrc::Peer { src: owner });
+                }
+            }
+        }
+        assert_eq!(ir.peer_routed, cross, "every cross-device read is peer-routed on NVLink");
+        ir.validate(&s).unwrap();
+
+        // PCIe peers: the host link wins, so nothing routes D2D
+        let mut pcie = cfg(nt * 128, 128);
+        pcie.hw = HwProfile::h100_pcie5();
+        let ir = CompiledSchedule::compile(&s, &pcie);
+        assert_eq!(ir.peer_routed, 0, "PCIe peer preset must prefer host");
+
+        // --routing host disables peer sourcing even on NVLink
+        let mut off = c.clone();
+        off.d2d_routing = false;
+        let ir = CompiledSchedule::compile(&s, &off);
+        assert!(!ir.routing && ir.peer_routed == 0);
+
+        // single device: nothing to route, flag stays off
+        let s1 = Schedule::left_looking(nt, 1, 2);
+        let ir = CompiledSchedule::compile(&s1, &c);
+        assert!(!ir.routing && ir.peer_routed == 0);
+
+        // V1 keeps no operand cache: no peer copy can exist, no routing
+        let mut v1 = c.clone();
+        v1.version = crate::config::Version::V1;
+        let ir = CompiledSchedule::compile(&s, &v1);
+        assert!(!ir.routing && ir.peer_routed == 0);
+    }
+
+    #[test]
+    fn peer_routed_reads_estimate_faster_than_host_only() {
+        use crate::config::HwProfile;
+        let nt = 12;
+        let s = Schedule::left_looking(nt, 4, 2);
+        let mut c = cfg(nt * 128, 128);
+        c.hw = HwProfile::gh200_quad();
+        let routed = CompiledSchedule::compile(&s, &c);
+        let mut host_only = c.clone();
+        host_only.d2d_routing = false;
+        let host = CompiledSchedule::compile(&s, &host_only);
+        let last = |ir: &CompiledSchedule| {
+            ir.jobs.iter().map(|cj| cj.est_end).fold(0.0f64, f64::max)
+        };
+        assert!(
+            last(&routed) < last(&host),
+            "D2D-routed estimates must beat the cross-NUMA host path"
+        );
     }
 
     #[test]

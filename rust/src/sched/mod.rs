@@ -24,7 +24,7 @@
 mod compile;
 mod progress;
 
-pub use compile::{CompiledJob, CompiledSchedule, NextUse};
+pub use compile::{route_read, CompiledJob, CompiledSchedule, NextUse, ReadSrc};
 pub use progress::{ProgressTable, ReadyTimes};
 
 /// One schedulable unit.

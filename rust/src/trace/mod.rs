@@ -15,6 +15,8 @@ pub enum EventKind {
     H2D,
     /// device→host write-back ("C2G")
     D2H,
+    /// device→device peer copy (topology-routed cross-device read)
+    D2D,
     /// kernel execution ("Work")
     Work,
     /// transfer-engine load on the dedicated per-device transfer stream
@@ -75,6 +77,7 @@ impl Trace {
                     Json::str(match e.kind {
                         EventKind::H2D => "h2d",
                         EventKind::D2H => "d2h",
+                        EventKind::D2D => "d2d",
                         EventKind::Work => "work",
                         EventKind::Prefetch => "prefetch",
                     }),
@@ -98,6 +101,7 @@ impl Trace {
                     Json::str(match e.kind {
                         EventKind::H2D => "h2d",
                         EventKind::D2H => "d2h",
+                        EventKind::D2D => "d2d",
                         EventKind::Work => "work",
                         EventKind::Prefetch => "prefetch",
                     }),
@@ -167,6 +171,7 @@ impl Trace {
         let mut rows: Vec<(&str, EventKind)> = vec![
             ("G2C ", EventKind::H2D),
             ("C2G ", EventKind::D2H),
+            ("G2G ", EventKind::D2D),
             ("Pref", EventKind::Prefetch),
             ("Work", EventKind::Work),
         ];
@@ -184,6 +189,7 @@ impl Trace {
                 let ch = match kind {
                     EventKind::H2D => b'o',
                     EventKind::D2H => b'g',
+                    EventKind::D2D => b'd',
                     EventKind::Work => b'#',
                     EventKind::Prefetch => b'p',
                 };

@@ -15,6 +15,7 @@ use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Condvar, Mutex};
 
 use crate::cache::TileKey;
+use crate::sched::ReadSrc;
 
 use super::plan::XferPlan;
 
@@ -30,6 +31,8 @@ pub struct QueuedLoad {
     /// latest estimated start (µs of schedule time) for the load to land
     /// before its consumer — from the compiled schedule via the plan
     pub deadline_us: u64,
+    /// compiled source route (peer device or host) for this load
+    pub src: ReadSrc,
     /// FIFO tie-break within a priority class
     pub seq: u64,
 }
@@ -192,6 +195,7 @@ impl XferEngine {
                 gid,
                 consumer_pos: l.consumer_pos,
                 deadline_us: l.deadline_us,
+                src: l.src,
                 seq: self.seq.fetch_add(1, Ordering::Relaxed),
             });
         }
@@ -249,9 +253,17 @@ mod tests {
     #[test]
     fn queue_pops_least_slack_first() {
         let q = DevQueue::new();
-        q.push(QueuedLoad { tile: (3, 0), gid: 0, consumer_pos: 9, deadline_us: 900, seq: 0 });
-        q.push(QueuedLoad { tile: (1, 0), gid: 0, consumer_pos: 2, deadline_us: 100, seq: 1 });
-        q.push(QueuedLoad { tile: (2, 0), gid: 1, consumer_pos: 5, deadline_us: 100, seq: 2 });
+        let load = |tile, gid, consumer_pos, deadline_us, seq| QueuedLoad {
+            tile,
+            gid,
+            consumer_pos,
+            deadline_us,
+            src: ReadSrc::Host,
+            seq,
+        };
+        q.push(load((3, 0), 0, 9, 900, 0));
+        q.push(load((1, 0), 0, 2, 100, 1));
+        q.push(load((2, 0), 1, 5, 100, 2));
         assert_eq!(q.try_pop().unwrap().tile, (1, 0), "earliest deadline, then pos");
         assert_eq!(q.try_pop().unwrap().tile, (2, 0));
         assert_eq!(q.try_pop().unwrap().tile, (3, 0));

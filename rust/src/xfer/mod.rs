@@ -21,7 +21,11 @@
 //!   charged the compiled schedule's logical byte width for its tile
 //!   (ts² · `Precision::width()`), so mixed-precision runs plan deeper
 //!   windows — and later viable start times — than an FP64-blind plan
-//!   would at the same vmem budget.
+//!   would at the same vmem budget. They are also **topology-true**:
+//!   each load carries its compiled route ([`crate::sched::ReadSrc`] —
+//!   peer device or host) and its deadline is computed on that route's
+//!   link, so a D2D-sourced load on an NVLink pair gets the later start
+//!   its faster link earns.
 //! * [`engine`] — the coordination state for one dedicated transfer
 //!   worker per device: priority queues of planned loads ordered by
 //!   deadline slack (the load closest to missing its consumer first), a

@@ -39,7 +39,7 @@ use std::collections::VecDeque;
 
 use crate::cache::TileKey;
 use crate::config::{RunConfig, Version};
-use crate::sched::{device_of_row, CompiledSchedule};
+use crate::sched::{device_of_row, CompiledSchedule, ReadSrc};
 
 /// One planned transfer: load `tile` onto the consuming stream's device
 /// before that stream reaches job position `consumer_pos`.
@@ -49,11 +49,16 @@ pub struct PlannedLoad {
     /// position (index into the stream's job list) of the consuming job
     pub consumer_pos: usize,
     /// estimated latest start (µs of schedule time) for the load to land
-    /// before its consumer — the transfer queues' priority key
+    /// before its consumer — the transfer queues' priority key, computed
+    /// on the *routed* link (a D2D-sourced load transfers faster, so its
+    /// latest viable start is later)
     pub deadline_us: u64,
     /// logical bytes on the wire (ts² · precision width, from the
     /// compiled schedule) — what the residency budget charged this load
     pub bytes: u64,
+    /// the compiled route: where the engine should source this tile
+    /// (peer loads fall back to the host when the copy is gone)
+    pub src: ReadSrc,
 }
 
 /// Per-stream plan: `triggers[p]` holds the loads to enqueue when the
@@ -163,14 +168,20 @@ impl XferPlan {
                         plan.dropped_over_budget += 1;
                         continue;
                     }
-                    let local = device_of_row(tile.0, ir.ndev) == cj.device;
-                    let dt = cfg.hw.transfer_time(bytes, true, local, true);
+                    let src = cj.read_src[r];
+                    let dt = match src {
+                        ReadSrc::Peer { src } => ir.links.d2d_time(bytes, src, cj.device),
+                        ReadSrc::Host => {
+                            ir.links.h2d_time(bytes, device_of_row(tile.0, ir.ndev), cj.device)
+                        }
+                    };
                     let deadline_us = ((cj.est_start - dt).max(0.0) * 1e6) as u64;
                     sp.triggers[trigger].push(PlannedLoad {
                         tile,
                         consumer_pos: pos,
                         deadline_us,
                         bytes,
+                        src,
                     });
                     planned += bytes;
                     nplanned += 1;
@@ -349,6 +360,48 @@ mod tests {
                     let want = (128 * 128) as u64 * pm.get(l.tile.0, l.tile.1).width();
                     assert_eq!(l.bytes, want, "load {:?} charged wrong width", l.tile);
                 }
+            }
+        }
+    }
+
+    #[test]
+    fn planned_loads_carry_the_compiled_route() {
+        use crate::config::HwProfile;
+        use crate::sched::device_of_row;
+        let nt = 12;
+        let s = Schedule::left_looking(nt, 2, 2);
+        let mut c = cfg(Version::V3, nt * 128, 128, 4);
+        c.ndev = 2;
+        c.hw = HwProfile::gh200_quad();
+        let ir = CompiledSchedule::compile(&s, &c);
+        let plan = XferPlan::build(&ir, &c);
+        let (mut peer, mut host) = (0usize, 0usize);
+        for gid in 0..s.total_streams() {
+            let dev = s.stream_id(gid).device;
+            for pos in 0..s.jobs[gid].len() {
+                for l in plan.loads_at(gid, pos) {
+                    match l.src {
+                        ReadSrc::Peer { src } => {
+                            peer += 1;
+                            assert_eq!(src, device_of_row(l.tile.0, 2), "peer is the owner");
+                            assert_ne!(src, dev, "no self-peering");
+                        }
+                        ReadSrc::Host => {
+                            host += 1;
+                            assert_eq!(device_of_row(l.tile.0, 2), dev, "host loads are local");
+                        }
+                    }
+                }
+            }
+        }
+        assert!(peer > 0 && host > 0, "NVLink plan must mix peer and host loads");
+        // single device: everything routes host
+        let s1 = Schedule::left_looking(nt, 1, 2);
+        let c1 = cfg(Version::V3, nt * 128, 128, 4);
+        let plan1 = build(&s1, &c1);
+        for pos in 0..s1.jobs[0].len() {
+            for l in plan1.loads_at(0, pos) {
+                assert_eq!(l.src, ReadSrc::Host);
             }
         }
     }

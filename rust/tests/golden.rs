@@ -31,25 +31,46 @@ fn smoke_cfg() -> RunConfig {
     }
 }
 
+/// The multi-device smoke-run config: the same problem on two devices of
+/// the default (NVLink-peer) profile, so the D2D routing path — peer
+/// sourcing, residency-directory fallbacks, the d2d byte counters — is
+/// pinned byte for byte too.
+fn smoke_cfg_ndev2() -> RunConfig {
+    RunConfig { ndev: 2, ..smoke_cfg() }
+}
+
 fn golden_path() -> std::path::PathBuf {
     std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/golden/smoke_metrics.json")
 }
 
-#[test]
-fn model_smoke_run_matches_golden() {
-    let report = ooc::factorize(&smoke_cfg(), None).unwrap();
+fn golden_path_ndev2() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/golden/smoke_metrics_ndev2.json")
+}
+
+fn check_golden(cfg: &RunConfig, path: std::path::PathBuf) {
+    let report = ooc::factorize(cfg, None).unwrap();
     let got = report.golden_metrics_string();
     if std::env::var("UPDATE_GOLDEN").is_ok() {
-        std::fs::write(golden_path(), &got).unwrap();
-        eprintln!("golden updated at {:?}", golden_path());
+        std::fs::write(&path, &got).unwrap();
+        eprintln!("golden updated at {path:?}");
         return;
     }
-    let want = std::fs::read_to_string(golden_path()).unwrap();
+    let want = std::fs::read_to_string(&path).unwrap();
     assert_eq!(
         got, want,
-        "smoke-run metrics drifted from tests/golden/smoke_metrics.json — if the \
-         change is intentional, regenerate with UPDATE_GOLDEN=1 cargo test --test golden"
+        "smoke-run metrics drifted from {path:?} — if the change is intentional, \
+         regenerate with UPDATE_GOLDEN=1 cargo test --test golden"
     );
+}
+
+#[test]
+fn model_smoke_run_matches_golden() {
+    check_golden(&smoke_cfg(), golden_path());
+}
+
+#[test]
+fn model_smoke_run_ndev2_matches_golden() {
+    check_golden(&smoke_cfg_ndev2(), golden_path_ndev2());
 }
 
 #[test]
