@@ -1,43 +1,267 @@
-//! Schedule-compiler microbenchmarks: `sched::compile` cost vs tile
-//! count, and the V1–V4 cache-strategy miss rate vs cache capacity
-//! (model mode, GH200 profile — the ablation's acceptance axis).
-//! Run with `cargo bench --bench schedule`.
+//! Schedule-compiler microbenchmarks: arena/CSR `sched::compile` cost vs
+//! tile count (full IR up to nt=512, O(jobs) skeleton up to nt=4096), a
+//! live speedup measurement against the pre-arena reference compiler,
+//! and the V1–V4 cache-strategy miss rate vs cache capacity (model mode,
+//! GH200 profile — the ablation's acceptance axis).
+//!
+//! Emits `BENCH_schedule.json` at the repo root; CI's bench-gate job
+//! enforces the nt=4096 compile budget and the IR bytes/job bound from
+//! it. Run with `cargo bench --bench schedule`.
 
 use ooc_cholesky::config::{EvictionKind, HwProfile, Mode, RunConfig, Version};
 use ooc_cholesky::figures::POLICY_AXIS;
-use ooc_cholesky::sched::{CompiledSchedule, Schedule};
+use ooc_cholesky::precision::{Precision, PrecisionMap};
+use ooc_cholesky::sched::{compile_skeleton, CompiledSchedule, Schedule};
 use ooc_cholesky::util::bench::bench;
+use ooc_cholesky::util::json::Json;
+
+/// The sweep's fixed topology: 4 devices, 8 streams each, Belady so the
+/// full-IR compile pays for the per-device next-use tables too.
+fn sweep_cfg(nt: usize) -> RunConfig {
+    RunConfig {
+        n: nt * 128,
+        ts: 128,
+        version: Version::V2,
+        mode: Mode::Model,
+        ndev: 4,
+        streams_per_dev: 8,
+        eviction: EvictionKind::Belady,
+        ..Default::default()
+    }
+}
+
+/// Pre-arena reference compiler, kept here (not in the library) so the
+/// headline speedup is measured live on the same machine as the new
+/// compiler instead of trusted from a one-off recording. This is the
+/// shape the arena refactor replaced: serial over a globally sorted
+/// order, four heap `Vec`s per job, and tuple-keyed HashMap-of-Vecs
+/// next-use tables rebuilt with one hash probe per operand access.
+mod legacy {
+    use std::collections::HashMap;
+
+    use ooc_cholesky::config::{LinkModel, RunConfig};
+    use ooc_cholesky::precision::PrecisionMap;
+    use ooc_cholesky::sched::{device_of_row, job_flops, route_read, Job, ReadSrc, Schedule};
+
+    pub struct LegacyJob {
+        pub job: Job,
+        pub write: (usize, usize),
+        pub reads: Vec<(usize, usize)>,
+        pub read_bytes: Vec<u64>,
+        pub read_src: Vec<ReadSrc>,
+        pub waits: Vec<(usize, usize)>,
+        pub access_base: u64,
+        pub est_end: f64,
+    }
+
+    pub struct LegacyNextUse {
+        pub uses: HashMap<(usize, usize), Vec<u64>>,
+    }
+
+    impl LegacyNextUse {
+        pub fn next_use(&self, tile: (usize, usize), now: u64) -> u64 {
+            self.uses
+                .get(&tile)
+                .and_then(|v| v.get(v.partition_point(|&u| u < now)).copied())
+                .unwrap_or(u64::MAX)
+        }
+    }
+
+    /// Lower a left-looking schedule the pre-arena way. Matches the old
+    /// compiler's work profile: global stable sort, per-job heap
+    /// objects, per-access tuple hashing for the next-use tables.
+    pub fn compile(
+        schedule: &Schedule,
+        cfg: &RunConfig,
+        pm: &PrecisionMap,
+        links: &LinkModel,
+        routing: bool,
+    ) -> (Vec<LegacyJob>, Vec<LegacyNextUse>) {
+        let (ndev, spd) = (schedule.ndev, schedule.streams_per_dev);
+        let mut flat: Vec<(usize, usize)> = Vec::new();
+        for (gid, jobs) in schedule.jobs.iter().enumerate() {
+            for pos in 0..jobs.len() {
+                flat.push((gid, pos));
+            }
+        }
+        flat.sort_by_key(|&(gid, pos)| match schedule.jobs[gid][pos] {
+            Job::TileLL { m, k } => (k, m),
+            _ => unreachable!("legacy reference covers left-looking only"),
+        });
+        let wordsq = (cfg.ts * cfg.ts) as u64;
+        let mut jobs = Vec::with_capacity(flat.len());
+        let mut accesses = vec![0u64; ndev];
+        let mut uses: Vec<HashMap<(usize, usize), Vec<u64>>> = vec![HashMap::new(); ndev];
+        let mut clocks = vec![0f64; schedule.total_streams()];
+        for &(gid, pos) in &flat {
+            let job = schedule.jobs[gid][pos];
+            let dev = gid / spd;
+            let write = job.target();
+            let reads = job.operands();
+            let mut read_bytes = Vec::with_capacity(reads.len());
+            let mut read_src = Vec::with_capacity(reads.len());
+            let mut waits = Vec::new();
+            let mut compute = pm.get(write.0, write.1);
+            let access_base = accesses[dev];
+            for &(i, j) in &reads {
+                let bytes = wordsq * pm.get(i, j).width();
+                let owner = device_of_row(i, ndev);
+                read_src.push(route_read(links, routing, bytes, owner, dev));
+                read_bytes.push(bytes);
+                compute = compute.max(pm.get(i, j));
+                if schedule.global_stream(i) != gid {
+                    waits.push((i, j));
+                }
+                uses[dev].entry((i, j)).or_default().push(accesses[dev]);
+                accesses[dev] += 1;
+            }
+            let flops = match job {
+                Job::TileLL { m, k } => job_flops(m, k, cfg.ts),
+                _ => unreachable!(),
+            };
+            let wbytes = wordsq * pm.get(write.0, write.1).width();
+            let mut cost = cfg.hw.kernel_time(flops, compute, cfg.ts)
+                + links.h2d_time(wbytes, dev, dev)
+                + links.d2h_time(wbytes, dev, dev);
+            for ((&(i, _), &bytes), src) in reads.iter().zip(&read_bytes).zip(&read_src) {
+                cost += match *src {
+                    ReadSrc::Peer { src } => links.d2d_time(bytes, src, dev),
+                    ReadSrc::Host => links.h2d_time(bytes, device_of_row(i, ndev), dev),
+                };
+            }
+            let est_end = clocks[gid] + cost;
+            clocks[gid] = est_end;
+            jobs.push(LegacyJob {
+                job,
+                write,
+                reads,
+                read_bytes,
+                read_src,
+                waits,
+                access_base,
+                est_end,
+            });
+        }
+        let tables = uses.into_iter().map(|u| LegacyNextUse { uses: u }).collect();
+        (jobs, tables)
+    }
+}
 
 fn main() {
-    println!("== schedule compile cost vs nt (4 devices, 8 streams each) ==");
+    let mut full_points: Vec<Json> = Vec::new();
+    let mut skeleton_points: Vec<Json> = Vec::new();
+
+    println!("== full IR compile vs nt (4 devices, 8 streams, Belady) ==");
+    let mut new_nt512_mean = f64::NAN;
     for nt in [64usize, 128, 256, 512] {
         let schedule = Schedule::left_looking(nt, 4, 8);
-        let cfg = RunConfig {
-            n: nt * 128,
-            ts: 128,
-            version: Version::V2,
-            mode: Mode::Model,
-            ndev: 4,
-            streams_per_dev: 8,
-            // Belady so the bench pays for the next-use tables too (the
-            // full IR cost; LRU compiles skip them)
-            eviction: EvictionKind::Belady,
-            ..Default::default()
-        };
-        bench(&format!("compile_nt{nt}"), 0.5, 50, || {
+        let cfg = sweep_cfg(nt);
+        let r = bench(&format!("compile_nt{nt}"), 0.5, 50, || {
             let ir = CompiledSchedule::compile(&schedule, &cfg);
             std::hint::black_box(&ir);
         });
+        if nt == 512 {
+            new_nt512_mean = r.mean_s;
+        }
         let ir = CompiledSchedule::compile(&schedule, &cfg);
+        let bytes_per_job = ir.heap_bytes() as f64 / ir.total_jobs().max(1) as f64;
         let static_pct = 100.0 * ir.static_deps as f64 / ir.total_reads.max(1) as f64;
         println!(
-            "    -> {} jobs, {} reads, {:.1}% deps static, {} cross-stream waits",
+            "    -> {} jobs, {} reads, {:.1} IR bytes/job, {:.1}% deps static, {} cross-stream waits",
             ir.total_jobs(),
             ir.total_reads,
+            bytes_per_job,
             static_pct,
             ir.cross_deps
         );
+        full_points.push(Json::obj(vec![
+            ("nt", Json::num(nt as f64)),
+            ("kind", Json::str("full_ir")),
+            ("mean_s", Json::num(r.mean_s)),
+            ("min_s", Json::num(r.min_s)),
+            ("samples", Json::num(r.samples as f64)),
+            ("jobs", Json::num(ir.total_jobs() as f64)),
+            ("reads", Json::num(ir.total_reads as f64)),
+            ("ir_bytes_per_job", Json::num(bytes_per_job)),
+        ]));
     }
+
+    println!("\n== live speedup vs the pre-arena reference compiler (nt=512) ==");
+    let speedup = {
+        let nt = 512usize;
+        let schedule = Schedule::left_looking(nt, 4, 8);
+        let cfg = sweep_cfg(nt);
+        let pm = PrecisionMap::uniform(nt, Precision::F64);
+        // same link model + routing decision the new compiler records
+        let probe = CompiledSchedule::compile(&schedule, &cfg);
+        let (links, routing) = (probe.links.clone(), probe.routing);
+        let r = bench("legacy_compile_nt512", 1.0, 20, || {
+            let out = legacy::compile(&schedule, &cfg, &pm, &links, routing);
+            std::hint::black_box(&out);
+        });
+        // keep the reference honest: its tables must answer like the IR's
+        let (ljobs, ltables) = legacy::compile(&schedule, &cfg, &pm, &links, routing);
+        let lj = &ljobs[ljobs.len() / 2];
+        assert_eq!(lj.reads.len(), lj.read_bytes.len());
+        assert_eq!(lj.read_src.len(), lj.reads.len());
+        assert!(lj.waits.len() <= lj.reads.len());
+        if let Some(&t) = lj.reads.first() {
+            let dev = probe.jobs[0].device; // device 0's table sanity probe
+            let nu = ltables[dev].next_use(t, 0);
+            assert!(nu == u64::MAX || nu < probe.device_accesses[dev]);
+            assert!(lj.access_base <= probe.total_reads && lj.est_end > 0.0);
+        }
+        let s = r.mean_s / new_nt512_mean;
+        println!("    -> speedup_vs_legacy: {s:.2}x (legacy {:.3}s vs {:.3}s)", r.mean_s, new_nt512_mean);
+        s
+    };
+
+    println!("\n== O(jobs) skeleton compile at production scale ==");
+    for nt in [1024usize, 2048, 4096] {
+        let schedule = Schedule::left_looking(nt, 4, 8);
+        let r = bench(&format!("skeleton_nt{nt}"), 0.2, 5, || {
+            let sk = compile_skeleton(&schedule);
+            std::hint::black_box(&sk);
+        });
+        let sk = compile_skeleton(&schedule);
+        let bytes_per_job = sk.heap_bytes() as f64 / sk.total_jobs().max(1) as f64;
+        println!(
+            "    -> {} jobs, {} reads (counted), {:.1} bytes/job",
+            sk.total_jobs(),
+            sk.total_reads,
+            bytes_per_job
+        );
+        skeleton_points.push(Json::obj(vec![
+            ("nt", Json::num(nt as f64)),
+            ("kind", Json::str("skeleton")),
+            ("mean_s", Json::num(r.mean_s)),
+            ("min_s", Json::num(r.min_s)),
+            ("samples", Json::num(r.samples as f64)),
+            ("jobs", Json::num(sk.total_jobs() as f64)),
+            ("reads", Json::num(sk.total_reads as f64)),
+            ("bytes_per_job", Json::num(bytes_per_job)),
+        ]));
+    }
+
+    let doc = Json::obj(vec![
+        ("bench", Json::str("schedule")),
+        ("generated_by", Json::str("cargo bench --bench schedule")),
+        (
+            "config",
+            Json::obj(vec![
+                ("ndev", Json::num(4.0)),
+                ("streams_per_dev", Json::num(8.0)),
+                ("ts", Json::num(128.0)),
+                ("eviction", Json::str("belady")),
+            ]),
+        ),
+        ("full_ir", Json::arr(full_points)),
+        ("skeleton", Json::arr(skeleton_points)),
+        ("speedup_vs_legacy_nt512", Json::num(speedup)),
+    ]);
+    let out = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_schedule.json");
+    std::fs::write(out, doc.pretty()).expect("write BENCH_schedule.json");
+    println!("\nwrote {out}");
 
     println!("\n== miss count V1–V4 vs cache capacity (model, GH200, n=64k, ts=2048) ==");
     println!(

@@ -28,6 +28,7 @@
 //!   entries only.
 
 use crate::precision::Precision;
+use crate::tiles::TileId;
 
 use super::TileKey;
 
@@ -63,9 +64,9 @@ impl ResidencyDirectory {
 
     /// A clean copy of `tile` entered `dev`'s cache (demand load,
     /// prefetch, or peer copy). Idempotent per device.
-    pub fn record_load(&mut self, tile: TileKey, dev: usize, prec: Precision) {
+    pub fn record_load(&mut self, tile: impl Into<TileId>, dev: usize, prec: Precision) {
         debug_assert!(dev < self.ndev);
-        let e = self.tiles.entry(tile).or_default();
+        let e = self.tiles.entry(tile.into()).or_default();
         if !e.clean.iter().any(|&(d, _)| d == dev) {
             e.clean.push((dev, prec));
         }
@@ -73,7 +74,8 @@ impl ResidencyDirectory {
 
     /// `dev`'s copy of `tile` left its cache (steal or invalidation).
     /// No-op if the directory never knew about it.
-    pub fn record_evict(&mut self, tile: TileKey, dev: usize) {
+    pub fn record_evict(&mut self, tile: impl Into<TileId>, dev: usize) {
+        let tile = tile.into();
         if let Some(e) = self.tiles.get_mut(&tile) {
             e.clean.retain(|&(d, _)| d != dev);
             if e.clean.is_empty() && e.dirty.is_none() {
@@ -87,8 +89,9 @@ impl ResidencyDirectory {
     /// devices whose cached copies must be dropped (the caller
     /// invalidates those cache tables — including `dev`'s own, since the
     /// accumulator lives outside the cache).
-    pub fn begin_write(&mut self, tile: TileKey, dev: usize, prec: Precision) -> Vec<usize> {
+    pub fn begin_write(&mut self, tile: impl Into<TileId>, dev: usize, prec: Precision) -> Vec<usize> {
         debug_assert!(dev < self.ndev);
+        let tile = tile.into();
         let e = self.tiles.entry(tile).or_default();
         debug_assert!(
             e.dirty.is_none(),
@@ -105,7 +108,8 @@ impl ResidencyDirectory {
     /// marker clears. The written buffer is *not* retained in any cache
     /// (accumulators are released), so no clean entry appears here —
     /// future residency comes from demand loads.
-    pub fn end_write(&mut self, tile: TileKey, dev: usize) {
+    pub fn end_write(&mut self, tile: impl Into<TileId>, dev: usize) {
+        let tile = tile.into();
         if let Some(e) = self.tiles.get_mut(&tile) {
             debug_assert_eq!(e.dirty.map(|(d, _)| d), Some(dev), "{tile:?}");
             e.dirty = None;
@@ -116,21 +120,21 @@ impl ResidencyDirectory {
     }
 
     /// Does `dev` hold a clean copy of `tile`? (The D2D routing probe.)
-    pub fn clean_holder(&self, tile: TileKey, dev: usize) -> bool {
+    pub fn clean_holder(&self, tile: impl Into<TileId>, dev: usize) -> bool {
         self.tiles
-            .get(&tile)
+            .get(&tile.into())
             .map(|e| e.clean.iter().any(|&(d, _)| d == dev))
             .unwrap_or(false)
     }
 
     /// All devices holding a clean copy of `tile`.
-    pub fn holders(&self, tile: TileKey) -> Vec<(usize, Precision)> {
-        self.tiles.get(&tile).map(|e| e.clean.clone()).unwrap_or_default()
+    pub fn holders(&self, tile: impl Into<TileId>) -> Vec<(usize, Precision)> {
+        self.tiles.get(&tile.into()).map(|e| e.clean.clone()).unwrap_or_default()
     }
 
     /// The dirty owner of `tile`, if a write is in flight.
-    pub fn dirty_owner(&self, tile: TileKey) -> Option<usize> {
-        self.tiles.get(&tile).and_then(|e| e.dirty.map(|(d, _)| d))
+    pub fn dirty_owner(&self, tile: impl Into<TileId>) -> Option<usize> {
+        self.tiles.get(&tile.into()).and_then(|e| e.dirty.map(|(d, _)| d))
     }
 
     /// Number of tiles with at least one recorded copy.
@@ -225,7 +229,7 @@ mod tests {
         let mut d = ResidencyDirectory::new(2);
         d.record_load((1, 0), 0, P);
         // cache agrees -> ok
-        d.check_invariants(|dev, tile| dev == 0 && tile == (1, 0)).unwrap();
+        d.check_invariants(|dev, tile| dev == 0 && tile == TileId::new(1, 0)).unwrap();
         // cache lost the entry without record_evict -> violation
         assert!(d.check_invariants(|_, _| false).is_err());
     }
@@ -243,7 +247,8 @@ mod tests {
                 vec![Default::default(); ndev];
             let mut dirty: Option<(TileKey, usize)> = None;
             for _ in 0..400 {
-                let tile = (rng.below(6) as usize, rng.below(6) as usize);
+                let (a, b) = (rng.below(6) as usize, rng.below(6) as usize);
+                let tile = TileId::new(a.max(b), a.min(b));
                 let dev = rng.below(ndev as u64) as usize;
                 match rng.below(4) {
                     0 => {
@@ -275,9 +280,10 @@ mod tests {
                 }
                 d.check_invariants(|dev, t| caches[dev].contains(&t))
                     .unwrap_or_else(|e| panic!("trial {trial}: {e}"));
-                // single dirty owner, globally
+                // single dirty owner, globally (lower triangle only —
+                // that is the whole key space now)
                 let owners = (0..6)
-                    .flat_map(|i| (0..6).map(move |j| (i, j)))
+                    .flat_map(|i| (0..=i).map(move |j| (i, j)))
                     .filter(|&t| d.dirty_owner(t).is_some())
                     .count();
                 assert!(owners <= 1, "trial {trial}: {owners} dirty tiles");

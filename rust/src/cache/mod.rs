@@ -35,13 +35,17 @@ use std::hash::{BuildHasherDefault, Hasher};
 use std::sync::Arc;
 
 use crate::metrics::Metrics;
+use crate::tiles::TileId;
 
-/// Tile key (row, col).
-pub type TileKey = (usize, usize);
+/// Tile key: the interned packed lower-triangular id. Every public entry
+/// point takes `impl Into<TileId>`, so call sites may still pass
+/// `(row, col)` tuples — they are interned once at the boundary instead
+/// of being rehashed as two words per probe.
+pub type TileKey = TileId;
 
-/// Fast fixed-key hasher for tile coordinates (SipHash is ~4x slower and
-/// HashDoS is irrelevant for internally generated keys). Fibonacci-mix of
-/// the packed (row, col) pair.
+/// Fast fixed-key hasher for tile ids (SipHash is ~4x slower and HashDoS
+/// is irrelevant for internally generated keys). Fibonacci-mix of the
+/// packed id, fed through `TileId`'s single `write_usize`.
 #[derive(Default)]
 pub struct TileHasher(u64);
 
@@ -56,7 +60,7 @@ impl Hasher for TileHasher {
     }
     #[inline]
     fn write_usize(&mut self, v: usize) {
-        // combine successive coordinates; multiply-mix spreads low bits
+        // single multiply-mix of the packed id spreads low bits
         self.0 = (self.0.rotate_left(32) ^ v as u64).wrapping_mul(0x9E3779B97F4A7C15);
     }
 }
@@ -193,7 +197,8 @@ impl<T> CacheTable<T> {
     }
 
     /// Probe for a tile; hits bump the LRU clock.
-    pub fn get(&mut self, key: TileKey, metrics: &Metrics) -> Option<Arc<T>> {
+    pub fn get(&mut self, key: impl Into<TileId>, metrics: &Metrics) -> Option<Arc<T>> {
+        let key = key.into();
         if !self.operand_caching {
             metrics.cache_misses.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
             return None;
@@ -216,8 +221,8 @@ impl<T> CacheTable<T> {
     /// Residency probe that perturbs nothing: no LRU bump, no hit/miss
     /// counters, no oracle clock. Used by the transfer engine to decide
     /// whether a planned load is still worth performing.
-    pub fn peek(&self, key: TileKey) -> bool {
-        self.operand_caching && self.entries.contains_key(&key)
+    pub fn peek(&self, key: impl Into<TileId>) -> bool {
+        self.operand_caching && self.entries.contains_key(&key.into())
     }
 
     /// Payload fetch that perturbs nothing — the D2D path's read of a
@@ -225,11 +230,11 @@ impl<T> CacheTable<T> {
     /// LRU or counting a hit/miss on its metrics: the owning device
     /// neither requested nor benefits from this access, so its eviction
     /// order and hit-rate accounting must not see it.
-    pub fn peek_get(&self, key: TileKey) -> Option<Arc<T>> {
+    pub fn peek_get(&self, key: impl Into<TileId>) -> Option<Arc<T>> {
         if !self.operand_caching {
             return None;
         }
-        self.entries.get(&key).map(|e| e.payload.clone())
+        self.entries.get(&key.into()).map(|e| e.payload.clone())
     }
 
     /// Drain the keys removed (stolen or invalidated) since the last
@@ -253,7 +258,8 @@ impl<T> CacheTable<T> {
     /// or block an accumulator reservation. Returns `true` only when this
     /// call inserted the entry (an already-resident tile returns `false`,
     /// so the engine's issue accounting stays honest under races).
-    pub fn insert_prefetched(&mut self, key: TileKey, bytes: u64, payload: Arc<T>) -> bool {
+    pub fn insert_prefetched(&mut self, key: impl Into<TileId>, bytes: u64, payload: Arc<T>) -> bool {
+        let key = key.into();
         if !self.operand_caching {
             return false;
         }
@@ -272,7 +278,14 @@ impl<T> CacheTable<T> {
     /// entries as needed (`remove_steal`). Returns `false` if the tile
     /// could not be admitted (budget exhausted by pins/reservations) —
     /// the caller then treats the buffer as transient (V1-style).
-    pub fn insert(&mut self, key: TileKey, bytes: u64, payload: Arc<T>, metrics: &Metrics) -> bool {
+    pub fn insert(
+        &mut self,
+        key: impl Into<TileId>,
+        bytes: u64,
+        payload: Arc<T>,
+        metrics: &Metrics,
+    ) -> bool {
+        let key = key.into();
         if !self.operand_caching {
             return false;
         }
@@ -353,27 +366,28 @@ impl<T> CacheTable<T> {
 
     /// Pin a cached tile (V3 diagonal retention). Pinned entries are
     /// never stolen. No-op if the tile is not cached.
-    pub fn pin(&mut self, key: TileKey) {
-        if let Some(e) = self.entries.get_mut(&key) {
+    pub fn pin(&mut self, key: impl Into<TileId>) {
+        if let Some(e) = self.entries.get_mut(&key.into()) {
             e.pins += 1;
         }
     }
 
-    pub fn unpin(&mut self, key: TileKey) {
-        if let Some(e) = self.entries.get_mut(&key) {
+    pub fn unpin(&mut self, key: impl Into<TileId>) {
+        if let Some(e) = self.entries.get_mut(&key.into()) {
             debug_assert!(e.pins > 0);
             e.pins = e.pins.saturating_sub(1);
         }
     }
 
-    pub fn is_pinned(&self, key: TileKey) -> bool {
-        self.entries.get(&key).map(|e| e.pins > 0).unwrap_or(false)
+    pub fn is_pinned(&self, key: impl Into<TileId>) -> bool {
+        self.entries.get(&key.into()).map(|e| e.pins > 0).unwrap_or(false)
     }
 
     /// Drop a tile outright (e.g. a stale pre-factor copy after the
     /// factored version was written back, or a directory-driven
     /// invalidation on write).
-    pub fn invalidate(&mut self, key: TileKey) {
+    pub fn invalidate(&mut self, key: impl Into<TileId>) {
+        let key = key.into();
         if let Some(e) = self.entries.remove(&key) {
             self.cached_bytes -= e.bytes;
             self.evicted_log.push(key);
@@ -590,7 +604,7 @@ mod tests {
         c.invalidate((1, 0));
         let mut gone = c.drain_evicted();
         gone.sort_unstable();
-        assert_eq!(gone, vec![(0, 0), (1, 0)]);
+        assert_eq!(gone, vec![TileId::new(0, 0), TileId::new(1, 0)]);
         assert!(c.drain_evicted().is_empty(), "drain empties the log");
     }
 

@@ -43,6 +43,7 @@
 use std::sync::Arc;
 
 use crate::sched::NextUse;
+use crate::tiles::TileId;
 use crate::util::rng::Rng;
 
 /// Victim-selection policy for `remove_steal`.
@@ -74,16 +75,18 @@ impl Policy {
     }
 }
 
-/// Victim chooser used by `CacheTable::make_room`.
-pub(crate) fn choose_victim<'a, I>(policy: &Policy, now: u64, candidates: I) -> Option<(usize, usize)>
+/// Victim chooser used by `CacheTable::make_room`. Keys are interned
+/// [`TileId`]s; their order equals lexicographic `(row, col)` order, so
+/// every tie-break below picks the victim the tuple-keyed code did.
+pub(crate) fn choose_victim<'a, I>(policy: &Policy, now: u64, candidates: I) -> Option<TileId>
 where
-    I: Iterator<Item = (&'a (usize, usize), u64, u64)>, // (key, last_use, inserted_at)
+    I: Iterator<Item = (&'a TileId, u64, u64)>, // (key, last_use, inserted_at)
 {
     match policy {
         Policy::Lru => candidates.min_by_key(|(_, last, _)| *last).map(|(k, _, _)| *k),
         Policy::Fifo => candidates.min_by_key(|(_, _, ins)| *ins).map(|(k, _, _)| *k),
         Policy::Random(seed) => {
-            let all: Vec<(usize, usize)> = candidates.map(|(k, _, _)| *k).collect();
+            let all: Vec<TileId> = candidates.map(|(k, _, _)| *k).collect();
             if all.is_empty() {
                 None
             } else {
@@ -159,22 +162,25 @@ mod tests {
 
     #[test]
     fn victim_selection_per_policy() {
-        let entries: Vec<((usize, usize), u64, u64)> =
-            vec![((0, 0), 5, 0), ((1, 0), 3, 1), ((2, 0), 9, 2)];
+        let entries: Vec<(TileId, u64, u64)> = vec![
+            (TileId::new(0, 0), 5, 0),
+            (TileId::new(1, 0), 3, 1),
+            (TileId::new(2, 0), 9, 2),
+        ];
         let it = || entries.iter().map(|(k, l, i)| (k, *l, *i));
-        assert_eq!(choose_victim(&Policy::Lru, 0, it()), Some((1, 0))); // oldest use
-        assert_eq!(choose_victim(&Policy::Fifo, 0, it()), Some((0, 0))); // first inserted
+        assert_eq!(choose_victim(&Policy::Lru, 0, it()), Some(TileId::new(1, 0))); // oldest use
+        assert_eq!(choose_victim(&Policy::Fifo, 0, it()), Some(TileId::new(0, 0))); // first inserted
         let r = choose_victim(&Policy::Random(7), 0, it()).unwrap();
         assert!(entries.iter().any(|(k, _, _)| *k == r));
         // oracle: build a schedule where (0,0) is reused soon, (2,0) never
         let s = Schedule::left_looking(3, 1, 1);
         let nu = compile(&s, EvictionKind::Oracle).global_next_use();
         let v = choose_victim(&Policy::Oracle(nu), 0, it()).unwrap();
-        assert_eq!(v, (2, 0), "tile (2,0) has the farthest (no) future use");
+        assert_eq!(v, TileId::new(2, 0), "tile (2,0) has the farthest (no) future use");
         // belady from an explicit trace: (1,0) is never used again
         let nu = Arc::new(NextUse::from_accesses([(0, 0), (1, 0), (2, 0), (0, 0), (2, 0)]));
         let v = choose_victim(&Policy::Belady(nu), 2, it()).unwrap();
-        assert_eq!(v, (1, 0), "after idx 2, only (1,0) has no remaining use");
+        assert_eq!(v, TileId::new(1, 0), "after idx 2, only (1,0) has no remaining use");
     }
 
     #[test]

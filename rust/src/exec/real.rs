@@ -576,7 +576,7 @@ fn run_xfer_worker(sh: &Shared, dev: usize) {
     // trace lane one past the device's compute streams
     let pf_lane = sh.cfg.streams_per_dev as u16;
     while let Some(load) = sh.xfer.queues[dev].pop_wait(&sh.xfer.shutdown) {
-        let (i, j) = load.tile;
+        let (i, j) = load.tile.coords();
         if sh.xfer.is_late(&load) {
             sh.metrics.prefetch_late.fetch_add(1, Ordering::Relaxed);
             continue;

@@ -22,22 +22,35 @@
 //!   *different* stream. Same-stream dependencies are ordered by the
 //!   stream's own program order and need no runtime check at all;
 //! * **read routes** — each read's *source device*, resolved against the
-//!   run's [`crate::config::LinkModel`]: a cross-device read whose peer
-//!   (D2D) link beats the host path is stamped [`ReadSrc::Peer`] with
-//!   the owning device as the preferred source (the executors confirm
-//!   residency against the [`crate::cache::ResidencyDirectory`] at run
-//!   time and fall back to the host when the copy is gone). Local reads,
-//!   host-cheaper topologies (PCIe peers), `--routing host`, and
-//!   versions without an operand cache all resolve to [`ReadSrc::Host`];
+//!   run's [`crate::config::LinkModel`] via [`route_read`] (see
+//!   [`CompiledSchedule::read_src_of`]);
 //! * **per-(tile, device) next-use tables** over the device-local access
 //!   sequence, giving exact reuse distances — what makes the Belady (V4)
 //!   eviction policy implementable (`cache::policy::Policy::Belady`);
-//! * **estimated job start times** from the hardware profile — kernel
-//!   cost at the job's *compute* precision (the highest precision among
-//!   its tiles) plus per-read transfers at each read's logical width —
-//!   from which the transfer plan derives per-load deadlines (latest
-//!   start for a prefetch to land before its consumer) so the engine can
-//!   order loads by deadline slack instead of plain job index.
+//! * **estimated job start times** from the hardware profile, from which
+//!   the transfer plan derives per-load deadlines.
+//!
+//! # IR memory layout (arena/CSR)
+//!
+//! The IR is stored *flat*. Tile coordinates are interned into dense
+//! [`TileId`]s (`tiles::interner`), and the per-job variable-length data
+//! — operand reads and cross-stream waits — live in two shared arenas
+//! (`read_tiles`, `wait_tiles`) with per-job `(offset, len)` ranges in
+//! [`CompiledJob`]: classic CSR. Per-read byte widths and routes are not
+//! stored at all — both are pure O(1) functions of the interned tile
+//! (`tile_bytes[id]`, [`route_read`]), so the old `read_bytes`/`read_src`
+//! side arrays collapse into lookups. [`NextUse`] is likewise flat: one
+//! sequence array grouped per tile, per-tile spans, and per-tile cursor
+//! hints that make the monotone Belady lookups amortized O(1) array
+//! walks instead of hash probes.
+//!
+//! Compilation is parallel: each device's projection of the canonical
+//! order is lowered independently on its own thread (std threads only —
+//! placement, access bases, wait classification and per-stream time
+//! estimates are all device- or stream-local given the canonical order),
+//! and the per-device arenas, job records and next-use tables merge
+//! deterministically afterward. The result is bit-identical for every
+//! thread count ([`CompiledSchedule::compile_with_precisions_threads`]).
 //!
 //! The canonical linear order is the schedule's own creation order
 //! (left-looking: columns left to right, rows top to bottom — the order
@@ -57,15 +70,18 @@
 //! assert_eq!(ir.total_jobs(), s.total_jobs());
 //! let job = ir.job_at(0, 1);
 //! // uniform FP64: every access is charged the full ts²·8 bytes
-//! assert!(job.read_bytes.iter().all(|&b| b == 128 * 128 * 8));
+//! assert!(ir.reads_of(job).iter().all(|&t| ir.bytes_of(t) == 128 * 128 * 8));
 //! ```
 
-use std::collections::HashMap;
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+use std::sync::atomic::{AtomicU32, Ordering};
 use std::sync::Arc;
 
 use crate::config::{EvictionKind, LinkModel, RunConfig, Version};
 use crate::precision::{Precision, PrecisionMap};
 use crate::sched::{device_of_row, stream_of_row, Job, Schedule};
+use crate::tiles::{tri_len, TileId};
 
 /// Compile-time source of one operand read.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -102,8 +118,11 @@ pub fn route_read(
     }
 }
 
-/// One job, lowered: placement, data sets, and static-analysis results.
-#[derive(Debug)]
+/// One job, lowered: placement, CSR ranges into the shared arenas, and
+/// static-analysis results. Fixed-size — all variable-length data lives
+/// in the owning [`CompiledSchedule`]'s arenas, reachable through
+/// [`CompiledSchedule::reads_of`] / [`CompiledSchedule::waits_of`].
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct CompiledJob {
     pub job: Job,
     /// global stream id executing this job
@@ -111,23 +130,11 @@ pub struct CompiledJob {
     /// position within that stream's job list
     pub pos: usize,
     pub device: usize,
-    /// read-only operand tiles, in executor consumption order
-    pub reads: Vec<(usize, usize)>,
-    /// logical byte width of each read, parallel to `reads`:
-    /// `ts² · width(precision of the tile)` — what the transfer plan
-    /// budgets and the wire-volume metrics count for this access
-    pub read_bytes: Vec<u64>,
-    /// compile-time source route of each read, parallel to `reads`
-    pub read_src: Vec<ReadSrc>,
     /// tile this job finalizes
-    pub write: (usize, usize),
+    pub write: TileId,
     /// logical byte width of the written tile (its accumulator upload
     /// and write-back both move this many bytes)
     pub write_bytes: u64,
-    /// reads produced by a *different* stream — the only dependencies
-    /// that need a runtime `ProgressTable` wait; everything else is
-    /// guaranteed final by the stream's own program order
-    pub waits: Vec<(usize, usize)>,
     /// first index of this job's reads in the device-local access
     /// sequence. The executors feed the *minimum* base across a device's
     /// active streams to `CacheTable::set_clock` — the conservative
@@ -140,17 +147,47 @@ pub struct CompiledJob {
     pub est_start: f64,
     /// estimated completion time, seconds
     pub est_end: f64,
+    /// CSR range into the read arena
+    reads_off: u32,
+    reads_len: u32,
+    /// CSR range into the wait arena
+    waits_off: u32,
+    waits_len: u32,
 }
 
-/// Per-device table: tile → sorted device-local access indices.
+impl CompiledJob {
+    /// Number of operand reads.
+    pub fn n_reads(&self) -> usize {
+        self.reads_len as usize
+    }
+
+    /// Number of cross-stream waits.
+    pub fn n_waits(&self) -> usize {
+        self.waits_len as usize
+    }
+}
+
+/// Flat next-use table: tile → device-local access indices.
 ///
 /// `next_use(tile, now)` answers "when is this tile read again at or
-/// after `now`?" in O(log uses) — the primitive behind the Belady (V4)
-/// eviction policy. Built from a [`CompiledSchedule`] (exact static
-/// reuse distances) or from any recorded access trace (tests).
+/// after `now`?" — the primitive behind the Belady (V4) eviction policy.
+/// Storage is a single sequence array grouped per interned tile with
+/// per-tile `[start, end)` spans; a per-tile cursor remembers where the
+/// last answer was found, so the monotone clocks the executors feed in
+/// resolve in amortized O(1) array steps (with a binary-search fallback
+/// when a shared table is probed with out-of-order clocks, e.g. the
+/// legacy oracle shared across devices). Built from a
+/// [`CompiledSchedule`] (exact static reuse distances) or from any
+/// recorded access trace (tests).
 #[derive(Debug, Default)]
 pub struct NextUse {
-    uses: HashMap<(usize, usize), Vec<u64>>,
+    /// access indices, grouped per tile, ascending within each group
+    seq: Vec<u32>,
+    /// per interned tile: `[start, end)` range into `seq`
+    spans: Vec<(u32, u32)>,
+    /// per interned tile: cursor hint (racy by design — any stale value
+    /// is repaired on the next lookup)
+    cursors: Vec<AtomicU32>,
     /// total accesses in the sequence this table indexes
     pub total: u64,
 }
@@ -158,24 +195,79 @@ pub struct NextUse {
 impl NextUse {
     /// Build from an explicit access sequence (0-indexed).
     pub fn from_accesses<I: IntoIterator<Item = (usize, usize)>>(accesses: I) -> NextUse {
-        let mut uses: HashMap<(usize, usize), Vec<u64>> = HashMap::new();
-        let mut seq = 0u64;
-        for tile in accesses {
-            uses.entry(tile).or_default().push(seq);
-            seq += 1;
+        let ids: Vec<TileId> = accesses.into_iter().map(TileId::from).collect();
+        NextUse::from_ids(&ids)
+    }
+
+    /// Build from an interned access sequence: one counting-sort pass,
+    /// no hashing.
+    pub fn from_ids(ids: &[TileId]) -> NextUse {
+        assert!(ids.len() < u32::MAX as usize, "access sequence overflows u32 indexing");
+        let Some(max) = ids.iter().map(|t| t.index()).max() else {
+            return NextUse::default();
+        };
+        // counting sort of access indices into per-tile groups
+        let mut starts = vec![0u32; max + 2];
+        for t in ids {
+            starts[t.index() + 1] += 1;
         }
-        NextUse { uses, total: seq }
+        for i in 1..starts.len() {
+            starts[i] += starts[i - 1];
+        }
+        let mut fill: Vec<u32> = starts[..=max].to_vec();
+        let mut seq = vec![0u32; ids.len()];
+        for (i, t) in ids.iter().enumerate() {
+            let c = &mut fill[t.index()];
+            seq[*c as usize] = i as u32;
+            *c += 1;
+        }
+        let spans: Vec<(u32, u32)> = (0..=max).map(|t| (starts[t], starts[t + 1])).collect();
+        let cursors = spans.iter().map(|&(s, _)| AtomicU32::new(s)).collect();
+        NextUse { seq, spans, cursors, total: ids.len() as u64 }
     }
 
     /// Next access of `tile` at or after `now`; `u64::MAX` if never again.
-    pub fn next_use(&self, tile: (usize, usize), now: u64) -> u64 {
-        match self.uses.get(&tile) {
-            None => u64::MAX,
-            Some(v) => match v.binary_search(&now) {
-                Ok(i) => v[i],
-                Err(i) if i < v.len() => v[i],
-                _ => u64::MAX,
-            },
+    pub fn next_use(&self, tile: impl Into<TileId>, now: u64) -> u64 {
+        let idx = tile.into().index();
+        let Some(&(s, e)) = self.spans.get(idx) else {
+            return u64::MAX;
+        };
+        let (s, e) = (s as usize, e as usize);
+        if s == e || now > u32::MAX as u64 {
+            return u64::MAX;
+        }
+        let now = now as u32;
+        let mut c = (self.cursors[idx].load(Ordering::Relaxed) as usize).clamp(s, e);
+        // monotone fast path: the cursor is at or a few entries away from
+        // the answer; bounded walk, then binary search for the cold case
+        let mut steps = 0;
+        if c > s && self.seq[c - 1] >= now {
+            loop {
+                c -= 1;
+                steps += 1;
+                if c == s || self.seq[c - 1] < now {
+                    break;
+                }
+                if steps == 16 {
+                    c = s + self.seq[s..c].partition_point(|&v| v < now);
+                    break;
+                }
+            }
+        } else {
+            while c < e && self.seq[c] < now {
+                c += 1;
+                steps += 1;
+                if steps == 16 {
+                    c += self.seq[c..e].partition_point(|&v| v < now);
+                    break;
+                }
+            }
+        }
+        self.cursors[idx].store(c as u32, Ordering::Relaxed);
+        if c < e {
+            self.seq[c] as u64
+        } else {
+            u64::MAX
         }
     }
 }
@@ -202,7 +294,14 @@ pub struct CompiledSchedule {
     /// jobs in canonical linear order (the schedule's creation order)
     pub jobs: Vec<CompiledJob>,
     /// per global stream id: indices into `jobs`, in stream program order
-    pub stream_jobs: Vec<Vec<usize>>,
+    pub stream_jobs: Vec<Vec<u32>>,
+    /// read arena: every job's operand tiles, consumption order, CSR
+    read_tiles: Vec<TileId>,
+    /// wait arena: every job's cross-stream dependencies, CSR
+    wait_tiles: Vec<TileId>,
+    /// per interned tile: logical byte width (ts² · precision width) —
+    /// what the old per-read `read_bytes` array strength-reduced into
+    tile_bytes: Vec<u32>,
     /// per device: exact next-use tables over the device-local sequence
     next_use: Vec<Arc<NextUse>>,
     /// one global next-use table over the canonical order (the legacy
@@ -229,6 +328,197 @@ fn canon_key(job: &Job) -> (usize, u8, usize, usize) {
     }
 }
 
+/// Canonical linear order as `(gid, pos)` pairs: a k-way merge of the
+/// per-stream job lists by creation key. Each stream's list is already
+/// in canonical order (the builders emit jobs in creation order and a
+/// stream's projection preserves it), so this is O(n log streams) — no
+/// global sort, and the output is identical to the stable sort the old
+/// compiler performed.
+fn canonical_order(schedule: &Schedule) -> Vec<(u32, u32)> {
+    let total = schedule.total_jobs();
+    assert!(total <= u32::MAX as usize, "schedule overflows u32 job indexing");
+    let mut heap: BinaryHeap<Reverse<((usize, u8, usize, usize), u32)>> =
+        BinaryHeap::with_capacity(schedule.total_streams());
+    for (gid, jobs) in schedule.jobs.iter().enumerate() {
+        if let Some(j) = jobs.first() {
+            heap.push(Reverse((canon_key(j), gid as u32)));
+        }
+    }
+    let mut cursor = vec![0u32; schedule.total_streams()];
+    let mut flat = Vec::with_capacity(total);
+    while let Some(Reverse((key, gid))) = heap.pop() {
+        let pos = cursor[gid as usize];
+        flat.push((gid, pos));
+        cursor[gid as usize] = pos + 1;
+        if let Some(j) = schedule.jobs[gid as usize].get(pos as usize + 1) {
+            let nk = canon_key(j);
+            debug_assert!(nk > key, "stream {gid} not in canonical creation order");
+            heap.push(Reverse((nk, gid)));
+        }
+    }
+    flat
+}
+
+/// Per-tile logical byte widths, interned: `tile_bytes[id] = ts²·width`.
+fn intern_tile_bytes(nt: usize, ts: usize, pm: &PrecisionMap) -> Vec<u32> {
+    let wordsq = (ts * ts) as u64;
+    let mut tb = vec![0u32; tri_len(nt)];
+    for i in 0..nt {
+        for j in 0..=i {
+            let b = wordsq * pm.get(i, j).width();
+            assert!(b <= u32::MAX as u64, "tile byte width overflows u32 (ts={ts})");
+            tb[TileId::new(i, j).index()] = b as u32;
+        }
+    }
+    tb
+}
+
+/// One device's lowered projection of the canonical order — the unit of
+/// parallel compilation. Arena offsets are local; the merge rebases them.
+struct DevPart {
+    /// lowered jobs in this device's canonical (projection) order; the
+    /// merge re-derives each job's global canonical slot from `flat`
+    jobs: Vec<CompiledJob>,
+    read_tiles: Vec<TileId>,
+    wait_tiles: Vec<TileId>,
+    next_use: Arc<NextUse>,
+    accesses: u64,
+    total_reads: u64,
+    static_deps: u64,
+    cross_deps: u64,
+    peer_routed: u64,
+}
+
+#[allow(clippy::too_many_arguments)]
+fn lower_device(
+    schedule: &Schedule,
+    cfg: &RunConfig,
+    pm: &PrecisionMap,
+    links: &LinkModel,
+    routing: bool,
+    tile_bytes: &[u32],
+    flat: &[(u32, u32)],
+    dev: usize,
+    wants_device_table: bool,
+) -> DevPart {
+    let (ndev, spd) = (schedule.ndev, schedule.streams_per_dev);
+    let t3 = (cfg.ts as f64).powi(3);
+    let mut part = DevPart {
+        jobs: Vec::new(),
+        read_tiles: Vec::new(),
+        wait_tiles: Vec::new(),
+        next_use: Arc::new(NextUse::default()),
+        accesses: 0,
+        total_reads: 0,
+        static_deps: 0,
+        cross_deps: 0,
+        peer_routed: 0,
+    };
+    let mut stream_clock = vec![0f64; spd];
+    // reusable per-job scratch: (bytes, owner, route) per read, so the
+    // cost loop below adds read costs in exactly the consumption order
+    // without re-deriving coordinates from the arena
+    let mut scratch: Vec<(u64, usize, ReadSrc)> = Vec::new();
+    for &(gid, pos) in flat {
+        let (gid, pos) = (gid as usize, pos as usize);
+        if gid / spd != dev {
+            continue;
+        }
+        let job = schedule.jobs[gid][pos];
+        let write = TileId::from(job.target());
+        let write_prec = pm.get(write.row(), write.col());
+        let write_bytes = tile_bytes[write.index()] as u64;
+        let reads_off = part.read_tiles.len();
+        let waits_off = part.wait_tiles.len();
+        // the job's compute precision: kernels run at the highest
+        // precision among their tiles (lower operands are up-cast)
+        let mut compute_prec = write_prec;
+        scratch.clear();
+        {
+            let p = &mut part;
+            let cp = &mut compute_prec;
+            let sc = &mut scratch;
+            job.for_each_operand(|i, j| {
+                let t = TileId::new(i, j);
+                let bytes = tile_bytes[t.index()] as u64;
+                let owner = device_of_row(i, ndev);
+                let src = route_read(links, routing, bytes, owner, dev);
+                if matches!(src, ReadSrc::Peer { .. }) {
+                    p.peer_routed += 1;
+                }
+                *cp = (*cp).max(pm.get(i, j));
+                if schedule.global_stream(i) == gid {
+                    p.static_deps += 1;
+                } else {
+                    p.cross_deps += 1;
+                    p.wait_tiles.push(t);
+                }
+                p.read_tiles.push(t);
+                sc.push((bytes, owner, src));
+            });
+        }
+        let n_reads = part.read_tiles.len() - reads_off;
+        part.total_reads += n_reads as u64;
+        let access_base = part.accesses;
+        part.accesses += n_reads as u64;
+
+        // cost estimate: kernel flops at the compute precision + one
+        // transfer per read at its logical width, plus the accumulator
+        // round trip at the write width — a deadline heuristic, not a
+        // model (the DES owns timing fidelity)
+        let flops = match job {
+            Job::TileLL { m, k } => crate::sched::job_flops(m, k, cfg.ts),
+            Job::FactorDiagRL { .. } => t3 / 3.0,
+            Job::FactorOffRL { .. } => t3,
+            Job::UpdateRL { i, j, .. } => {
+                if i == j {
+                    t3
+                } else {
+                    2.0 * t3
+                }
+            }
+        };
+        // the accumulator round trip is always NUMA-local (jobs run on
+        // the device owning their target row); each read is charged on
+        // its *routed* link — a D2D-sourced operand estimates cheaper
+        // than a cross-NUMA host fetch, which is what pushes its
+        // prefetch deadline later
+        let mut cost = cfg.hw.kernel_time(flops, compute_prec, cfg.ts)
+            + links.h2d_time(write_bytes, dev, dev)
+            + links.d2h_time(write_bytes, dev, dev);
+        for &(bytes, owner, src) in &scratch {
+            cost += match src {
+                ReadSrc::Peer { src } => links.d2d_time(bytes, src, dev),
+                ReadSrc::Host => links.h2d_time(bytes, owner, dev),
+            };
+        }
+        let clock = &mut stream_clock[gid - dev * spd];
+        let est_start = *clock;
+        let est_end = est_start + cost;
+        *clock = est_end;
+
+        part.jobs.push(CompiledJob {
+            job,
+            gid,
+            pos,
+            device: dev,
+            write,
+            write_bytes,
+            access_base,
+            est_start,
+            est_end,
+            reads_off: reads_off as u32,
+            reads_len: n_reads as u32,
+            waits_off: waits_off as u32,
+            waits_len: (part.wait_tiles.len() - waits_off) as u32,
+        });
+    }
+    if wants_device_table {
+        part.next_use = Arc::new(NextUse::from_ids(&part.read_tiles));
+    }
+    part
+}
+
 impl CompiledSchedule {
     /// Lower `schedule` for a uniform-FP64 run on `cfg`'s hardware —
     /// every access is charged the full ts²·8 bytes. MxP runs must use
@@ -241,15 +531,29 @@ impl CompiledSchedule {
 
     /// Lower `schedule` for a run on `cfg`'s hardware, stamping every
     /// read/write with its logical byte width from `pm`. O(total operand
-    /// reads) time and memory.
+    /// reads) time and memory; per-device projections are lowered in
+    /// parallel on up to `available_parallelism` std threads.
     pub fn compile_with_precisions(
         schedule: &Schedule,
         cfg: &RunConfig,
         pm: &PrecisionMap,
     ) -> CompiledSchedule {
+        let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        Self::compile_with_precisions_threads(schedule, cfg, pm, threads)
+    }
+
+    /// [`CompiledSchedule::compile_with_precisions`] with an explicit
+    /// worker-thread cap. The IR is identical for every `threads` value
+    /// (each device's projection is lowered independently and merged in
+    /// device order) — property-tested in `rust/tests/schedule_ir.rs`.
+    pub fn compile_with_precisions_threads(
+        schedule: &Schedule,
+        cfg: &RunConfig,
+        pm: &PrecisionMap,
+        threads: usize,
+    ) -> CompiledSchedule {
         let (nt, ndev, spd) = (schedule.nt, schedule.ndev, schedule.streams_per_dev);
         assert_eq!(pm.nt(), nt, "precision map shape mismatch");
-        let nstreams = schedule.total_streams();
         // estimates (and the plan's deadlines derived from them) always
         // assume pinned staging — the same convention the executors use
         // for everything except the sync baseline
@@ -259,130 +563,124 @@ impl CompiledSchedule {
         let routing = cfg.d2d_routing
             && ndev > 1
             && matches!(cfg.version, Version::V2 | Version::V3 | Version::RightLooking);
-
-        // canonical order: merge the per-stream lists by creation key
-        let mut flat: Vec<(usize, usize)> = Vec::with_capacity(schedule.total_jobs());
-        for (gid, jobs) in schedule.jobs.iter().enumerate() {
-            for pos in 0..jobs.len() {
-                flat.push((gid, pos));
-            }
-        }
-        flat.sort_by_key(|&(gid, pos)| canon_key(&schedule.jobs[gid][pos]));
-
-        let wordsq = (cfg.ts * cfg.ts) as u64;
-        let t3 = (cfg.ts as f64).powi(3);
-
-        let mut compiled = Vec::with_capacity(flat.len());
-        let mut stream_jobs: Vec<Vec<usize>> = vec![Vec::new(); nstreams];
         // next-use tables are Θ(total reads) in memory; materialize only
         // the one the run's eviction policy consumes (access bases need
         // just the per-device counters)
         let wants_device_tables = cfg.eviction == EvictionKind::Belady;
         let wants_global_table = cfg.eviction == EvictionKind::Oracle;
-        let mut dev_count = vec![0u64; ndev];
-        let mut dev_seq: Vec<Vec<(usize, usize)>> = vec![Vec::new(); ndev];
-        let mut stream_clock = vec![0f64; nstreams];
-        let (mut total_reads, mut static_deps, mut cross_deps) = (0u64, 0u64, 0u64);
 
-        let mut peer_routed = 0u64;
-        for (gid, pos) in flat {
-            let job = schedule.jobs[gid][pos];
-            let device = gid / spd;
-            let reads = job.operands();
-            let write = job.target();
-            let write_prec = pm.get(write.0, write.1);
-            let write_bytes = wordsq * write_prec.width();
-            let mut waits = Vec::new();
-            let mut read_bytes = Vec::with_capacity(reads.len());
-            let mut read_src = Vec::with_capacity(reads.len());
-            // the job's compute precision: kernels run at the highest
-            // precision among their tiles (lower operands are up-cast)
-            let mut compute_prec = write_prec;
-            for &(i, j) in &reads {
-                let p = pm.get(i, j);
-                let bytes = wordsq * p.width();
-                read_bytes.push(bytes);
-                let src = route_read(&links, routing, bytes, device_of_row(i, ndev), device);
-                if matches!(src, ReadSrc::Peer { .. }) {
-                    peer_routed += 1;
-                }
-                read_src.push(src);
-                compute_prec = compute_prec.max(p);
-                if schedule.global_stream(i) == gid {
-                    static_deps += 1;
-                } else {
-                    cross_deps += 1;
-                    waits.push((i, j));
-                }
-            }
-            total_reads += reads.len() as u64;
-            let access_base = dev_count[device];
-            dev_count[device] += reads.len() as u64;
-            if wants_device_tables {
-                dev_seq[device].extend_from_slice(&reads);
-            }
+        let flat = canonical_order(schedule);
+        let tile_bytes = intern_tile_bytes(nt, cfg.ts, pm);
 
-            // cost estimate: kernel flops at the compute precision + one
-            // transfer per read at its logical width, plus the
-            // accumulator round trip at the write width — a deadline
-            // heuristic, not a model (the DES owns timing fidelity)
-            let flops = match job {
-                Job::TileLL { m, k } => crate::sched::job_flops(m, k, cfg.ts),
-                Job::FactorDiagRL { .. } => t3 / 3.0,
-                Job::FactorOffRL { .. } => t3,
-                Job::UpdateRL { i, j, .. } => {
-                    if i == j {
-                        t3
-                    } else {
-                        2.0 * t3
+        // lower every device's projection, in parallel when it pays
+        let workers = threads.clamp(1, ndev);
+        let mut parts: Vec<Option<DevPart>> = Vec::with_capacity(ndev);
+        if workers == 1 {
+            for dev in 0..ndev {
+                parts.push(Some(lower_device(
+                    schedule,
+                    cfg,
+                    pm,
+                    &links,
+                    routing,
+                    &tile_bytes,
+                    &flat,
+                    dev,
+                    wants_device_tables,
+                )));
+            }
+        } else {
+            parts.resize_with(ndev, || None);
+            let (flat_ref, tb_ref, links_ref) = (&flat, &tile_bytes, &links);
+            std::thread::scope(|scope| {
+                let mut handles = Vec::with_capacity(workers);
+                for w in 0..workers {
+                    handles.push(scope.spawn(move || {
+                        (w..ndev)
+                            .step_by(workers)
+                            .map(|dev| {
+                                (
+                                    dev,
+                                    lower_device(
+                                        schedule,
+                                        cfg,
+                                        pm,
+                                        links_ref,
+                                        routing,
+                                        tb_ref,
+                                        flat_ref,
+                                        dev,
+                                        wants_device_tables,
+                                    ),
+                                )
+                            })
+                            .collect::<Vec<_>>()
+                    }));
+                }
+                for h in handles {
+                    for (dev, part) in h.join().expect("compile worker panicked") {
+                        parts[dev] = Some(part);
                     }
                 }
-            };
-            // the accumulator round trip is always NUMA-local (jobs run
-            // on the device owning their target row); each read is
-            // charged on its *routed* link — a D2D-sourced operand
-            // estimates cheaper than a cross-NUMA host fetch, which is
-            // what pushes its prefetch deadline later
-            let mut cost = cfg.hw.kernel_time(flops, compute_prec, cfg.ts)
-                + links.h2d_time(write_bytes, device, device)
-                + links.d2h_time(write_bytes, device, device);
-            for (r, &(i, _)) in reads.iter().enumerate() {
-                let b = read_bytes[r];
-                cost += match read_src[r] {
-                    ReadSrc::Peer { src } => links.d2d_time(b, src, device),
-                    ReadSrc::Host => links.h2d_time(b, device_of_row(i, ndev), device),
-                };
-            }
-            let est_start = stream_clock[gid];
-            let est_end = est_start + cost;
-            stream_clock[gid] = est_end;
-
-            stream_jobs[gid].push(compiled.len());
-            compiled.push(CompiledJob {
-                job,
-                gid,
-                pos,
-                device,
-                reads,
-                read_bytes,
-                read_src,
-                write,
-                write_bytes,
-                waits,
-                access_base,
-                est_start,
-                est_end,
             });
         }
+        let parts: Vec<DevPart> = parts.into_iter().map(|p| p.expect("device lowered")).collect();
 
-        let device_accesses = dev_count;
-        let next_use = dev_seq
-            .into_iter()
-            .map(|s| Arc::new(NextUse::from_accesses(s)))
-            .collect();
+        // deterministic merge, device order: concatenate arenas, rebase
+        // each job's CSR offsets, and place jobs by canonical index
+        let total_read: usize = parts.iter().map(|p| p.read_tiles.len()).sum();
+        let total_wait: usize = parts.iter().map(|p| p.wait_tiles.len()).sum();
+        assert!(
+            total_read <= u32::MAX as usize && total_wait <= u32::MAX as usize,
+            "operand arena overflows u32 CSR offsets"
+        );
+        let mut read_tiles = Vec::with_capacity(total_read);
+        let mut wait_tiles = Vec::with_capacity(total_wait);
+        let mut jobs: Vec<Option<CompiledJob>> = vec![None; flat.len()];
+        let mut next_use = Vec::with_capacity(ndev);
+        let mut device_accesses = Vec::with_capacity(ndev);
+        let (mut total_reads, mut static_deps, mut cross_deps, mut peer_routed) =
+            (0u64, 0u64, 0u64, 0u64);
+        for (dev, part) in parts.into_iter().enumerate() {
+            let read_base = read_tiles.len() as u32;
+            let wait_base = wait_tiles.len() as u32;
+            read_tiles.extend_from_slice(&part.read_tiles);
+            wait_tiles.extend_from_slice(&part.wait_tiles);
+            next_use.push(part.next_use);
+            device_accesses.push(part.accesses);
+            total_reads += part.total_reads;
+            static_deps += part.static_deps;
+            cross_deps += part.cross_deps;
+            peer_routed += part.peer_routed;
+            // a job's global canonical slot is the flat position of its
+            // (gid, pos); workers emit their projection in flat order
+            let mut it = part.jobs.into_iter();
+            for (ci, &(gid, _)) in flat.iter().enumerate() {
+                if gid as usize / spd != dev {
+                    continue;
+                }
+                let mut cj = it.next().expect("worker emitted every projected job");
+                cj.reads_off += read_base;
+                cj.waits_off += wait_base;
+                jobs[ci] = Some(cj);
+            }
+            debug_assert!(it.next().is_none());
+        }
+        let jobs: Vec<CompiledJob> =
+            jobs.into_iter().map(|j| j.expect("every canonical slot lowered")).collect();
+
+        let mut stream_jobs: Vec<Vec<u32>> = vec![Vec::new(); schedule.total_streams()];
+        for (ci, &(gid, _)) in flat.iter().enumerate() {
+            stream_jobs[gid as usize].push(ci as u32);
+        }
+
         let global_next_use = if wants_global_table {
-            let global_reads = compiled.iter().flat_map(|cj| cj.reads.iter().copied());
-            Arc::new(NextUse::from_accesses(global_reads))
+            let mut global: Vec<TileId> = Vec::with_capacity(total_read);
+            for cj in &jobs {
+                let off = cj.reads_off as usize;
+                global.extend_from_slice(&read_tiles[off..off + cj.reads_len as usize]);
+            }
+            Arc::new(NextUse::from_ids(&global))
         } else {
             Arc::new(NextUse::default())
         };
@@ -395,8 +693,11 @@ impl CompiledSchedule {
             links,
             routing,
             peer_routed,
-            jobs: compiled,
+            jobs,
             stream_jobs,
+            read_tiles,
+            wait_tiles,
+            tile_bytes,
             next_use,
             global_next_use,
             device_accesses,
@@ -420,18 +721,50 @@ impl CompiledSchedule {
 
     /// The compiled job at stream `gid`, position `pos`.
     pub fn job_at(&self, gid: usize, pos: usize) -> &CompiledJob {
-        &self.jobs[self.stream_jobs[gid][pos]]
+        &self.jobs[self.stream_jobs[gid][pos] as usize]
+    }
+
+    /// Operand read set of `cj`, in consumption order (arena slice).
+    pub fn reads_of(&self, cj: &CompiledJob) -> &[TileId] {
+        let off = cj.reads_off as usize;
+        &self.read_tiles[off..off + cj.reads_len as usize]
+    }
+
+    /// Cross-stream dependencies of `cj` (arena slice).
+    pub fn waits_of(&self, cj: &CompiledJob) -> &[TileId] {
+        let off = cj.waits_off as usize;
+        &self.wait_tiles[off..off + cj.waits_len as usize]
     }
 
     /// Cross-stream dependencies of (gid, pos) — the only tiles the
     /// executor must wait on.
-    pub fn waits(&self, gid: usize, pos: usize) -> &[(usize, usize)] {
-        &self.job_at(gid, pos).waits
+    pub fn waits(&self, gid: usize, pos: usize) -> &[TileId] {
+        self.waits_of(self.job_at(gid, pos))
     }
 
     /// Operand read set of (gid, pos), in consumption order.
-    pub fn reads(&self, gid: usize, pos: usize) -> &[(usize, usize)] {
-        &self.job_at(gid, pos).reads
+    pub fn reads(&self, gid: usize, pos: usize) -> &[TileId] {
+        self.reads_of(self.job_at(gid, pos))
+    }
+
+    /// Logical byte width of `tile` (ts² · precision width) — the
+    /// interned lookup that replaced the per-read `read_bytes` array.
+    pub fn bytes_of(&self, tile: TileId) -> u64 {
+        self.tile_bytes[tile.index()] as u64
+    }
+
+    /// Compile-time source route of a read of `tile` by `device` — the
+    /// same [`route_read`] predicate the executors apply, evaluated on
+    /// the IR's pinned link model (replaces the per-read `read_src`
+    /// array: the route is a pure function of tile and consumer).
+    pub fn read_src_of(&self, tile: TileId, device: usize) -> ReadSrc {
+        route_read(
+            &self.links,
+            self.routing,
+            self.bytes_of(tile),
+            device_of_row(tile.row(), self.ndev),
+            device,
+        )
     }
 
     /// First device-local access index of (gid, pos)'s reads.
@@ -454,48 +787,66 @@ impl CompiledSchedule {
         self.global_next_use.clone()
     }
 
+    /// Amortized heap footprint of the IR in bytes (jobs, stream lists,
+    /// arenas, interned width table, next-use tables) — what the compile
+    /// bench reports per job.
+    pub fn heap_bytes(&self) -> u64 {
+        let job_bytes = (self.jobs.len() * std::mem::size_of::<CompiledJob>()) as u64;
+        let stream_bytes: u64 = self.stream_jobs.iter().map(|s| 4 * s.len() as u64).sum();
+        let arena_bytes = 4 * (self.read_tiles.len() + self.wait_tiles.len()) as u64;
+        let width_bytes = 4 * self.tile_bytes.len() as u64;
+        let nu = |n: &NextUse| (4 * n.seq.len() + 12 * n.spans.len()) as u64;
+        let nu_bytes: u64 =
+            self.next_use.iter().map(|t| nu(t)).sum::<u64>() + nu(&self.global_next_use);
+        job_bytes + stream_bytes + arena_bytes + width_bytes + nu_bytes
+    }
+
     /// Consistency check for tests: per-stream projections match the
-    /// source schedule, wait lists never contain same-stream tiles, and
-    /// access bases tile the device sequences exactly.
+    /// source schedule, wait lists never contain same-stream tiles,
+    /// routes obey the link model, and access bases tile the device
+    /// sequences exactly.
     pub fn validate(&self, schedule: &Schedule) -> Result<(), String> {
         if self.jobs.len() != schedule.total_jobs() {
             return Err(format!("{} jobs vs {}", self.jobs.len(), schedule.total_jobs()));
         }
-        let mut dev_cursor = vec![HashMap::new(); self.ndev];
+        let mut dev_cursor = vec![std::collections::HashMap::new(); self.ndev];
+        let mut peer = 0u64;
         for (gid, idxs) in self.stream_jobs.iter().enumerate() {
             if idxs.len() != schedule.jobs[gid].len() {
                 return Err(format!("stream {gid}: {} vs {}", idxs.len(), schedule.jobs[gid].len()));
             }
             for (pos, &i) in idxs.iter().enumerate() {
-                let cj = &self.jobs[i];
+                let cj = &self.jobs[i as usize];
                 if cj.job != schedule.jobs[gid][pos] || cj.gid != gid || cj.pos != pos {
                     return Err(format!("stream {gid} pos {pos}: {cj:?}"));
                 }
-                for &(r, _) in &cj.waits {
-                    if self.owner_gid(r) == gid {
+                if self.reads_of(cj).len() != cj.n_reads() {
+                    return Err(format!("read arena shape mismatch in {cj:?}"));
+                }
+                for &w in self.waits_of(cj) {
+                    if self.owner_gid(w.row()) == gid {
                         return Err(format!("same-stream wait in {cj:?}"));
                     }
                 }
-                if cj.read_src.len() != cj.reads.len() {
-                    return Err(format!("route list shape mismatch in {cj:?}"));
-                }
-                for (r, &tile) in cj.reads.iter().enumerate() {
-                    let owner = device_of_row(tile.0, self.ndev);
-                    let want =
-                        route_read(&self.links, self.routing, cj.read_bytes[r], owner, cj.device);
-                    if cj.read_src[r] != want {
-                        return Err(format!("route drift for {tile:?} in {cj:?}"));
-                    }
-                    if let ReadSrc::Peer { src } = cj.read_src[r] {
-                        if src == cj.device || src != owner {
-                            return Err(format!("bogus peer source {src} in {cj:?}"));
+                for &tile in self.reads_of(cj) {
+                    let owner = device_of_row(tile.row(), self.ndev);
+                    match self.read_src_of(tile, cj.device) {
+                        ReadSrc::Host => {}
+                        ReadSrc::Peer { src } => {
+                            peer += 1;
+                            if src == cj.device || src != owner {
+                                return Err(format!("bogus peer source {src} in {cj:?}"));
+                            }
                         }
                     }
                 }
-                if !cj.reads.is_empty() {
-                    dev_cursor[cj.device].insert(cj.access_base, cj.reads.len() as u64);
+                if cj.n_reads() > 0 {
+                    dev_cursor[cj.device].insert(cj.access_base, cj.n_reads() as u64);
                 }
             }
+        }
+        if peer != self.peer_routed {
+            return Err(format!("route drift: {peer} peer reads vs counted {}", self.peer_routed));
         }
         for (dev, spans) in dev_cursor.iter().enumerate() {
             let mut expect = 0u64;
@@ -514,6 +865,60 @@ impl CompiledSchedule {
         }
         Ok(())
     }
+}
+
+/// O(jobs) structural lowering: canonical order, placement, write tiles
+/// and access bases — everything whose size is *per job* — without
+/// enumerating the Θ(nt³) operand arena. This is the compile-scalability
+/// probe behind the bench's top-end points (ROADMAP item 5: production
+/// scale means ~10⁸ jobs, where anything per-read must stay implicit),
+/// stored as packed parallel arrays (SoA) of ≤ 20 bytes/job.
+#[derive(Debug)]
+pub struct ScheduleSkeleton {
+    /// canonical linear order, as `(gid, pos)`
+    pub order: Vec<(u32, u32)>,
+    /// per canonical job: the tile it finalizes
+    pub write: Vec<TileId>,
+    /// per canonical job: first device-local access index of its reads
+    pub access_base: Vec<u64>,
+    /// per device: total operand accesses
+    pub device_accesses: Vec<u64>,
+    /// total operand reads (counted in O(1) per job, never enumerated)
+    pub total_reads: u64,
+}
+
+impl ScheduleSkeleton {
+    pub fn total_jobs(&self) -> usize {
+        self.order.len()
+    }
+
+    /// Heap footprint in bytes — the bench's bytes-per-job numerator.
+    pub fn heap_bytes(&self) -> u64 {
+        (self.order.len() * 8 + self.write.len() * 4 + self.access_base.len() * 8) as u64
+            + 8 * self.device_accesses.len() as u64
+    }
+}
+
+/// Build the structural skeleton of `schedule`'s compiled form. Agrees
+/// exactly with [`CompiledSchedule::compile`] on order, writes, access
+/// bases and read counts (property-tested), at O(jobs) cost.
+pub fn compile_skeleton(schedule: &Schedule) -> ScheduleSkeleton {
+    let spd = schedule.streams_per_dev;
+    let order = canonical_order(schedule);
+    let mut write = Vec::with_capacity(order.len());
+    let mut access_base = Vec::with_capacity(order.len());
+    let mut device_accesses = vec![0u64; schedule.ndev];
+    let mut total_reads = 0u64;
+    for &(gid, pos) in &order {
+        let job = schedule.jobs[gid as usize][pos as usize];
+        let dev = gid as usize / spd;
+        let n = job.operand_count() as u64;
+        write.push(TileId::from(job.target()));
+        access_base.push(device_accesses[dev]);
+        device_accesses[dev] += n;
+        total_reads += n;
+    }
+    ScheduleSkeleton { order, write, access_base, device_accesses, total_reads }
 }
 
 #[cfg(test)]
@@ -549,6 +954,33 @@ mod tests {
     }
 
     #[test]
+    fn canonical_merge_equals_stable_sort() {
+        // the k-way merge must reproduce the old global stable sort
+        let mut rng = crate::util::rng::Rng::new(23);
+        for _ in 0..20 {
+            let nt = 1 + rng.below(12) as usize;
+            let ndev = 1 + rng.below(3) as usize;
+            let spd = 1 + rng.below(4) as usize;
+            for s in [
+                Schedule::left_looking(nt, ndev, spd),
+                Schedule::right_looking(nt, ndev, spd),
+            ] {
+                let merged = canonical_order(&s);
+                let mut sorted: Vec<(u32, u32)> = Vec::new();
+                for (gid, jobs) in s.jobs.iter().enumerate() {
+                    for pos in 0..jobs.len() {
+                        sorted.push((gid as u32, pos as u32));
+                    }
+                }
+                sorted.sort_by_key(|&(gid, pos)| {
+                    canon_key(&s.jobs[gid as usize][pos as usize])
+                });
+                assert_eq!(merged, sorted, "nt={nt} ndev={ndev} spd={spd}");
+            }
+        }
+    }
+
+    #[test]
     fn canonical_order_is_creation_order() {
         // single stream: the canonical order IS the stream's job list
         let s = Schedule::left_looking(6, 1, 1);
@@ -569,14 +1001,14 @@ mod tests {
         let ir = CompiledSchedule::compile(&s, &cfg(8 * 128, 128));
         for cj in &ir.jobs {
             // same-row reads never appear in the wait list
-            let (row, _) = cj.write;
-            for &(i, _) in &cj.waits {
-                assert_ne!(ir.owner_gid(i), ir.owner_gid(row));
+            let row = cj.write.row();
+            for &w in ir.waits_of(cj) {
+                assert_ne!(ir.owner_gid(w.row()), ir.owner_gid(row));
             }
             // a job whose panel row lives on its own stream waits on nothing
             if let Job::TileLL { m, k } = cj.job {
                 if ir.owner_gid(k) == ir.owner_gid(m) {
-                    assert!(cj.waits.is_empty(), "{cj:?}");
+                    assert!(ir.waits_of(cj).is_empty(), "{cj:?}");
                 }
             }
         }
@@ -598,7 +1030,7 @@ mod tests {
             for cj in &ir.jobs {
                 if cj.device == dev {
                     assert_eq!(cj.access_base, seq.len() as u64);
-                    seq.extend_from_slice(&cj.reads);
+                    seq.extend_from_slice(ir.reads_of(cj));
                 }
             }
             let nu = ir.next_use_table(dev);
@@ -621,6 +1053,34 @@ mod tests {
     }
 
     #[test]
+    fn next_use_cursor_hints_survive_arbitrary_clock_orders() {
+        // the cursor is only a hint: lookups with any clock sequence —
+        // monotone, reversed, random — must agree with a fresh table
+        let mut rng = crate::util::rng::Rng::new(0xC0FFEE);
+        let trace: Vec<(usize, usize)> = (0..200)
+            .map(|_| {
+                let t = rng.below(12) as usize;
+                (t, t / 3)
+            })
+            .collect();
+        let warm = NextUse::from_accesses(trace.iter().copied());
+        for _ in 0..2000 {
+            let t = rng.below(14) as usize;
+            let tile = (t, t / 3);
+            let now = rng.below(220);
+            let cold = NextUse::from_accesses(trace.iter().copied());
+            assert_eq!(warm.next_use(tile, now), cold.next_use(tile, now), "{tile:?}@{now}");
+        }
+        // long spans exercise the binary-search fallback both directions
+        let many: Vec<(usize, usize)> = (0..500).map(|_| (0, 0)).collect();
+        let nu = NextUse::from_accesses(many);
+        assert_eq!(nu.next_use((0, 0), 499), 499);
+        assert_eq!(nu.next_use((0, 0), 0), 0);
+        assert_eq!(nu.next_use((0, 0), 250), 250);
+        assert_eq!(nu.next_use((0, 0), 500), u64::MAX);
+    }
+
+    #[test]
     fn read_bytes_follow_the_precision_map() {
         use crate::precision::{Precision, PrecisionMap};
         let nt = 6;
@@ -636,17 +1096,18 @@ mod tests {
         let ir = CompiledSchedule::compile_with_precisions(&s, &c, &pm);
         let wordsq = 128u64 * 128;
         for cj in &ir.jobs {
-            assert_eq!(cj.reads.len(), cj.read_bytes.len());
-            for (r, &(i, j)) in cj.reads.iter().enumerate() {
+            for &t in ir.reads_of(cj) {
+                let (i, j) = t.coords();
                 let want = wordsq * pm.get(i, j).width();
-                assert_eq!(cj.read_bytes[r], want, "read ({i},{j}) of {:?}", cj.job);
+                assert_eq!(ir.bytes_of(t), want, "read ({i},{j}) of {:?}", cj.job);
             }
-            assert_eq!(cj.write_bytes, wordsq * pm.get(cj.write.0, cj.write.1).width());
+            let (wi, wj) = cj.write.coords();
+            assert_eq!(cj.write_bytes, wordsq * pm.get(wi, wj).width());
         }
         // the uniform-FP64 wrapper charges every access at full width
         let ir64 = CompiledSchedule::compile(&s, &c);
         for cj in &ir64.jobs {
-            assert!(cj.read_bytes.iter().all(|&b| b == wordsq * 8));
+            assert!(ir64.reads_of(cj).iter().all(|&t| ir64.bytes_of(t) == wordsq * 8));
             assert_eq!(cj.write_bytes, wordsq * 8);
         }
         // cheaper tiles -> earlier estimated finish for the same schedule
@@ -668,13 +1129,17 @@ mod tests {
         assert!(ir.routing && ir.peer_routed > 0);
         let mut cross = 0u64;
         for cj in &ir.jobs {
-            for (r, &(i, _)) in cj.reads.iter().enumerate() {
-                let owner = device_of_row(i, 2);
+            for &t in ir.reads_of(cj) {
+                let owner = device_of_row(t.row(), 2);
                 if owner == cj.device {
-                    assert_eq!(cj.read_src[r], ReadSrc::Host, "local reads never peer-route");
+                    assert_eq!(
+                        ir.read_src_of(t, cj.device),
+                        ReadSrc::Host,
+                        "local reads never peer-route"
+                    );
                 } else {
                     cross += 1;
-                    assert_eq!(cj.read_src[r], ReadSrc::Peer { src: owner });
+                    assert_eq!(ir.read_src_of(t, cj.device), ReadSrc::Peer { src: owner });
                 }
             }
         }
@@ -736,6 +1201,54 @@ mod tests {
                 assert!(cj.est_start >= prev_end - 1e-15);
                 assert!(cj.est_end > cj.est_start);
                 prev_end = cj.est_end;
+            }
+        }
+    }
+
+    #[test]
+    fn thread_count_never_changes_the_ir() {
+        let pm = PrecisionMap::uniform(9, Precision::F64);
+        for (ndev, spd) in [(1usize, 2usize), (2, 2), (3, 1)] {
+            for s in [Schedule::left_looking(9, ndev, spd), Schedule::right_looking(9, ndev, spd)]
+            {
+                let c = cfg(9 * 128, 128);
+                let base = CompiledSchedule::compile_with_precisions_threads(&s, &c, &pm, 1);
+                for threads in [2usize, 3, 8] {
+                    let other =
+                        CompiledSchedule::compile_with_precisions_threads(&s, &c, &pm, threads);
+                    assert_eq!(base.jobs, other.jobs, "ndev={ndev} threads={threads}");
+                    assert_eq!(base.read_tiles, other.read_tiles);
+                    assert_eq!(base.wait_tiles, other.wait_tiles);
+                    assert_eq!(base.peer_routed, other.peer_routed);
+                    assert_eq!(base.device_accesses, other.device_accesses);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn skeleton_agrees_with_full_compile() {
+        let mut rng = crate::util::rng::Rng::new(77);
+        for _ in 0..10 {
+            let nt = 1 + rng.below(14) as usize;
+            let ndev = 1 + rng.below(3) as usize;
+            let spd = 1 + rng.below(3) as usize;
+            for s in [
+                Schedule::left_looking(nt, ndev, spd),
+                Schedule::right_looking(nt, ndev, spd),
+            ] {
+                let ir = CompiledSchedule::compile(&s, &cfg(nt * 128, 128));
+                let sk = compile_skeleton(&s);
+                assert_eq!(sk.total_jobs(), ir.total_jobs());
+                assert_eq!(sk.total_reads, ir.total_reads);
+                assert_eq!(sk.device_accesses, ir.device_accesses);
+                for (ci, cj) in ir.jobs.iter().enumerate() {
+                    assert_eq!(sk.order[ci], (cj.gid as u32, cj.pos as u32));
+                    assert_eq!(sk.write[ci], cj.write);
+                    assert_eq!(sk.access_base[ci], cj.access_base);
+                }
+                // the structural record stays small: ≤ 24 bytes/job here
+                assert!(sk.heap_bytes() <= 24 * sk.total_jobs() as u64 + 64);
             }
         }
     }

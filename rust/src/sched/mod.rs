@@ -24,8 +24,13 @@
 mod compile;
 mod progress;
 
-pub use compile::{route_read, CompiledJob, CompiledSchedule, NextUse, ReadSrc};
+pub use compile::{
+    compile_skeleton, route_read, CompiledJob, CompiledSchedule, NextUse, ReadSrc,
+    ScheduleSkeleton,
+};
 pub use progress::{ProgressTable, ReadyTimes};
+
+pub use crate::tiles::TileId;
 
 /// One schedulable unit.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -59,27 +64,59 @@ impl Job {
     /// transfers over: every listed tile is a candidate prefetch for the
     /// device owning the job's target row.
     pub fn operands(&self) -> Vec<(usize, usize)> {
+        let mut v = Vec::with_capacity(self.operand_count());
+        self.for_each_operand(|i, j| v.push((i, j)));
+        v
+    }
+
+    /// Visit the operand tiles in consumption order without allocating —
+    /// the schedule compiler's per-job hot loop (a left-looking job has
+    /// Θ(k) operands, and materializing a `Vec` per job dominated the
+    /// old compile cost).
+    #[inline]
+    pub fn for_each_operand(&self, mut f: impl FnMut(usize, usize)) {
         match *self {
             Job::TileLL { m, k } => {
-                let mut v = Vec::with_capacity(2 * k + 1);
                 for n in 0..k {
-                    v.push((m, n));
+                    f(m, n);
                     if m != k {
-                        v.push((k, n));
+                        f(k, n);
                     }
                 }
                 if m != k {
-                    v.push((k, k));
+                    f(k, k);
                 }
-                v
             }
-            Job::FactorDiagRL { .. } => Vec::new(),
-            Job::FactorOffRL { k, .. } => vec![(k, k)],
+            Job::FactorDiagRL { .. } => {}
+            Job::FactorOffRL { k, .. } => f(k, k),
             Job::UpdateRL { i, j, k } => {
-                if i == j {
-                    vec![(i, k)]
+                f(i, k);
+                if i != j {
+                    f(j, k);
+                }
+            }
+        }
+    }
+
+    /// Number of operand reads, in O(1) — what lets the skeleton
+    /// compile stamp access bases without enumerating operands.
+    #[inline]
+    pub fn operand_count(&self) -> usize {
+        match *self {
+            Job::TileLL { m, k } => {
+                if m == k {
+                    k
                 } else {
-                    vec![(i, k), (j, k)]
+                    2 * k + 1
+                }
+            }
+            Job::FactorDiagRL { .. } => 0,
+            Job::FactorOffRL { .. } => 1,
+            Job::UpdateRL { i, j, .. } => {
+                if i == j {
+                    1
+                } else {
+                    2
                 }
             }
         }
@@ -298,6 +335,24 @@ mod tests {
         assert_eq!(Job::FactorOffRL { m: 3, k: 1 }.operands(), vec![(1, 1)]);
         assert_eq!(Job::UpdateRL { i: 4, j: 2, k: 1 }.operands(), vec![(4, 1), (2, 1)]);
         assert_eq!(Job::UpdateRL { i: 4, j: 4, k: 1 }.operands(), vec![(4, 1)]);
+    }
+
+    #[test]
+    fn operand_count_matches_operands_len() {
+        for m in 0..8 {
+            for k in 0..=m {
+                let j = Job::TileLL { m, k };
+                assert_eq!(j.operand_count(), j.operands().len(), "{j:?}");
+            }
+        }
+        for job in [
+            Job::FactorDiagRL { k: 3 },
+            Job::FactorOffRL { m: 5, k: 2 },
+            Job::UpdateRL { i: 4, j: 2, k: 1 },
+            Job::UpdateRL { i: 4, j: 4, k: 1 },
+        ] {
+            assert_eq!(job.operand_count(), job.operands().len(), "{job:?}");
+        }
     }
 
     #[test]

@@ -1,0 +1,194 @@
+//! Interned tile identifiers: the dense `u32` currency of the compiled
+//! schedule's hot paths.
+//!
+//! Every structure that used to key on `(row, col)` tuples — the cache
+//! tables, the residency directory, the transfer plan/engine and the
+//! compiled IR's operand arenas — now keys on [`TileId`], the packed
+//! lower-triangular index of the tile. The packing is *stateless*: for
+//! `j ≤ i`, `id = i·(i+1)/2 + j` (the same [`super::tri_idx`] the host
+//! tile store uses), which is a bijection from the lower triangle onto
+//! `0..nt(nt+1)/2` that needs no interner table and no `nt`.
+//!
+//! Two properties the rest of the runtime leans on:
+//!
+//! * **Order preservation.** `TileId` order equals lexicographic
+//!   `(row, col)` order over the lower triangle, so every deterministic
+//!   tie-break that used to compare tuples — the eviction scavenger's
+//!   `.min()`, the Belady victim's `(next_use, key)` max — picks the
+//!   *same* victim under `TileId` keys. This is what keeps the counted
+//!   goldens byte-identical across the interning refactor.
+//! * **Density.** Ids are contiguous, so per-tile state can live in flat
+//!   arrays indexed by [`TileId::index`] (the DES's `landed`/`prefetched`
+//!   tables, the next-use spans) instead of hash maps — and for the
+//!   sparse-DAG roadmap item the id space doubles as a presence map.
+
+/// Interned tile coordinate: the packed lower-triangular index of tile
+/// `(row, col)` with `col ≤ row`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub struct TileId(u32);
+
+impl TileId {
+    /// Intern `(i, j)`, `j ≤ i`. The packing is total over the lower
+    /// triangle and independent of the matrix size.
+    #[inline]
+    pub fn new(i: usize, j: usize) -> TileId {
+        debug_assert!(j <= i, "upper-triangle tile ({i},{j})");
+        let idx = i * (i + 1) / 2 + j;
+        debug_assert!(idx <= u32::MAX as usize, "tile ({i},{j}) overflows the u32 id space");
+        TileId(idx as u32)
+    }
+
+    /// The dense index — what flat per-tile tables are indexed by.
+    #[inline]
+    pub fn index(self) -> usize {
+        self.0 as usize
+    }
+
+    /// Re-wrap a dense index produced by [`TileId::index`].
+    #[inline]
+    pub fn from_index(idx: usize) -> TileId {
+        debug_assert!(idx <= u32::MAX as usize);
+        TileId(idx as u32)
+    }
+
+    /// Inverse packing: the `(row, col)` this id was interned from.
+    #[inline]
+    pub fn coords(self) -> (usize, usize) {
+        let k = self.0 as u64;
+        // row = ⌊(√(8k+1) − 1) / 2⌋; exact for every k in the u32 id
+        // space via the correction loop below
+        let i = isqrt64(8 * k + 1).saturating_sub(1) / 2;
+        let j = k - i * (i + 1) / 2;
+        (i as usize, j as usize)
+    }
+
+    #[inline]
+    pub fn row(self) -> usize {
+        self.coords().0
+    }
+
+    #[inline]
+    pub fn col(self) -> usize {
+        self.coords().1
+    }
+
+    /// Is this a diagonal tile?
+    #[inline]
+    pub fn is_diag(self) -> bool {
+        let (i, j) = self.coords();
+        i == j
+    }
+}
+
+impl From<(usize, usize)> for TileId {
+    #[inline]
+    fn from((i, j): (usize, usize)) -> TileId {
+        TileId::new(i, j)
+    }
+}
+
+/// `TileId` hashes through a single `write_usize`, pairing with the
+/// cache's fixed-key `TileHasher` (which rejects byte-stream hashing) —
+/// one multiply-mix per lookup instead of two.
+impl std::hash::Hash for TileId {
+    #[inline]
+    fn hash<H: std::hash::Hasher>(&self, state: &mut H) {
+        state.write_usize(self.0 as usize);
+    }
+}
+
+/// Integer square root (u64), exact. `u64::isqrt` needs a newer
+/// toolchain than the floor we target, so: float seed + correction walk.
+#[inline]
+fn isqrt64(n: u64) -> u64 {
+    if n == 0 {
+        return 0;
+    }
+    let mut x = (n as f64).sqrt() as u64;
+    while x.checked_mul(x).map_or(true, |xx| xx > n) {
+        x -= 1;
+    }
+    while (x + 1).checked_mul(x + 1).map_or(false, |xx| xx <= n) {
+        x += 1;
+    }
+    x
+}
+
+/// Number of tiles in the lower triangle of an `nt × nt` tile matrix —
+/// the length of a dense per-tile table.
+#[inline]
+pub fn tri_len(nt: usize) -> usize {
+    nt * (nt + 1) / 2
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_is_exact() {
+        for i in 0..200 {
+            for j in 0..=i {
+                let id = TileId::new(i, j);
+                assert_eq!(id.coords(), (i, j), "({i},{j})");
+                assert_eq!(id.index(), super::super::tri_idx(i, j));
+                assert_eq!(TileId::from_index(id.index()), id);
+            }
+        }
+    }
+
+    #[test]
+    fn roundtrip_survives_the_id_space_edges() {
+        // the isqrt seed must stay exact where 8k+1 approaches 2^35
+        for idx in [0usize, 1, 2, u32::MAX as usize - 1, u32::MAX as usize] {
+            let id = TileId::from_index(idx);
+            let (i, j) = id.coords();
+            assert!(j <= i);
+            assert_eq!(i * (i + 1) / 2 + j, idx, "idx {idx}");
+        }
+    }
+
+    #[test]
+    fn order_matches_lexicographic_tuples() {
+        // the golden-critical property: every tuple tie-break in the
+        // eviction paths picks the same victim under TileId keys
+        let mut tuples = Vec::new();
+        for i in 0..40 {
+            for j in 0..=i {
+                tuples.push((i, j));
+            }
+        }
+        let mut by_tuple = tuples.clone();
+        by_tuple.sort_unstable();
+        let mut by_id = tuples.clone();
+        by_id.sort_unstable_by_key(|&(i, j)| TileId::new(i, j));
+        assert_eq!(by_tuple, by_id);
+        // and ids are dense: 0..tri_len with no gaps
+        let ids: Vec<usize> = by_id.iter().map(|&(i, j)| TileId::new(i, j).index()).collect();
+        assert_eq!(ids, (0..tri_len(40)).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn isqrt_exhaustive_small_and_boundaries() {
+        for n in 0..10_000u64 {
+            let r = isqrt64(n);
+            assert!(r * r <= n && (r + 1) * (r + 1) > n, "n={n} r={r}");
+        }
+        for n in [u32::MAX as u64, 1 << 34, (1 << 35) - 1, u64::MAX] {
+            let r = isqrt64(n);
+            assert!(r.checked_mul(r).map_or(false, |rr| rr <= n));
+            assert!((r + 1).checked_mul(r + 1).map_or(true, |rr| rr > n), "n={n} r={r}");
+        }
+    }
+
+    #[test]
+    fn helpers() {
+        assert!(TileId::new(3, 3).is_diag());
+        assert!(!TileId::new(3, 1).is_diag());
+        assert_eq!(TileId::new(5, 2).row(), 5);
+        assert_eq!(TileId::new(5, 2).col(), 2);
+        let t: TileId = (4, 1).into();
+        assert_eq!(t, TileId::new(4, 1));
+        assert_eq!(tri_len(4), 10);
+    }
+}

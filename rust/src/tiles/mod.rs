@@ -10,8 +10,10 @@
 //! concurrently, matching pinned host memory accessed by several copy
 //! engines at once.
 
+pub mod interner;
 mod shape;
 
+pub use interner::{tri_len, TileId};
 pub use shape::{sampled_tile_norms, MatrixShape};
 
 use std::sync::Mutex;

@@ -16,6 +16,7 @@ use std::sync::{Condvar, Mutex};
 
 use crate::cache::TileKey;
 use crate::sched::ReadSrc;
+use crate::tiles::TileId;
 
 use super::plan::XferPlan;
 
@@ -208,15 +209,15 @@ impl XferEngine {
     }
 
     /// Record that the engine inserted `tile` into `dev`'s cache.
-    pub fn mark_prefetched(&self, dev: usize, tile: TileKey) {
-        self.prefetched[dev].lock().unwrap().insert(tile);
+    pub fn mark_prefetched(&self, dev: usize, tile: impl Into<TileId>) {
+        self.prefetched[dev].lock().unwrap().insert(tile.into());
     }
 
     /// First-touch check by the demand path: true exactly once per
     /// engine-inserted tile (also used to clear stale provenance when a
     /// prefetched tile was evicted and demand re-loads it).
-    pub fn take_prefetched(&self, dev: usize, tile: TileKey) -> bool {
-        self.prefetched[dev].lock().unwrap().remove(&tile)
+    pub fn take_prefetched(&self, dev: usize, tile: impl Into<TileId>) -> bool {
+        self.prefetched[dev].lock().unwrap().remove(&tile.into())
     }
 
     /// Stop the workers: raise the flag and wake every queue.
@@ -253,8 +254,8 @@ mod tests {
     #[test]
     fn queue_pops_least_slack_first() {
         let q = DevQueue::new();
-        let load = |tile, gid, consumer_pos, deadline_us, seq| QueuedLoad {
-            tile,
+        let load = |tile: (usize, usize), gid, consumer_pos, deadline_us, seq| QueuedLoad {
+            tile: tile.into(),
             gid,
             consumer_pos,
             deadline_us,
@@ -264,9 +265,9 @@ mod tests {
         q.push(load((3, 0), 0, 9, 900, 0));
         q.push(load((1, 0), 0, 2, 100, 1));
         q.push(load((2, 0), 1, 5, 100, 2));
-        assert_eq!(q.try_pop().unwrap().tile, (1, 0), "earliest deadline, then pos");
-        assert_eq!(q.try_pop().unwrap().tile, (2, 0));
-        assert_eq!(q.try_pop().unwrap().tile, (3, 0));
+        assert_eq!(q.try_pop().unwrap().tile, TileId::new(1, 0), "earliest deadline, then pos");
+        assert_eq!(q.try_pop().unwrap().tile, TileId::new(2, 0));
+        assert_eq!(q.try_pop().unwrap().tile, TileId::new(3, 0));
         assert!(q.try_pop().is_none());
     }
 

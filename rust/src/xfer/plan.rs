@@ -157,22 +157,22 @@ impl XferPlan {
                 let trigger = pos.saturating_sub(depth);
                 let mut planned = 0u64;
                 let mut nplanned = 0usize;
-                for (r, &tile) in cj.reads.iter().enumerate() {
+                for &tile in ir.reads_of(cj) {
                     // never plan the job's own target (the accumulator is
                     // uploaded by the compute stream, outside the cache)
                     if tile == cj.write {
                         continue;
                     }
-                    let bytes = cj.read_bytes[r];
+                    let bytes = ir.bytes_of(tile);
                     if in_window + planned + bytes > budget_bytes {
                         plan.dropped_over_budget += 1;
                         continue;
                     }
-                    let src = cj.read_src[r];
+                    let src = ir.read_src_of(tile, cj.device);
                     let dt = match src {
                         ReadSrc::Peer { src } => ir.links.d2d_time(bytes, src, cj.device),
                         ReadSrc::Host => {
-                            ir.links.h2d_time(bytes, device_of_row(tile.0, ir.ndev), cj.device)
+                            ir.links.h2d_time(bytes, device_of_row(tile.row(), ir.ndev), cj.device)
                         }
                     };
                     let deadline_us = ((cj.est_start - dt).max(0.0) * 1e6) as u64;
@@ -287,7 +287,7 @@ mod tests {
                 for l in plan.loads_at(gid, pos) {
                     let consumer = jobs[l.consumer_pos];
                     assert!(
-                        consumer.operands().contains(&l.tile),
+                        consumer.operands().contains(&l.tile.coords()),
                         "{:?} not an operand of {consumer:?}",
                         l.tile
                     );
@@ -357,7 +357,8 @@ mod tests {
         for gid in 0..s.total_streams() {
             for pos in 0..s.jobs[gid].len() {
                 for l in mxp.loads_at(gid, pos) {
-                    let want = (128 * 128) as u64 * pm.get(l.tile.0, l.tile.1).width();
+                    let (ti, tj) = l.tile.coords();
+                    let want = (128 * 128) as u64 * pm.get(ti, tj).width();
                     assert_eq!(l.bytes, want, "load {:?} charged wrong width", l.tile);
                 }
             }
@@ -383,12 +384,12 @@ mod tests {
                     match l.src {
                         ReadSrc::Peer { src } => {
                             peer += 1;
-                            assert_eq!(src, device_of_row(l.tile.0, 2), "peer is the owner");
+                            assert_eq!(src, device_of_row(l.tile.row(), 2), "peer is the owner");
                             assert_ne!(src, dev, "no self-peering");
                         }
                         ReadSrc::Host => {
                             host += 1;
-                            assert_eq!(device_of_row(l.tile.0, 2), dev, "host loads are local");
+                            assert_eq!(device_of_row(l.tile.row(), 2), dev, "host loads are local");
                         }
                     }
                 }

@@ -5,9 +5,12 @@
 use std::sync::Arc;
 
 use ooc_cholesky::cache::{CacheTable, Policy};
-use ooc_cholesky::config::{Mode, RunConfig, Version};
+use ooc_cholesky::config::{EvictionKind, Mode, RunConfig, Version};
 use ooc_cholesky::metrics::Metrics;
-use ooc_cholesky::sched::{CompiledSchedule, NextUse, Schedule};
+use ooc_cholesky::precision::{Precision, PrecisionMap};
+use ooc_cholesky::sched::{
+    device_of_row, route_read, CompiledSchedule, NextUse, Schedule, TileId,
+};
 use ooc_cholesky::util::rng::Rng;
 use ooc_cholesky::{exec, ooc};
 
@@ -149,19 +152,19 @@ fn compiled_wait_lists_are_sufficient() {
         let mut finalized = std::collections::HashSet::new();
         for &(gid, pos) in &order {
             let cj = ir.job_at(gid, pos);
-            for w in &cj.waits {
+            for &w in ir.waits_of(cj) {
                 assert!(
-                    finalized.contains(w),
+                    finalized.contains(&w),
                     "{version:?}: job {:?} started before cross-stream dep {w:?}",
                     cj.job
                 );
             }
             // same-stream reads must also be final — the static guarantee
             // wait_dep relies on (the producer precedes in program order)
-            for r in &cj.reads {
-                if ir.owner_gid(r.0) == gid {
+            for &r in ir.reads_of(cj) {
+                if ir.owner_gid(r.row()) == gid {
                     assert!(
-                        finalized.contains(r),
+                        finalized.contains(&r),
                         "{version:?}: static dep {r:?} of {:?} not final",
                         cj.job
                     );
@@ -201,4 +204,172 @@ fn v4_end_to_end_in_des_under_pressure() {
     let v4b = ooc::factorize(&mk(ooc_cholesky::config::EvictionKind::Belady), None).unwrap();
     assert_eq!(v4.metrics.cache_misses, v4b.metrics.cache_misses);
     assert_eq!(v4.elapsed_s, v4b.elapsed_s);
+}
+
+#[test]
+fn flat_ir_is_observation_identical_to_first_principles() {
+    // The arena/CSR IR must answer every question the executors ask with
+    // exactly the values derivable from the schedule alone: per-job read
+    // sets in consumption order, wait lists (the cross-stream subset, in
+    // order), byte widths from the precision map, routes from the link
+    // model, and next-use answers matching a naive linear scan of the
+    // rebuilt device access trace.
+    let mut rng = Rng::new(0xF1A7_0BE5);
+    for trial in 0..10 {
+        let nt = 2 + rng.below(9) as usize;
+        let ndev = [1usize, 2, 4][rng.below(3) as usize];
+        let spd = 1 + rng.below(3) as usize;
+        // off-diagonal FP8 exercises non-uniform widths
+        let mut pm = PrecisionMap::uniform(nt, Precision::F64);
+        for i in 0..nt {
+            for j in 0..i {
+                pm.set(i, j, Precision::F8);
+            }
+        }
+        for eviction in [EvictionKind::Lru, EvictionKind::Belady] {
+            for right in [false, true] {
+                let schedule = if right {
+                    Schedule::right_looking(nt, ndev, spd)
+                } else {
+                    Schedule::left_looking(nt, ndev, spd)
+                };
+                let cfg = RunConfig {
+                    n: nt * 128,
+                    ts: 128,
+                    version: Version::V2,
+                    mode: Mode::Model,
+                    ndev,
+                    streams_per_dev: spd,
+                    eviction,
+                    ..Default::default()
+                };
+                let ir = CompiledSchedule::compile_with_precisions(&schedule, &cfg, &pm);
+                ir.validate(&schedule).unwrap();
+                let ctx = format!("trial {trial} nt={nt} ndev={ndev} spd={spd} right={right}");
+                let wordsq = 128u64 * 128;
+                for gid in 0..schedule.total_streams() {
+                    for (pos, &job) in schedule.jobs[gid].iter().enumerate() {
+                        let cj = ir.job_at(gid, pos);
+                        assert_eq!(cj.job, job, "{ctx}");
+                        // reads: exactly the job's operands, same order
+                        let want: Vec<TileId> =
+                            job.operands().into_iter().map(TileId::from).collect();
+                        assert_eq!(ir.reads_of(cj), &want[..], "{ctx}");
+                        // waits: the cross-stream subset, preserving order
+                        let want_waits: Vec<TileId> = want
+                            .iter()
+                            .copied()
+                            .filter(|t| ir.owner_gid(t.row()) != gid)
+                            .collect();
+                        assert_eq!(ir.waits_of(cj), &want_waits[..], "{ctx}");
+                        assert_eq!(ir.waits(gid, pos), &want_waits[..], "{ctx}");
+                        // widths + routes recomputed from first principles
+                        let (wi, wj) = cj.write.coords();
+                        assert_eq!(cj.write_bytes, wordsq * pm.get(wi, wj).width(), "{ctx}");
+                        for &t in ir.reads_of(cj) {
+                            let (i, j) = t.coords();
+                            assert_eq!(ir.bytes_of(t), wordsq * pm.get(i, j).width(), "{ctx}");
+                            let owner = device_of_row(i, ndev);
+                            assert_eq!(
+                                ir.read_src_of(t, cj.device),
+                                route_read(
+                                    &ir.links,
+                                    ir.routing,
+                                    ir.bytes_of(t),
+                                    owner,
+                                    cj.device
+                                ),
+                                "{ctx}"
+                            );
+                        }
+                    }
+                }
+                // next-use answers vs a naive O(n) scan of the device trace
+                if eviction == EvictionKind::Belady {
+                    for dev in 0..ndev {
+                        let trace: Vec<TileId> = ir
+                            .jobs
+                            .iter()
+                            .filter(|cj| cj.device == dev)
+                            .flat_map(|cj| ir.reads_of(cj).iter().copied())
+                            .collect();
+                        let naive = |tile: TileId, now: u64| {
+                            trace
+                                .iter()
+                                .enumerate()
+                                .find(|&(idx, &t)| idx as u64 >= now && t == tile)
+                                .map(|(idx, _)| idx as u64)
+                                .unwrap_or(u64::MAX)
+                        };
+                        let nu = ir.next_use_table(dev);
+                        assert_eq!(nu.total, trace.len() as u64, "{ctx}");
+                        let probes = [0u64, 1, trace.len() as u64 / 2, trace.len() as u64];
+                        for &t in trace.iter().take(60) {
+                            for now in probes {
+                                assert_eq!(
+                                    nu.next_use(t, now),
+                                    naive(t, now),
+                                    "{ctx} dev={dev} tile={t:?} now={now}"
+                                );
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn parallel_compiler_is_deterministic_across_thread_counts() {
+    // The per-device fan-out must be invisible: every thread count yields
+    // the identical IR — job records, arena contents (observed through
+    // the CSR accessors), counters and next-use answers.
+    for (ndev, spd) in [(1usize, 2usize), (2, 2), (4, 1), (4, 3)] {
+        let nt = 12;
+        let pm = PrecisionMap::uniform(nt, Precision::F64);
+        for right in [false, true] {
+            let schedule = if right {
+                Schedule::right_looking(nt, ndev, spd)
+            } else {
+                Schedule::left_looking(nt, ndev, spd)
+            };
+            let cfg = RunConfig {
+                n: nt * 128,
+                ts: 128,
+                version: Version::V2,
+                mode: Mode::Model,
+                ndev,
+                streams_per_dev: spd,
+                eviction: EvictionKind::Belady,
+                ..Default::default()
+            };
+            let base = CompiledSchedule::compile_with_precisions_threads(&schedule, &cfg, &pm, 1);
+            for threads in [2usize, 5, 16] {
+                let other =
+                    CompiledSchedule::compile_with_precisions_threads(&schedule, &cfg, &pm, threads);
+                assert_eq!(base.jobs, other.jobs, "ndev={ndev} spd={spd} threads={threads}");
+                assert_eq!(base.peer_routed, other.peer_routed);
+                assert_eq!(base.device_accesses, other.device_accesses);
+                assert_eq!(base.total_reads, other.total_reads);
+                assert_eq!(base.static_deps, other.static_deps);
+                assert_eq!(base.cross_deps, other.cross_deps);
+                for (a, b) in base.jobs.iter().zip(other.jobs.iter()) {
+                    assert_eq!(base.reads_of(a), other.reads_of(b));
+                    assert_eq!(base.waits_of(a), other.waits_of(b));
+                }
+                for dev in 0..ndev {
+                    let (a, b) = (base.next_use_table(dev), other.next_use_table(dev));
+                    assert_eq!(a.total, b.total);
+                    for probe in 0..a.total.min(40) {
+                        for cj in base.jobs.iter().filter(|c| c.device == dev).take(8) {
+                            for &t in base.reads_of(cj) {
+                                assert_eq!(a.next_use(t, probe), b.next_use(t, probe));
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
 }

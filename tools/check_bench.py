@@ -1,0 +1,72 @@
+#!/usr/bin/env python3
+"""CI gate for the schedule-compiler bench (BENCH_schedule.json).
+
+Usage: check_bench.py <fresh.json> <baseline.json>
+
+Enforces the compile-scalability acceptance bounds on the freshly
+measured document, then structurally diffs it against the committed
+baseline. Timings are machine-dependent and are NEVER diffed — only the
+document shape (required keys and the set of swept nt points), so the
+committed baseline can carry null timings.
+"""
+
+import json
+import sys
+
+BUDGET_S = 1.0  # nt=4096 skeleton compile must finish within this
+BYTES_PER_JOB = 64.0  # amortized top-end IR footprint bound
+REQUIRED = ["bench", "config", "full_ir", "skeleton", "speedup_vs_legacy_nt512"]
+
+
+def fail(msg):
+    print(f"bench gate FAILED: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def nts(doc, section):
+    return sorted(int(p["nt"]) for p in doc[section])
+
+
+def main():
+    fresh_path, base_path = sys.argv[1], sys.argv[2]
+    with open(fresh_path) as f:
+        fresh = json.load(f)
+    with open(base_path) as f:
+        base = json.load(f)
+
+    for key in REQUIRED:
+        if key not in fresh:
+            fail(f"{fresh_path} missing key {key!r}")
+        if key not in base:
+            fail(f"{base_path} missing key {key!r}")
+
+    # 1) compile budget at the top end (min over samples: the honest
+    #    capability number, robust to CI scheduling noise)
+    top = {int(p["nt"]): p for p in fresh["skeleton"]}.get(4096)
+    if top is None:
+        fail("no nt=4096 skeleton point")
+    if top["min_s"] > BUDGET_S:
+        fail(f"nt=4096 compile took {top['min_s']:.3f}s > {BUDGET_S}s budget")
+
+    # 2) amortized IR footprint at the top end
+    if top["bytes_per_job"] > BYTES_PER_JOB:
+        fail(f"nt=4096 IR footprint {top['bytes_per_job']:.1f} B/job > {BYTES_PER_JOB}")
+
+    # 3) structural diff vs the committed baseline
+    for section in ("full_ir", "skeleton"):
+        if nts(fresh, section) != nts(base, section):
+            fail(
+                f"sweep drifted in {section}: fresh {nts(fresh, section)} "
+                f"vs baseline {nts(base, section)} — update the committed "
+                f"BENCH_schedule.json in the same commit"
+            )
+
+    speedup = fresh["speedup_vs_legacy_nt512"]
+    note = "" if speedup >= 5.0 else "  (below the 5x acceptance target!)"
+    print(f"bench gate ok: nt=4096 in {top['min_s']:.3f}s, "
+          f"{top['bytes_per_job']:.1f} B/job, "
+          f"speedup_vs_legacy_nt512 = {speedup:.2f}x{note}")
+
+
+if __name__ == "__main__":
+    main()
