@@ -60,7 +60,23 @@ impl RunReport {
         if let Some(r) = self.residual {
             fields.push(("residual", Json::num(r)));
         }
+        if let Some(tr) = &self.trace {
+            fields.push((
+                "stall_breakdown",
+                crate::trace::profile::StallBreakdown::compute(tr).to_json(),
+            ));
+        }
         Json::obj(fields)
+    }
+
+    /// Canonical integer-nanosecond stall breakdown for the golden
+    /// smoke-run gate (`--stalls-out`): per-lane busy/span/per-cause
+    /// seconds quantized to ns, sorted keys — byte-stable for a plain
+    /// `diff` like [`RunReport::golden_metrics_string`]. `None` when the
+    /// run recorded no trace.
+    pub fn golden_stalls_string(&self) -> Option<String> {
+        let tr = self.trace.as_ref()?;
+        Some(crate::trace::profile::StallBreakdown::compute(tr).golden_string())
     }
 
     /// Fraction of the run the dedicated transfer stream was busy (0 when

@@ -42,8 +42,8 @@ use crate::runtime::{DevBuf, Kernel, Runtime};
 use crate::sched::{
     device_of_row, route_read, CompiledSchedule, Job, ProgressTable, ReadSrc, Schedule,
 };
-use crate::tiles::TileMatrix;
-use crate::trace::{Event, EventKind, Trace};
+use crate::tiles::{TileId, TileMatrix};
+use crate::trace::{Event, EventKind, Label, StallCause, Trace};
 use crate::xfer::{XferEngine, XferPlan};
 
 /// Shared state across streams.
@@ -126,7 +126,13 @@ impl<'a> Shared<'a> {
     /// unless the producer runs on the same stream, in which case the
     /// compiled schedule guarantees it is already final (program order)
     /// and the `ProgressTable` probe is skipped entirely.
-    fn wait_dep(&self, target_row: usize, i: usize, j: usize) {
+    ///
+    /// A cross-stream wait that actually blocks is attributed: the
+    /// blocked interval becomes a [`StallCause::WaitDep`] span on this
+    /// stream's trace lane (naming the producer tile) and is added to
+    /// `dep_wait_ns`, so stall breakdowns can separate "waiting on a
+    /// producer" from "waiting on the copy engine".
+    fn wait_dep(&self, target_row: usize, i: usize, j: usize, dev: usize, stream: usize) {
         if self.ir.owner_gid(i) == self.ir.owner_gid(target_row) {
             debug_assert!(
                 self.progress.is_ready(i, j),
@@ -136,7 +142,22 @@ impl<'a> Shared<'a> {
             return;
         }
         self.metrics.deps_waited.fetch_add(1, Ordering::Relaxed);
+        if self.progress.is_ready(i, j) {
+            return; // satisfied: no stall to attribute
+        }
+        let t0 = self.now();
         self.progress.wait_ready(i, j);
+        let t1 = self.now();
+        self.metrics.dep_wait_ns.fetch_add(((t1 - t0) * 1e9) as u64, Ordering::Relaxed);
+        let cause = StallCause::WaitDep { producer: TileId::new(i, j) };
+        self.trace.record(Event {
+            device: dev as u16,
+            stream: stream as u16,
+            kind: EventKind::Stall(cause),
+            label: Label::Stall(cause),
+            t0,
+            t1,
+        });
     }
 
     /// H2D upload with accounting + tracing. `dev`/`stream` for the trace.
@@ -161,7 +182,7 @@ impl<'a> Shared<'a> {
             device: dev as u16,
             stream: stream as u16,
             kind: EventKind::H2D,
-            label: format!("h2d({i},{j})"),
+            label: Label::H2d(TileId::new(i, j)),
             t0,
             t1: self.now(),
         });
@@ -189,7 +210,7 @@ impl<'a> Shared<'a> {
             device: dev as u16,
             stream: stream as u16,
             kind: EventKind::D2H,
-            label: format!("d2h({i},{j})"),
+            label: Label::D2h(TileId::new(i, j)),
             t0,
             t1: self.now(),
         });
@@ -256,7 +277,7 @@ impl<'a> Shared<'a> {
             device: dev as u16,
             stream: stream as u16,
             kind: EventKind::D2D,
-            label: format!("d2d({i},{j})<-{src}"),
+            label: Label::D2d { tile: TileId::new(i, j), src: src as u16 },
             t0,
             t1: self.now(),
         });
@@ -350,7 +371,7 @@ impl<'a> Shared<'a> {
         kernel: &Kernel,
         args: &[&DevBuf],
         op: TaskOp,
-        label: String,
+        label: Label,
         dev: usize,
         stream: usize,
     ) -> Result<DevBuf> {
@@ -423,7 +444,7 @@ pub fn run(cfg: &RunConfig, rt: &Runtime, matrix: &TileMatrix) -> Result<super::
         dir: Mutex::new(ResidencyDirectory::new(cfg.ndev)),
         trsm_left: (0..nt).map(|k| AtomicU32::new((nt - k - 1) as u32)).collect(),
         metrics: Metrics::new(),
-        trace: Trace::new(cfg.trace),
+        trace: Trace::for_run(cfg.trace, cfg.ndev, cfg.streams_per_dev),
         xfer: XferEngine::new(plan, cfg.ndev, cfg.ndev * cfg.streams_per_dev),
         busy_ns: AtomicU64::new(0),
         t0: Instant::now(),
@@ -575,7 +596,21 @@ fn run_xfer_worker(sh: &Shared, dev: usize) {
     let ts = sh.cfg.ts;
     // trace lane one past the device's compute streams
     let pf_lane = sh.cfg.streams_per_dev as u16;
-    while let Some(load) = sh.xfer.queues[dev].pop_wait(&sh.xfer.shutdown) {
+    while let Some((load, waited)) = sh.xfer.queues[dev].pop_wait_timed(&sh.xfer.shutdown) {
+        // time spent blocked on an empty queue is the transfer stream's
+        // idle gap: attribute it so the pf lane's breakdown sums too
+        if waited > 0.0 && sh.trace.enabled {
+            let t1 = sh.now();
+            let cause = StallCause::QueueEmpty;
+            sh.trace.record(Event {
+                device: dev as u16,
+                stream: pf_lane,
+                kind: EventKind::Stall(cause),
+                label: Label::Stall(cause),
+                t0: (t1 - waited).max(0.0),
+                t1,
+            });
+        }
         let (i, j) = load.tile.coords();
         if sh.xfer.is_late(&load) {
             sh.metrics.prefetch_late.fetch_add(1, Ordering::Relaxed);
@@ -646,7 +681,7 @@ fn run_xfer_worker(sh: &Shared, dev: usize) {
                 device: dev as u16,
                 stream: pf_lane,
                 kind: EventKind::Prefetch,
-                label: format!("pf({i},{j})"),
+                label: Label::Pf(TileId::new(i, j)),
                 t0,
                 t1,
             });
@@ -671,8 +706,11 @@ fn run_tile_ll(
     let tile_bytes = (sh.cfg.ts * sh.cfg.ts * 8) as u64;
 
     if keeps {
-        // reserve device space for the accumulator (may steal cache)
+        // reserve device space for the accumulator (may steal cache).
+        // Spinning here means the device is full of pinned/in-flight
+        // tiles: attribute the blocked interval as a WaitEvict stall.
         let deadline = Instant::now() + std::time::Duration::from_secs(30);
+        let mut wait_from: Option<f64> = None;
         loop {
             let ok = {
                 let mut c = sh.caches[dev].lock().unwrap();
@@ -683,12 +721,25 @@ fn run_tile_ll(
             if ok {
                 break;
             }
+            wait_from.get_or_insert_with(|| sh.now());
             anyhow::ensure!(
                 Instant::now() < deadline,
                 "device {dev} OOM: cannot reserve accumulator ({} cap)",
                 sh.cfg.device_vmem()
             );
             std::thread::sleep(std::time::Duration::from_micros(100));
+        }
+        if let Some(t0) = wait_from {
+            let t1 = sh.now();
+            sh.metrics.evict_wait_ns.fetch_add(((t1 - t0) * 1e9) as u64, Ordering::Relaxed);
+            sh.trace.record(Event {
+                device: dev as u16,
+                stream: stream as u16,
+                kind: EventKind::Stall(StallCause::WaitEvict),
+                label: Label::Stall(StallCause::WaitEvict),
+                t0,
+                t1,
+            });
         }
     }
 
@@ -719,25 +770,27 @@ fn run_tile_ll_inner(
         let (acc, _) = sh.upload_tile(m, k, dev, stream)?;
         let mut acc = acc;
         for n in 0..k {
-            sh.wait_dep(m, m, n);
+            sh.wait_dep(m, m, n, dev, stream);
             let a = sh.load_tile(m, n, dev, stream, false)?;
             if diag {
+                let label = Label::Syrk { k: k as u32, n: n as u32 };
                 acc = sh.run_kernel(
                     &sh.kernels.syrk[slot],
                     &[&acc, &a],
                     TaskOp::Syrk,
-                    format!("syrk({k},{n})"),
+                    label,
                     dev,
                     stream,
                 )?;
             } else {
-                sh.wait_dep(m, k, n);
+                sh.wait_dep(m, k, n, dev, stream);
                 let b = sh.load_tile(k, n, dev, stream, false)?;
+                let label = Label::Gemm { m: m as u32, k: k as u32, n: n as u32 };
                 acc = sh.run_kernel(
                     &sh.kernels.gemm[slot],
                     &[&acc, &a, &b],
                     TaskOp::Gemm,
-                    format!("gemm({m},{k},{n})"),
+                    label,
                     dev,
                     stream,
                 )?;
@@ -748,19 +801,20 @@ fn run_tile_ll_inner(
                 &sh.kernels.potrf[slot],
                 &[&acc],
                 TaskOp::Potrf,
-                format!("potrf({k})"),
+                Label::Potrf { k: k as u32 },
                 dev,
                 stream,
             )?;
         } else {
-            sh.wait_dep(m, k, k);
+            sh.wait_dep(m, k, k, dev, stream);
             let pin = sh.cfg.version == Version::V3;
             let l = sh.load_tile(k, k, dev, stream, pin)?;
+            let label = Label::Trsm { m: m as u32, k: k as u32 };
             acc = sh.run_kernel(
                 &sh.kernels.trsm[slot],
                 &[&l, &acc],
                 TaskOp::Trsm,
-                format!("trsm({m},{k})"),
+                label,
                 dev,
                 stream,
             )?;
@@ -770,26 +824,21 @@ fn run_tile_ll_inner(
     } else {
         // sync/async: the accumulator round-trips the host every task
         for n in 0..k {
-            sh.wait_dep(m, m, n);
+            sh.wait_dep(m, m, n, dev, stream);
             let (c, _) = sh.upload_tile(m, k, dev, stream)?;
             let a = sh.load_tile(m, n, dev, stream, false)?;
             let out = if diag {
-                sh.run_kernel(
-                    &sh.kernels.syrk[slot],
-                    &[&c, &a],
-                    TaskOp::Syrk,
-                    format!("syrk({k},{n})"),
-                    dev,
-                    stream,
-                )?
+                let label = Label::Syrk { k: k as u32, n: n as u32 };
+                sh.run_kernel(&sh.kernels.syrk[slot], &[&c, &a], TaskOp::Syrk, label, dev, stream)?
             } else {
-                sh.wait_dep(m, k, n);
+                sh.wait_dep(m, k, n, dev, stream);
                 let b = sh.load_tile(k, n, dev, stream, false)?;
+                let label = Label::Gemm { m: m as u32, k: k as u32, n: n as u32 };
                 sh.run_kernel(
                     &sh.kernels.gemm[slot],
                     &[&c, &a, &b],
                     TaskOp::Gemm,
-                    format!("gemm({m},{k},{n})"),
+                    label,
                     dev,
                     stream,
                 )?
@@ -804,21 +853,15 @@ fn run_tile_ll_inner(
                 &sh.kernels.potrf[slot],
                 &[&c],
                 TaskOp::Potrf,
-                format!("potrf({k})"),
+                Label::Potrf { k: k as u32 },
                 dev,
                 stream,
             )?
         } else {
-            sh.wait_dep(m, k, k);
+            sh.wait_dep(m, k, k, dev, stream);
             let l = sh.load_tile(k, k, dev, stream, false)?;
-            sh.run_kernel(
-                &sh.kernels.trsm[slot],
-                &[&l, &c],
-                TaskOp::Trsm,
-                format!("trsm({m},{k})"),
-                dev,
-                stream,
-            )?
+            let label = Label::Trsm { m: m as u32, k: k as u32 };
+            sh.run_kernel(&sh.kernels.trsm[slot], &[&l, &c], TaskOp::Trsm, label, dev, stream)?
         };
         sh.download_tile(&out, m, k, dev, stream, scratch)?;
         sh.metrics.device_frees.fetch_add(2, Ordering::Relaxed);
@@ -840,7 +883,7 @@ fn run_factor_diag_rl(
         &sh.kernels.potrf[slot],
         &[&c],
         TaskOp::Potrf,
-        format!("potrf({k})"),
+        Label::Potrf { k: k as u32 },
         dev,
         stream,
     )?;
@@ -858,7 +901,7 @@ fn run_factor_off_rl(
     stream: usize,
     scratch: &mut Vec<f64>,
 ) -> Result<()> {
-    sh.wait_dep(m, k, k);
+    sh.wait_dep(m, k, k, dev, stream);
     let slot = prec_slot(sh.matrix.lock(m, k).prec);
     let l = sh.load_tile(k, k, dev, stream, false)?;
     let (b, _) = sh.upload_tile(m, k, dev, stream)?;
@@ -866,7 +909,7 @@ fn run_factor_off_rl(
         &sh.kernels.trsm[slot],
         &[&l, &b],
         TaskOp::Trsm,
-        format!("trsm({m},{k})"),
+        Label::Trsm { m: m as u32, k: k as u32 },
         dev,
         stream,
     )?;
@@ -886,30 +929,18 @@ fn run_update_rl(
     stream: usize,
     scratch: &mut Vec<f64>,
 ) -> Result<()> {
-    sh.wait_dep(i, i, k);
+    sh.wait_dep(i, i, k, dev, stream);
     let slot = prec_slot(sh.matrix.lock(i, j).prec);
     let a = sh.load_tile(i, k, dev, stream, false)?;
     let (c, _) = sh.upload_tile(i, j, dev, stream)?;
     let out = if i == j {
-        sh.run_kernel(
-            &sh.kernels.syrk[slot],
-            &[&c, &a],
-            TaskOp::Syrk,
-            format!("syrk({i},{k})"),
-            dev,
-            stream,
-        )?
+        let label = Label::Syrk { k: i as u32, n: k as u32 };
+        sh.run_kernel(&sh.kernels.syrk[slot], &[&c, &a], TaskOp::Syrk, label, dev, stream)?
     } else {
-        sh.wait_dep(i, j, k);
+        sh.wait_dep(i, j, k, dev, stream);
         let b = sh.load_tile(j, k, dev, stream, false)?;
-        sh.run_kernel(
-            &sh.kernels.gemm[slot],
-            &[&c, &a, &b],
-            TaskOp::Gemm,
-            format!("gemm({i},{j},{k})"),
-            dev,
-            stream,
-        )?
+        let label = Label::Upd { i: i as u32, j: j as u32, k: k as u32 };
+        sh.run_kernel(&sh.kernels.gemm[slot], &[&c, &a, &b], TaskOp::Gemm, label, dev, stream)?
     };
     sh.download_tile(&out, i, j, dev, stream, scratch)?;
     Ok(())

@@ -29,12 +29,16 @@ pub fn fig7_traces(n: usize, width: usize) -> Result<Json> {
             let trace = r.trace.as_ref().unwrap();
             println!("\n--- Fig 7: {} / {} (n={n}) ---", hw.name, v.name());
             print!("{}", trace.render_ascii(width));
+            // stall-cause axis: WHY each version's gaps exist, not just
+            // how wide they are (per-cause seconds across all lanes)
+            let stalls = crate::trace::profile::StallBreakdown::compute(trace);
             out.push(Json::obj(vec![
                 ("hw", Json::str(hw.name.clone())),
                 ("version", Json::str(v.name())),
                 ("n", Json::num(n as f64)),
                 ("elapsed_s", Json::num(r.elapsed_s)),
                 ("work_utilization", Json::num(r.work_utilization)),
+                ("stall_breakdown", stalls.to_json()),
                 ("ascii", Json::str(trace.render_ascii(width))),
             ]));
         }

@@ -140,6 +140,7 @@ pub fn fig13_mxp_traces(n: usize, ts: usize, width: usize) -> Result<Json> {
         println!("\n--- Fig 13: GH200 MxP trace, beta={beta} ({label}), acc=1e-5 ---");
         print!("{}", trace.render_ascii(width));
         println!("precision histogram [f8,f16,f32,f64] = {:?}", r.precision_histogram);
+        let stalls = crate::trace::profile::StallBreakdown::compute(trace);
         out.push(Json::obj(vec![
             ("beta", Json::num(beta)),
             ("correlation", Json::str(label)),
@@ -149,6 +150,7 @@ pub fn fig13_mxp_traces(n: usize, ts: usize, width: usize) -> Result<Json> {
                 "precision_histogram",
                 Json::arr(r.precision_histogram.iter().map(|&c| Json::num(c as f64))),
             ),
+            ("stall_breakdown", stalls.to_json()),
             ("ascii", Json::str(trace.render_ascii(width))),
         ]));
     }

@@ -9,6 +9,7 @@
 //!                        [--precisions f8,f16,f32,f64] [--accuracy 1e-6]
 //!                        [--beta 0.078809] [--prefetch-depth 4] [--trace]
 //!                        [--verify] [--config file.json]
+//! ooc-cholesky profile   [factorize flags]   # traced run + stall/critical-path report
 //! ooc-cholesky figure <6|7|8|9|10|11|12|13|scaling|all> [--quick]
 //! ooc-cholesky mle     [--n 1024] [--ts 128] [--beta ...]    # end-to-end MLE demo
 //! ooc-cholesky kl      [--n 1024] [--ts 128]                 # KL accuracy sweep
@@ -36,6 +37,7 @@ fn run() -> Result<()> {
     let cmd = args.pop_front().unwrap_or_else(|| "help".into());
     match cmd.as_str() {
         "factorize" => cmd_factorize(args),
+        "profile" => cmd_profile(args),
         "figure" => cmd_figure(args),
         "mle" => cmd_mle(args),
         "kl" => cmd_kl(args),
@@ -56,6 +58,10 @@ ooc-cholesky — mixed-precision out-of-core tile Cholesky (static scheduling)
 
 USAGE:
   ooc-cholesky factorize [flags]     run one factorization (real or model)
+  ooc-cholesky profile [flags]       traced factorization + stall breakdown,
+                                     critical path, and plan-vs-actual drift
+                                     (accepts every factorize flag; tracing
+                                     is forced on)
   ooc-cholesky figure <id> [--quick] regenerate a paper figure (6..13,
                                      scaling, or all)
   ooc-cholesky mle [flags]           end-to-end geospatial MLE demo
@@ -84,6 +90,10 @@ FACTORIZE FLAGS:
                      the compiled schedule; alias: belady)
   --metrics-out F    write the run's metrics counters as canonical JSON
                      (the golden smoke-run format CI diffs)
+  --trace-out F      write the chrome://tracing timeline to F (implies
+                     --trace; default results/trace_chrome.json)
+  --stalls-out F     write the per-lane stall breakdown as canonical
+                     integer-ns JSON (implies --trace; golden format)
   --prefetch-depth N transfer-engine lookahead: plan the operands of the
                      next N jobs per stream onto a dedicated transfer
                      stream (V2/V3; 0 = off). The factorize summary line
@@ -176,32 +186,131 @@ fn open_runtime_if(cfg: &RunConfig) -> Result<Option<Runtime>> {
     Ok(if cfg.mode == Mode::Real { Some(Runtime::open_default()?) } else { None })
 }
 
-fn cmd_factorize(mut args: VecDeque<String>) -> Result<()> {
-    // peel off --metrics-out before the config parser sees it
-    let mut metrics_out: Option<std::path::PathBuf> = None;
+/// Output paths peeled off the argument list before the config parser
+/// sees them (`--metrics-out` / `--trace-out` / `--stalls-out`).
+#[derive(Default)]
+struct OutPaths {
+    metrics: Option<std::path::PathBuf>,
+    trace: Option<std::path::PathBuf>,
+    stalls: Option<std::path::PathBuf>,
+}
+
+fn peel_out_paths(mut args: VecDeque<String>) -> Result<(OutPaths, VecDeque<String>)> {
+    let mut out = OutPaths::default();
     let mut rest = VecDeque::new();
     while let Some(a) = args.pop_front() {
-        if a == "--metrics-out" {
-            metrics_out = Some(args.pop_front().context("--metrics-out needs a path")?.into());
-        } else {
-            rest.push_back(a);
-        }
+        let slot = match a.as_str() {
+            "--metrics-out" => &mut out.metrics,
+            "--trace-out" => &mut out.trace,
+            "--stalls-out" => &mut out.stalls,
+            _ => {
+                rest.push_back(a);
+                continue;
+            }
+        };
+        *slot = Some(args.pop_front().with_context(|| format!("{a} needs a path"))?.into());
     }
-    let cfg = parse_cfg(rest)?;
-    let rt = open_runtime_if(&cfg)?;
-    let report = ooc::factorize(&cfg, rt.as_ref())?;
-    println!("{}", report.summary_line());
-    if let Some(path) = metrics_out {
-        std::fs::write(&path, report.golden_metrics_string())
+    Ok((out, rest))
+}
+
+/// Write the per-run observability artifacts (chrome trace + canonical
+/// stall breakdown) for a report that carries a trace.
+fn write_run_outputs(report: &ooc_cholesky::exec::RunReport, out: &OutPaths) -> Result<()> {
+    if let Some(path) = &out.metrics {
+        std::fs::write(path, report.golden_metrics_string())
             .with_context(|| format!("writing {path:?}"))?;
         println!("(metrics JSON at {path:?})");
     }
     if let Some(tr) = &report.trace {
-        print!("{}", tr.render_ascii(100));
-        let path = figures::write_result("trace_chrome", &tr.to_chrome_json())?;
-        println!("(chrome://tracing timeline at {path:?})");
+        match &out.trace {
+            Some(path) => {
+                std::fs::write(path, tr.to_chrome_json().pretty())
+                    .with_context(|| format!("writing {path:?}"))?;
+                println!("(chrome://tracing timeline at {path:?})");
+            }
+            None => {
+                let path = figures::write_result("trace_chrome", &tr.to_chrome_json())?;
+                println!("(chrome://tracing timeline at {path:?})");
+            }
+        }
     }
+    if let Some(path) = &out.stalls {
+        let s = report
+            .golden_stalls_string()
+            .context("--stalls-out needs a traced run (pass --trace)")?;
+        std::fs::write(path, s).with_context(|| format!("writing {path:?}"))?;
+        println!("(stall breakdown at {path:?})");
+    }
+    Ok(())
+}
+
+fn cmd_factorize(args: VecDeque<String>) -> Result<()> {
+    let (out, rest) = peel_out_paths(args)?;
+    let mut cfg = parse_cfg(rest)?;
+    // the trace/stall artifacts need causal spans; tracing never changes
+    // the virtual timeline (pinned by the golden trace-invariance test)
+    if out.trace.is_some() || out.stalls.is_some() {
+        cfg.trace = true;
+    }
+    let rt = open_runtime_if(&cfg)?;
+    let report = ooc::factorize(&cfg, rt.as_ref())?;
+    println!("{}", report.summary_line());
+    if let Some(tr) = &report.trace {
+        print!("{}", tr.render_ascii(100));
+    }
+    write_run_outputs(&report, &out)?;
     println!("{}", report.to_json().pretty());
+    Ok(())
+}
+
+/// `profile`: run a traced factorization and print the stall-attribution
+/// report — per-lane breakdown, critical path, plan-vs-actual drift.
+fn cmd_profile(args: VecDeque<String>) -> Result<()> {
+    use ooc_cholesky::sched::{CompiledSchedule, Schedule};
+    use ooc_cholesky::trace::profile;
+
+    let (out, rest) = peel_out_paths(args)?;
+    let mut cfg = parse_cfg(rest)?;
+    cfg.trace = true;
+    let rt = open_runtime_if(&cfg)?;
+    let report = ooc::factorize(&cfg, rt.as_ref())?;
+    println!("{}", report.summary_line());
+    let tr = report.trace.as_ref().context("profile run recorded no trace")?;
+
+    let breakdown = profile::StallBreakdown::compute(tr);
+    print!("\n{}", breakdown.render());
+    let mut j = vec![("stall_breakdown", breakdown.to_json())];
+
+    let cp = profile::critical_path(tr);
+    if let Some(cp) = &cp {
+        print!("\n{}", cp.render(12));
+        j.push(("critical_path", cp.to_json()));
+    }
+
+    // plan-vs-actual drift needs the compiled IR; rebuild it exactly the
+    // way the executor did (both pipelines are deterministic in cfg)
+    if cfg.version != Version::InCore {
+        let nt = cfg.nt();
+        let schedule = match cfg.version {
+            Version::RightLooking => Schedule::right_looking(nt, cfg.ndev, cfg.streams_per_dev),
+            _ => Schedule::left_looking(nt, cfg.ndev, cfg.streams_per_dev),
+        };
+        let pm = if cfg.mode == Mode::Model {
+            ooc::build_shape(&cfg).pm
+        } else {
+            let matrix = ooc::build_matrix(&cfg);
+            ooc::assign_precisions(&cfg, &matrix);
+            matrix.precision_map()
+        };
+        let ir = CompiledSchedule::compile_with_precisions(&schedule, &cfg, &pm);
+        let drift = profile::plan_drift(tr, &ir);
+        print!("\n{}", drift.render());
+        j.push(("plan_drift", drift.to_json()));
+    }
+
+    write_run_outputs(&report, &out)?;
+    let path = figures::write_result("profile", &ooc_cholesky::util::json::Json::obj(j))?;
+    println!("\nwrote {path:?}");
     Ok(())
 }
 

@@ -73,6 +73,13 @@ pub struct Metrics {
     pub deps_static: AtomicU64,
     /// dependencies that required a runtime progress-table wait
     pub deps_waited: AtomicU64,
+    /// wall time spent blocked in cross-stream dependency waits, ns
+    /// (real mode; the DES attributes the equivalent virtual time as
+    /// `WaitDep` stall spans in the trace)
+    pub dep_wait_ns: AtomicU64,
+    /// wall time spent spinning for device memory in the accumulator
+    /// reserve loop, ns (real mode eviction pressure)
+    pub evict_wait_ns: AtomicU64,
 }
 
 fn prec_slot(p: Precision) -> usize {
@@ -168,6 +175,8 @@ impl Metrics {
             xfer_busy_ns: self.xfer_busy_ns.load(Ordering::Relaxed),
             deps_static: self.deps_static.load(Ordering::Relaxed),
             deps_waited: self.deps_waited.load(Ordering::Relaxed),
+            dep_wait_ns: self.dep_wait_ns.load(Ordering::Relaxed),
+            evict_wait_ns: self.evict_wait_ns.load(Ordering::Relaxed),
         }
     }
 }
@@ -221,6 +230,8 @@ pub struct MetricsSnapshot {
     pub xfer_busy_ns: u64,
     pub deps_static: u64,
     pub deps_waited: u64,
+    pub dep_wait_ns: u64,
+    pub evict_wait_ns: u64,
 }
 
 impl MetricsSnapshot {
@@ -282,6 +293,8 @@ impl MetricsSnapshot {
             ("xfer_busy_s", Json::num(self.xfer_busy_ns as f64 / 1e9)),
             ("deps_static", Json::num(self.deps_static as f64)),
             ("deps_waited", Json::num(self.deps_waited as f64)),
+            ("dep_wait_s", Json::num(self.dep_wait_ns as f64 / 1e9)),
+            ("evict_wait_s", Json::num(self.evict_wait_ns as f64 / 1e9)),
         ])
     }
 }

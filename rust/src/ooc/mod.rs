@@ -117,7 +117,7 @@ fn run_incore_real(cfg: &RunConfig, rt: &Runtime, matrix: &TileMatrix) -> Result
         device: 0,
         stream: 0,
         kind: crate::trace::EventKind::H2D,
-        label: "h2d(full)".into(),
+        label: crate::trace::Label::Raw("h2d(full)"),
         t0: 0.0,
         t1: t_up,
     });
@@ -129,7 +129,7 @@ fn run_incore_real(cfg: &RunConfig, rt: &Runtime, matrix: &TileMatrix) -> Result
         device: 0,
         stream: 0,
         kind: crate::trace::EventKind::Work,
-        label: "potrf(full)".into(),
+        label: crate::trace::Label::Raw("potrf(full)"),
         t0: t_up,
         t1: t_f,
     });
@@ -142,7 +142,7 @@ fn run_incore_real(cfg: &RunConfig, rt: &Runtime, matrix: &TileMatrix) -> Result
         device: 0,
         stream: 0,
         kind: crate::trace::EventKind::D2H,
-        label: "d2h(full)".into(),
+        label: crate::trace::Label::Raw("d2h(full)"),
         t0: t_f,
         t1: t_d,
     });

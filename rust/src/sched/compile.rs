@@ -711,6 +711,29 @@ impl CompiledSchedule {
         self.jobs.len()
     }
 
+    /// Earliest planned start per write tile: `(tile, gid, pos,
+    /// est_start)` for the first job writing each tile, in ascending
+    /// [`TileId`] order. This is the join surface the profiler's
+    /// plan-vs-actual drift pass matches executed trace labels against
+    /// (`est_start` ignores cross-stream waits, so actual − planned is
+    /// exactly the schedule skew the estimate could not see).
+    pub fn planned_writes(&self) -> Vec<(TileId, usize, usize, f64)> {
+        let mut best: Vec<Option<(usize, usize, f64)>> = vec![None; tri_len(self.nt)];
+        for cj in &self.jobs {
+            let slot = &mut best[cj.write.index()];
+            match slot {
+                Some((_, _, t)) if *t <= cj.est_start => {}
+                _ => *slot = Some((cj.gid, cj.pos, cj.est_start)),
+            }
+        }
+        best.iter()
+            .enumerate()
+            .filter_map(|(i, s)| {
+                s.map(|(gid, pos, t)| (TileId::from_index(i), gid, pos, t))
+            })
+            .collect()
+    }
+
     /// Global stream id owning tile row `m` — same helpers as
     /// [`Schedule::global_stream`], so the static-dependency skip can
     /// never drift from the placement the schedule actually used.

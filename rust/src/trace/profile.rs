@@ -1,0 +1,652 @@
+//! Profiling passes over a recorded [`Trace`]: turn timelines into
+//! *explained* time.
+//!
+//! Three analyses, all pure functions of the event list:
+//!
+//! * [`StallBreakdown`] — per-lane busy seconds and per-cause stall
+//!   seconds. In the DES every lane's spans tile `[0, makespan]`, so the
+//!   invariant `busy + attributed stalls == span` holds exactly (to f64
+//!   rounding); in real mode the stall spans are best-effort wall-clock
+//!   measurements and the residual shows up as `unattributed`.
+//! * [`critical_path`] — walk cause edges backward from the last busy
+//!   event: within a lane, each event's predecessor is whatever ended
+//!   when it started; an *explained* stall (dep/xfer/compute) redirects
+//!   the walk to the event that resolved it (the producer's write-back,
+//!   the blocking transfer, the prior kernel). The resulting chain tiles
+//!   the makespan end-to-end in the DES — every second of the run lies
+//!   on an explained edge — which is exactly the path a scheduler change
+//!   must shorten to improve the makespan.
+//! * [`plan_drift`] — join executed start times against the compiled
+//!   IR's `est_start` per write tile: p50/p99 skew and the top laggards,
+//!   i.e. where reality diverged from the static plan.
+
+use crate::sched::CompiledSchedule;
+use crate::tiles::TileId;
+use crate::util::json::Json;
+
+use super::{Event, EventKind, Label, StallCause, Trace, STALL_CAUSE_TAGS};
+
+/// Busy/stall accounting for one (device, stream) lane.
+#[derive(Debug, Clone)]
+pub struct LaneStats {
+    pub device: u16,
+    pub stream: u16,
+    /// first event start / last event end on this lane
+    pub t0: f64,
+    pub t1: f64,
+    pub busy_s: f64,
+    /// seconds per cause, indexed by [`StallCause::slot`]
+    pub stall_s: [f64; 6],
+}
+
+impl LaneStats {
+    pub fn span_s(&self) -> f64 {
+        self.t1 - self.t0
+    }
+
+    pub fn stall_total_s(&self) -> f64 {
+        self.stall_s.iter().sum()
+    }
+
+    /// `span − busy − stalls`: 0 (to f64 rounding) in the DES, the
+    /// unmeasured remainder in real mode.
+    pub fn unattributed_s(&self) -> f64 {
+        self.span_s() - self.busy_s - self.stall_total_s()
+    }
+}
+
+/// Per-lane stall breakdown of a trace (tentpole analysis #1).
+#[derive(Debug, Clone)]
+pub struct StallBreakdown {
+    /// lanes in (device, stream) order
+    pub lanes: Vec<LaneStats>,
+}
+
+impl StallBreakdown {
+    pub fn compute(trace: &Trace) -> StallBreakdown {
+        let mut lanes: std::collections::BTreeMap<(u16, u16), LaneStats> = Default::default();
+        for e in trace.events() {
+            let l = lanes.entry((e.device, e.stream)).or_insert(LaneStats {
+                device: e.device,
+                stream: e.stream,
+                t0: f64::INFINITY,
+                t1: f64::NEG_INFINITY,
+                busy_s: 0.0,
+                stall_s: [0.0; 6],
+            });
+            l.t0 = l.t0.min(e.t0);
+            l.t1 = l.t1.max(e.t1);
+            match e.kind {
+                EventKind::Stall(c) => l.stall_s[c.slot()] += e.t1 - e.t0,
+                _ => l.busy_s += e.t1 - e.t0,
+            }
+        }
+        StallBreakdown { lanes: lanes.into_values().collect() }
+    }
+
+    pub fn total_busy_s(&self) -> f64 {
+        self.lanes.iter().map(|l| l.busy_s).sum()
+    }
+
+    pub fn total_stall_s(&self) -> [f64; 6] {
+        let mut t = [0.0; 6];
+        for l in &self.lanes {
+            for (acc, s) in t.iter_mut().zip(l.stall_s) {
+                *acc += s;
+            }
+        }
+        t
+    }
+
+    /// Largest per-lane accounting residual, relative to the lane span
+    /// (the exactness invariant the DES is tested against).
+    pub fn max_unattributed_rel(&self) -> f64 {
+        self.lanes
+            .iter()
+            .map(|l| (l.unattributed_s() / l.span_s().max(f64::MIN_POSITIVE)).abs())
+            .fold(0.0, f64::max)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let lane_json = |l: &LaneStats| {
+            let span = l.span_s().max(f64::MIN_POSITIVE);
+            let mut fields = vec![
+                ("device", Json::num(l.device as f64)),
+                ("stream", Json::num(l.stream as f64)),
+                ("span_s", Json::num(l.span_s())),
+                ("busy_s", Json::num(l.busy_s)),
+                ("busy_pct", Json::num(100.0 * l.busy_s / span)),
+                ("unattributed_s", Json::num(l.unattributed_s())),
+            ];
+            for (tag, s) in STALL_CAUSE_TAGS.iter().zip(l.stall_s) {
+                fields.push((*tag, Json::num(s)));
+            }
+            Json::obj(fields)
+        };
+        let totals = {
+            let stall = self.total_stall_s();
+            let mut fields = vec![("busy_s", Json::num(self.total_busy_s()))];
+            for (tag, s) in STALL_CAUSE_TAGS.iter().zip(stall) {
+                fields.push((*tag, Json::num(s)));
+            }
+            Json::obj(fields)
+        };
+        Json::obj(vec![
+            ("lanes", Json::arr(self.lanes.iter().map(lane_json))),
+            ("totals", totals),
+        ])
+    }
+
+    /// Canonical integer-nanosecond form for the golden diff: one flat
+    /// sorted-key object, values quantized with `floor(x·1e9 + 0.5)` so
+    /// the committed file is byte-stable across platforms.
+    pub fn golden_string(&self) -> String {
+        let ns = |x: f64| (x * 1e9 + 0.5).floor() as u64;
+        let mut fields: Vec<(String, u64)> = Vec::new();
+        for l in &self.lanes {
+            let key = |f: &str| format!("d{}_s{}_{f}", l.device, l.stream);
+            fields.push((key("busy_ns"), ns(l.busy_s)));
+            fields.push((key("span_ns"), ns(l.span_s())));
+            for (tag, s) in STALL_CAUSE_TAGS.iter().zip(l.stall_s) {
+                fields.push((key(&format!("{tag}_ns")), ns(s)));
+            }
+        }
+        fields.sort();
+        let mut out = String::from("{\n");
+        for (i, (k, v)) in fields.iter().enumerate() {
+            let comma = if i + 1 == fields.len() { "" } else { "," };
+            out.push_str(&format!("  \"{k}\": {v}{comma}\n"));
+        }
+        out.push_str("}\n");
+        out
+    }
+
+    /// Human-readable per-lane table for the `profile` CLI.
+    pub fn render(&self) -> String {
+        let mut out = String::from(
+            "lane        span_s    busy%    dep%   xfer%   comp%  evict%  malloc%   idle%\n",
+        );
+        for l in &self.lanes {
+            let span = l.span_s().max(f64::MIN_POSITIVE);
+            let pct = |s: f64| 100.0 * s / span;
+            out.push_str(&format!(
+                "d{}.s{:<3}  {:>8.4}  {:>6.1}  {:>6.1}  {:>6.1}  {:>6.1}  {:>6.1}  {:>7.1}  {:>6.1}\n",
+                l.device,
+                l.stream,
+                l.span_s(),
+                pct(l.busy_s),
+                pct(l.stall_s[0]),
+                pct(l.stall_s[1]),
+                pct(l.stall_s[2]),
+                pct(l.stall_s[3]),
+                pct(l.stall_s[4]),
+                pct(l.stall_s[5]),
+            ));
+        }
+        out
+    }
+}
+
+/// The executed critical path (tentpole analysis #2).
+#[derive(Debug, Clone)]
+pub struct CriticalPath {
+    /// chain of events in chronological order; consecutive steps abut
+    /// (each ends where the next starts, to f64 rounding, in the DES)
+    pub steps: Vec<Event>,
+    /// sum of step durations — equals the makespan in the DES
+    pub len_s: f64,
+    /// full trace span (max t1 − min t0)
+    pub makespan_s: f64,
+    /// busy seconds on the path
+    pub busy_s: f64,
+    /// unexplained stall seconds on the path, by cause slot
+    pub stall_s: [f64; 6],
+}
+
+impl CriticalPath {
+    pub fn to_json(&self) -> Json {
+        let step = |e: &Event| {
+            Json::obj(vec![
+                ("device", Json::num(e.device as f64)),
+                ("stream", Json::num(e.stream as f64)),
+                ("kind", Json::str(e.kind.cat())),
+                ("label", Json::str(e.label.render())),
+                ("t0", Json::num(e.t0)),
+                ("t1", Json::num(e.t1)),
+            ])
+        };
+        let mut fields = vec![
+            ("len_s", Json::num(self.len_s)),
+            ("makespan_s", Json::num(self.makespan_s)),
+            ("coverage", Json::num(self.len_s / self.makespan_s.max(f64::MIN_POSITIVE))),
+            ("busy_s", Json::num(self.busy_s)),
+            ("n_steps", Json::num(self.steps.len() as f64)),
+            ("steps", Json::arr(self.steps.iter().map(step))),
+        ];
+        for (tag, s) in STALL_CAUSE_TAGS.iter().zip(self.stall_s) {
+            fields.push((*tag, Json::num(s)));
+        }
+        Json::obj(fields)
+    }
+
+    /// Summary plus the last `tail` steps, for the `profile` CLI.
+    pub fn render(&self, tail: usize) -> String {
+        let mut out = format!(
+            "critical path: {:.6}s over {} steps (makespan {:.6}s, {:.1}% busy)\n",
+            self.len_s,
+            self.steps.len(),
+            self.makespan_s,
+            100.0 * self.busy_s / self.len_s.max(f64::MIN_POSITIVE),
+        );
+        let skip = self.steps.len().saturating_sub(tail);
+        if skip > 0 {
+            out.push_str(&format!("  ... {skip} earlier steps ...\n"));
+        }
+        for e in &self.steps[skip..] {
+            out.push_str(&format!(
+                "  [{:>10.6}, {:>10.6}] d{}.s{} {:<8} {}\n",
+                e.t0,
+                e.t1,
+                e.device,
+                e.stream,
+                e.kind.cat(),
+                e.label.render()
+            ));
+        }
+        out
+    }
+}
+
+/// Walk cause edges backward from the last busy event. Returns `None`
+/// on traces with no busy events.
+pub fn critical_path(trace: &Trace) -> Option<CriticalPath> {
+    let evs = trace.events();
+    let t_end = evs.iter().map(|e| e.t1).fold(f64::NEG_INFINITY, f64::max);
+    let t_start = evs.iter().map(|e| e.t0).fold(f64::INFINITY, f64::min);
+    let makespan = t_end - t_start;
+    let tol = makespan.abs() * 1e-9 + 1e-15;
+
+    // per-lane event indices (evs is sorted by t0, so these are too)
+    let mut lanes: std::collections::HashMap<(u16, u16), Vec<usize>> = Default::default();
+    for (i, e) in evs.iter().enumerate() {
+        lanes.entry((e.device, e.stream)).or_default().push(i);
+    }
+    // latest event on `lane` ending at (or just before) `t`
+    let lane_pred = |lane: (u16, u16), t: f64, skip: usize| -> Option<usize> {
+        lanes
+            .get(&lane)?
+            .iter()
+            .copied()
+            .filter(|&i| i != skip && evs[i].t1 <= t + tol)
+            .max_by(|&a, &b| evs[a].t1.partial_cmp(&evs[b].t1).unwrap())
+    };
+    // the device-wide event that resolved an explained stall: the latest
+    // event of one of `kinds` on `device` ending at the stall's end
+    let resolver = |device: u16, t1: f64, pred: &dyn Fn(&Event) -> bool| -> Option<usize> {
+        evs.iter()
+            .enumerate()
+            .filter(|(_, e)| e.device == device && pred(e) && (e.t1 - t1).abs() <= tol)
+            .map(|(i, _)| i)
+            .next_back()
+    };
+
+    // start from the busy event finishing last
+    let mut cur = evs
+        .iter()
+        .enumerate()
+        .filter(|(_, e)| !e.kind.is_stall())
+        .max_by(|(_, a), (_, b)| a.t1.partial_cmp(&b.t1).unwrap())
+        .map(|(i, _)| i)?;
+    let mut steps = vec![cur];
+    for _ in 0..evs.len() {
+        let e = &evs[cur];
+        if e.t0 <= t_start + tol {
+            break;
+        }
+        // what ended on this lane when `cur` started?
+        let Some(p) = lane_pred((e.device, e.stream), e.t0, cur) else { break };
+        let pe = &evs[p];
+        let next = match pe.kind {
+            // explained stalls redirect to the event that resolved them;
+            // the stall itself runs concurrently with its resolver and
+            // stays off the path (keeps the chain gap-free)
+            EventKind::Stall(StallCause::WaitDep { producer }) => {
+                // the producer's write-back may live on any device
+                evs.iter()
+                    .enumerate()
+                    .filter(|(_, r)| {
+                        r.kind == EventKind::D2H
+                            && r.label == Label::D2h(producer)
+                            && (r.t1 - pe.t1).abs() <= tol
+                    })
+                    .map(|(i, _)| i)
+                    .next_back()
+            }
+            EventKind::Stall(StallCause::WaitXfer { .. }) => {
+                // which engine was busy: the d2h engine if the blocked
+                // op was a write-back, else the h2d/d2d engine
+                let blocked_kind = e.kind;
+                resolver(pe.device, pe.t1, &|r| match blocked_kind {
+                    EventKind::D2H => r.kind == EventKind::D2H,
+                    _ => matches!(r.kind, EventKind::H2D | EventKind::D2D),
+                })
+            }
+            EventKind::Stall(StallCause::WaitCompute) => {
+                resolver(pe.device, pe.t1, &|r| r.kind == EventKind::Work)
+            }
+            // unexplained waits (evict pressure, malloc, empty queue)
+            // are on the path themselves
+            _ => Some(p),
+        };
+        cur = next.unwrap_or(p);
+        steps.push(cur);
+    }
+    steps.reverse();
+
+    let mut busy = 0.0;
+    let mut stall = [0.0; 6];
+    for &i in &steps {
+        let e = &evs[i];
+        match e.kind {
+            EventKind::Stall(c) => stall[c.slot()] += e.t1 - e.t0,
+            _ => busy += e.t1 - e.t0,
+        }
+    }
+    let len: f64 = steps.iter().map(|&i| evs[i].t1 - evs[i].t0).sum();
+    Some(CriticalPath {
+        steps: steps.iter().map(|&i| evs[i]).collect(),
+        len_s: len,
+        makespan_s: makespan,
+        busy_s: busy,
+        stall_s: stall,
+    })
+}
+
+/// One job's plan-vs-actual start skew.
+#[derive(Debug, Clone, Copy)]
+pub struct JobDrift {
+    pub tile: TileId,
+    pub gid: usize,
+    pub pos: usize,
+    pub planned_s: f64,
+    pub actual_s: f64,
+}
+
+impl JobDrift {
+    pub fn skew_s(&self) -> f64 {
+        self.actual_s - self.planned_s
+    }
+}
+
+/// Plan-vs-actual drift report (tentpole analysis #3).
+#[derive(Debug, Clone)]
+pub struct DriftReport {
+    /// per-job skews, sorted worst (largest skew) first
+    pub jobs: Vec<JobDrift>,
+    pub p50_s: f64,
+    pub p99_s: f64,
+}
+
+impl DriftReport {
+    pub fn max_s(&self) -> f64 {
+        self.jobs.first().map_or(0.0, |j| j.skew_s())
+    }
+
+    pub fn to_json(&self) -> Json {
+        let lag = |j: &JobDrift| {
+            Json::obj(vec![
+                ("tile", Json::str(format!("({},{})", j.tile.row(), j.tile.col()))),
+                ("gid", Json::num(j.gid as f64)),
+                ("pos", Json::num(j.pos as f64)),
+                ("planned_s", Json::num(j.planned_s)),
+                ("actual_s", Json::num(j.actual_s)),
+                ("skew_s", Json::num(j.skew_s())),
+            ])
+        };
+        Json::obj(vec![
+            ("n_jobs", Json::num(self.jobs.len() as f64)),
+            ("p50_s", Json::num(self.p50_s)),
+            ("p99_s", Json::num(self.p99_s)),
+            ("max_s", Json::num(self.max_s())),
+            ("laggards", Json::arr(self.jobs.iter().take(10).map(lag))),
+        ])
+    }
+
+    pub fn render(&self) -> String {
+        let mut out = format!(
+            "plan-vs-actual drift over {} jobs: p50 {:+.6}s, p99 {:+.6}s, max {:+.6}s\n",
+            self.jobs.len(),
+            self.p50_s,
+            self.p99_s,
+            self.max_s(),
+        );
+        for j in self.jobs.iter().take(10) {
+            out.push_str(&format!(
+                "  tile({},{}) gid {} pos {:<3} planned {:>9.6}s actual {:>9.6}s skew {:+.6}s\n",
+                j.tile.row(),
+                j.tile.col(),
+                j.gid,
+                j.pos,
+                j.planned_s,
+                j.actual_s,
+                j.skew_s()
+            ));
+        }
+        out
+    }
+}
+
+/// Join executed start times against the compiled plan's `est_start`.
+///
+/// A job's *actual* start is the first trace event carrying its write
+/// tile (the accumulator H2D upload or the first kernel); the *planned*
+/// start is [`CompiledSchedule::planned_writes`]. Tiles never observed
+/// in the trace (disabled lanes) are skipped.
+pub fn plan_drift(trace: &Trace, ir: &CompiledSchedule) -> DriftReport {
+    let mut actual: std::collections::HashMap<TileId, f64> = Default::default();
+    for e in trace.events() {
+        if !matches!(e.kind, EventKind::H2D | EventKind::Work) {
+            continue;
+        }
+        if let Some(t) = e.label.target_tile() {
+            let slot = actual.entry(t).or_insert(f64::INFINITY);
+            *slot = slot.min(e.t0);
+        }
+    }
+    let mut jobs: Vec<JobDrift> = ir
+        .planned_writes()
+        .into_iter()
+        .filter_map(|(tile, gid, pos, planned_s)| {
+            actual
+                .get(&tile)
+                .map(|&actual_s| JobDrift { tile, gid, pos, planned_s, actual_s })
+        })
+        .collect();
+    jobs.sort_by(|a, b| b.skew_s().partial_cmp(&a.skew_s()).unwrap());
+    let pct = |p: f64| -> f64 {
+        if jobs.is_empty() {
+            return 0.0;
+        }
+        // nearest-rank over skews sorted ascending (jobs are descending)
+        let rank = ((jobs.len() as f64 * p).ceil() as usize).clamp(1, jobs.len());
+        jobs[jobs.len() - rank].skew_s()
+    };
+    let (p50_s, p99_s) = (pct(0.50), pct(0.99));
+    DriftReport { jobs, p50_s, p99_s }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::EventKind as K;
+
+    fn ev(device: u16, stream: u16, kind: K, t0: f64, t1: f64) -> Event {
+        Event { device, stream, kind, label: Label::Raw("x"), t0, t1 }
+    }
+
+    /// Hand-built gapless two-lane trace: lane 1 works [0,1], stalls on
+    /// a dep [1,2], works [2,3]; lane 0 h2d [0,0.5], works [0.5,1.8],
+    /// d2h (1,0) [1.8,2.0], idle [2.0,3.0].
+    fn causal_trace() -> Trace {
+        let t = Trace::for_run(true, 1, 2);
+        let p = TileId::new(1, 0);
+        t.record(Event {
+            device: 0,
+            stream: 0,
+            kind: K::H2D,
+            label: Label::H2d(p),
+            t0: 0.0,
+            t1: 0.5,
+        });
+        t.record(Event {
+            device: 0,
+            stream: 0,
+            kind: K::Work,
+            label: Label::Trsm { m: 1, k: 0 },
+            t0: 0.5,
+            t1: 1.8,
+        });
+        t.record(Event {
+            device: 0,
+            stream: 0,
+            kind: K::D2H,
+            label: Label::D2h(p),
+            t0: 1.8,
+            t1: 2.0,
+        });
+        t.record(Event {
+            device: 0,
+            stream: 0,
+            kind: K::Stall(StallCause::QueueEmpty),
+            label: Label::Stall(StallCause::QueueEmpty),
+            t0: 2.0,
+            t1: 3.0,
+        });
+        t.record(Event {
+            device: 0,
+            stream: 1,
+            kind: K::Work,
+            label: Label::Potrf { k: 0 },
+            t0: 0.0,
+            t1: 1.0,
+        });
+        t.record(Event {
+            device: 0,
+            stream: 1,
+            kind: K::Stall(StallCause::WaitDep { producer: p }),
+            label: Label::Stall(StallCause::WaitDep { producer: p }),
+            t0: 1.0,
+            t1: 2.0,
+        });
+        t.record(Event {
+            device: 0,
+            stream: 1,
+            kind: K::Work,
+            label: Label::Gemm { m: 2, k: 0, n: 1 },
+            t0: 2.0,
+            t1: 3.0,
+        });
+        t
+    }
+
+    #[test]
+    fn breakdown_accounts_every_second() {
+        let b = StallBreakdown::compute(&causal_trace());
+        assert_eq!(b.lanes.len(), 2);
+        for l in &b.lanes {
+            assert!((l.span_s() - 3.0).abs() < 1e-12);
+            assert!(l.unattributed_s().abs() < 1e-12, "lane d{}.s{}", l.device, l.stream);
+        }
+        assert!(b.max_unattributed_rel() < 1e-12);
+        // lane 1: 2s busy + 1s dep stall
+        let l1 = &b.lanes[1];
+        assert!((l1.busy_s - 2.0).abs() < 1e-12);
+        let dep_slot = StallCause::WaitDep { producer: TileId::new(1, 0) }.slot();
+        assert!((l1.stall_s[dep_slot] - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn breakdown_json_and_golden_shape() {
+        let b = StallBreakdown::compute(&causal_trace());
+        let j = b.to_json();
+        assert_eq!(j.get("lanes").as_arr().unwrap().len(), 2);
+        assert!(j.get("totals").get("dep").as_f64().unwrap() > 0.9);
+        let g = b.golden_string();
+        assert!(g.contains("\"d0_s1_dep_ns\": 1000000000"));
+        assert!(g.contains("\"d0_s0_busy_ns\": 2000000000"));
+        assert!(g.ends_with("}\n"));
+    }
+
+    #[test]
+    fn critical_path_covers_the_makespan_and_crosses_lanes() {
+        let t = causal_trace();
+        let cp = critical_path(&t).unwrap();
+        assert!((cp.makespan_s - 3.0).abs() < 1e-12);
+        // gemm [2,3] <- dep stall resolved by d2h [1.8,2] <- trsm
+        // [0.5,1.8] <- h2d [0,0.5]: gap-free and exactly the makespan
+        assert!((cp.len_s - cp.makespan_s).abs() < 1e-12, "len {} vs {}", cp.len_s, cp.makespan_s);
+        assert_eq!(cp.steps.len(), 4);
+        assert_eq!(cp.steps[0].kind, K::H2D);
+        assert_eq!(cp.steps[2].kind, K::D2H, "dep edge must cross to the producer lane");
+        assert_eq!(cp.steps[3].label, Label::Gemm { m: 2, k: 0, n: 1 });
+        // the explained stall stays off the path
+        assert!(cp.steps.iter().all(|s| !s.kind.is_stall()));
+        // and the path is longer than any single lane's busy time
+        let b = StallBreakdown::compute(&t);
+        let max_busy = b.lanes.iter().map(|l| l.busy_s).fold(0.0, f64::max);
+        assert!(cp.len_s > max_busy);
+    }
+
+    #[test]
+    fn critical_path_keeps_unexplained_stalls() {
+        let t = Trace::new(true);
+        t.record(ev(0, 0, K::Work, 0.0, 1.0));
+        t.record(ev(0, 0, K::Stall(StallCause::WaitEvict), 1.0, 2.0));
+        t.record(ev(0, 0, K::Work, 2.0, 3.0));
+        let cp = critical_path(&t).unwrap();
+        assert_eq!(cp.steps.len(), 3);
+        assert!((cp.stall_s[StallCause::WaitEvict.slot()] - 1.0).abs() < 1e-12);
+        assert!((cp.len_s - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn critical_path_empty_trace_is_none() {
+        assert!(critical_path(&Trace::new(true)).is_none());
+    }
+
+    #[test]
+    fn drift_joins_plan_against_trace() {
+        use crate::config::{Mode, RunConfig, Version};
+        use crate::sched::Schedule;
+        let cfg = RunConfig {
+            n: 512,
+            ts: 128,
+            version: Version::V3,
+            mode: Mode::Model,
+            streams_per_dev: 2,
+            ..Default::default()
+        };
+        let s = Schedule::left_looking(cfg.nt(), 1, 2);
+        let ir = CompiledSchedule::compile(&s, &cfg);
+        // synthetic trace: every write tile starts 1ms after its plan
+        let t = Trace::new(true);
+        for (tile, _, _, est) in ir.planned_writes() {
+            t.record(Event {
+                device: 0,
+                stream: 0,
+                kind: K::H2D,
+                label: Label::H2d(tile),
+                t0: est + 1e-3,
+                t1: est + 2e-3,
+            });
+        }
+        let d = plan_drift(&t, &ir);
+        assert_eq!(d.jobs.len(), ir.total_jobs());
+        assert!((d.p50_s - 1e-3).abs() < 1e-12);
+        assert!((d.p99_s - 1e-3).abs() < 1e-12);
+        assert!((d.max_s() - 1e-3).abs() < 1e-12);
+        let j = d.to_json();
+        assert_eq!(j.get("n_jobs").as_f64(), Some(ir.total_jobs() as f64));
+        assert!(!d.render().is_empty());
+    }
+}

@@ -88,14 +88,26 @@ impl DevQueue {
     /// takes the lock before notifying, so both state changes are
     /// ordered against the check-then-wait below.
     pub fn pop_wait(&self, shutdown: &AtomicBool) -> Option<QueuedLoad> {
+        self.pop_wait_timed(shutdown).map(|(load, _)| load)
+    }
+
+    /// [`DevQueue::pop_wait`] plus the seconds the caller spent blocked
+    /// on an empty queue (0.0 when a load was immediately available) —
+    /// the worker's queue-empty stall measurement. The clock only starts
+    /// once the first wait is unavoidable, so the hot (non-empty) path
+    /// pays no timestamp.
+    pub fn pop_wait_timed(&self, shutdown: &AtomicBool) -> Option<(QueuedLoad, f64)> {
         let mut heap = self.heap.lock().unwrap();
+        let mut waited_from: Option<std::time::Instant> = None;
         loop {
             if shutdown.load(Ordering::Acquire) {
                 return None;
             }
             if let Some(load) = heap.pop() {
-                return Some(load);
+                let waited = waited_from.map_or(0.0, |t| t.elapsed().as_secs_f64());
+                return Some((load, waited));
             }
+            waited_from.get_or_insert_with(std::time::Instant::now);
             heap = self.cv.wait(heap).unwrap();
         }
     }
@@ -276,6 +288,47 @@ mod tests {
         let q = DevQueue::new();
         let stop = AtomicBool::new(true);
         assert!(q.pop_wait(&stop).is_none());
+    }
+
+    #[test]
+    fn pop_wait_timed_reports_zero_wait_when_nonempty() {
+        // hot path: a load already queued pops with waited == 0.0 exactly
+        // (the clock must not even start)
+        let q = DevQueue::new();
+        q.push(QueuedLoad {
+            tile: (1, 0).into(),
+            gid: 0,
+            consumer_pos: 1,
+            deadline_us: 100,
+            src: ReadSrc::Host,
+            seq: 0,
+        });
+        let stop = AtomicBool::new(false);
+        let (load, waited) = q.pop_wait_timed(&stop).expect("queued load");
+        assert_eq!(load.tile, TileId::new(1, 0));
+        assert_eq!(waited, 0.0, "non-empty pop must not measure a wait");
+    }
+
+    #[test]
+    fn pop_wait_timed_measures_a_blocked_wait() {
+        // a worker blocked on an empty queue reports the seconds it
+        // actually waited once a load (or shutdown) arrives
+        let q = std::sync::Arc::new(DevQueue::new());
+        let stop = std::sync::Arc::new(AtomicBool::new(false));
+        let (q2, stop2) = (q.clone(), stop.clone());
+        let worker = std::thread::spawn(move || q2.pop_wait_timed(&stop2));
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        q.push(QueuedLoad {
+            tile: (2, 1).into(),
+            gid: 0,
+            consumer_pos: 3,
+            deadline_us: 50,
+            src: ReadSrc::Host,
+            seq: 1,
+        });
+        let (load, waited) = worker.join().unwrap().expect("load after wait");
+        assert_eq!(load.tile, TileId::new(2, 1));
+        assert!(waited > 0.0, "blocked pop must report a positive wait");
     }
 
     #[test]

@@ -17,6 +17,7 @@
 
 use ooc_cholesky::config::{Mode, RunConfig, Version};
 use ooc_cholesky::ooc;
+use ooc_cholesky::trace::profile::{critical_path, plan_drift, StallBreakdown};
 
 /// The CI smoke-run config: `factorize --n 1024 --ts 128 --version v3
 /// --mode model --seed 42` (everything else default).
@@ -83,4 +84,96 @@ fn golden_run_is_deterministic_and_trace_invariant() {
     let b = ooc::factorize(&cfg, None).unwrap();
     assert_eq!(a.golden_metrics_string(), b.golden_metrics_string());
     assert_eq!(a.elapsed_s, b.elapsed_s, "virtual time must be deterministic too");
+}
+
+/// Run a traced model smoke and return (report, breakdown).
+fn traced_run(cfg: &RunConfig) -> (ooc_cholesky::exec::RunReport, StallBreakdown) {
+    let mut cfg = cfg.clone();
+    cfg.trace = true;
+    let report = ooc::factorize(&cfg, None).unwrap();
+    let bd = StallBreakdown::compute(report.trace.as_ref().unwrap());
+    (report, bd)
+}
+
+#[test]
+fn stall_accounting_is_exact_on_smoke_runs() {
+    // the DES emits a stall span for every engine gap, so each lane must
+    // tile [0, makespan] exactly: busy + attributed stalls == span, with
+    // nothing left unattributed beyond f64 summation noise
+    for cfg in [smoke_cfg(), smoke_cfg_ndev2()] {
+        let (report, bd) = traced_run(&cfg);
+        assert!(
+            bd.max_unattributed_rel() < 1e-9,
+            "ndev={}: unattributed stall time {:.3e} (rel) — a DES wait path \
+             is missing its note_stall",
+            cfg.ndev,
+            bd.max_unattributed_rel()
+        );
+        let stall_total: f64 = bd.total_stall_s().iter().sum();
+        assert!(stall_total > 0.0, "ndev={}: smoke run shows no stalls at all", cfg.ndev);
+        // every lane's span ends at the makespan (trailing idle emitted)
+        for lane in &bd.lanes {
+            assert!(
+                (lane.t1 - report.elapsed_s).abs() <= 1e-9 * report.elapsed_s,
+                "lane d{}s{} ends at {} != makespan {}",
+                lane.device,
+                lane.stream,
+                lane.t1,
+                report.elapsed_s
+            );
+        }
+    }
+}
+
+#[test]
+fn critical_path_covers_the_makespan() {
+    // the backward walk over cause edges must reconstruct a chain whose
+    // length equals the DES makespan, and that chain must be longer than
+    // any single lane's busy time (else it explains nothing a utilization
+    // counter wouldn't). Also exercise a vmem-constrained OOC variant so
+    // the path crosses transfer stalls, not just dep chains.
+    let tight = RunConfig {
+        vmem_bytes: Some((128 * 128 * 8) as u64 * 10), // ~10 tiles: cache churn
+        ..smoke_cfg()
+    };
+    for cfg in [smoke_cfg(), smoke_cfg_ndev2(), tight] {
+        let (report, bd) = traced_run(&cfg);
+        let cp = critical_path(report.trace.as_ref().unwrap())
+            .expect("smoke trace yields a critical path");
+        let tol = 1e-9 * report.elapsed_s + 1e-15;
+        assert!(
+            (cp.len_s - report.elapsed_s).abs() <= tol,
+            "ndev={} vmem={:?}: critical path {} != makespan {}",
+            cfg.ndev,
+            cfg.vmem_bytes,
+            cp.len_s,
+            report.elapsed_s
+        );
+        let busiest = bd.lanes.iter().map(|l| l.busy_s).fold(0.0f64, f64::max);
+        assert!(
+            cp.len_s > busiest,
+            "critical path {} not longer than busiest lane {busiest}",
+            cp.len_s
+        );
+        assert!(!cp.steps.is_empty());
+    }
+}
+
+#[test]
+fn plan_drift_joins_every_write() {
+    use ooc_cholesky::sched::{CompiledSchedule, Schedule};
+
+    let cfg = smoke_cfg();
+    let (report, _) = traced_run(&cfg);
+    let shape = ooc::build_shape(&cfg);
+    let schedule = Schedule::left_looking(cfg.nt(), cfg.ndev, cfg.streams_per_dev);
+    let ir = CompiledSchedule::compile_with_precisions(&schedule, &cfg, &shape.pm);
+    let drift = plan_drift(report.trace.as_ref().unwrap(), &ir);
+    // every compiled write tile has an observed start in the trace
+    assert_eq!(drift.jobs.len(), ir.total_jobs(), "drift join lost jobs");
+    // the compile-time estimates and the DES share cost models, so the
+    // smoke run should not drift by more than a fraction of the makespan
+    assert!(drift.p50_s.abs() <= report.elapsed_s, "implausible p50 {}", drift.p50_s);
+    assert!(drift.p99_s.abs() <= report.elapsed_s, "implausible p99 {}", drift.p99_s);
+    assert!(drift.p99_s >= drift.p50_s - 1e-12, "p99 below p50");
 }

@@ -1,0 +1,117 @@
+#!/usr/bin/env python3
+"""CI gate for exported chrome://tracing timelines (trace_chrome.json).
+
+Usage: check_trace.py <trace.json> [--exact]
+
+Structural checks (always):
+  * the document is a flat JSON array of event objects
+  * every event carries name/cat/ph/ts/pid/tid; ph is X (slice) or s/f
+    (flow); X slices also carry a non-negative dur
+  * stall slices (cat == "stall") carry args.cause from the known set
+  * per (pid, tid) lane, X-slice start times are monotone non-decreasing
+    (the exporter emits a time-sorted timeline)
+  * flow events pair up: each id appears exactly once as "s" and once as
+    "f", with the start no later than the finish
+
+--exact (model-mode traces only) additionally enforces the stall
+accounting invariant the DES guarantees: on every lane, busy + stall
+durations tile the lane's span with nothing unattributed, and the trace
+contains at least one attributed stall.
+"""
+
+import json
+import sys
+
+CAUSES = {"dep", "xfer", "compute", "evict", "malloc", "idle"}
+# f64 summation noise over microsecond timestamps
+REL_TOL = 1e-6
+
+
+def fail(msg):
+    print(f"trace gate FAILED: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def main():
+    args = [a for a in sys.argv[1:] if a != "--exact"]
+    exact = "--exact" in sys.argv[1:]
+    if len(args) != 1:
+        fail("usage: check_trace.py <trace.json> [--exact]")
+    with open(args[0]) as f:
+        doc = json.load(f)
+    if not isinstance(doc, list):
+        fail("trace document is not a JSON array")
+    if not doc:
+        fail("trace document is empty")
+
+    lanes = {}  # (pid, tid) -> {"last_ts", "busy", "stall", "lo", "hi"}
+    flows = {}  # id -> {"s": ts, "f": ts}
+    n_stalls = 0
+
+    for idx, e in enumerate(doc):
+        for key in ("name", "cat", "ph", "ts", "pid", "tid"):
+            if key not in e:
+                fail(f"event {idx} missing key {key!r}: {e}")
+        ph = e["ph"]
+        if ph == "X":
+            if "dur" not in e:
+                fail(f"slice {idx} ({e['name']}) has no dur")
+            if e["dur"] < 0:
+                fail(f"slice {idx} ({e['name']}) has negative dur {e['dur']}")
+            lane = lanes.setdefault(
+                (e["pid"], e["tid"]),
+                {"last_ts": None, "busy": 0.0, "stall": 0.0, "lo": e["ts"], "hi": e["ts"]},
+            )
+            if lane["last_ts"] is not None and e["ts"] < lane["last_ts"]:
+                fail(
+                    f"slice {idx} ({e['name']}) breaks per-lane ts order: "
+                    f"{e['ts']} < {lane['last_ts']} on pid={e['pid']} tid={e['tid']}"
+                )
+            lane["last_ts"] = e["ts"]
+            lane["lo"] = min(lane["lo"], e["ts"])
+            lane["hi"] = max(lane["hi"], e["ts"] + e["dur"])
+            if e["cat"] == "stall":
+                cause = e.get("args", {}).get("cause")
+                if cause not in CAUSES:
+                    fail(f"stall slice {idx} ({e['name']}) has bad cause {cause!r}")
+                lane["stall"] += e["dur"]
+                n_stalls += 1
+            else:
+                lane["busy"] += e["dur"]
+        elif ph in ("s", "f"):
+            if "id" not in e:
+                fail(f"flow event {idx} has no id")
+            slot = flows.setdefault(e["id"], {})
+            if ph in slot:
+                fail(f"flow id {e['id']} has duplicate ph={ph!r}")
+            slot[ph] = e["ts"]
+        else:
+            fail(f"event {idx} ({e['name']}) has unknown ph {ph!r}")
+
+    for fid, slot in flows.items():
+        if set(slot) != {"s", "f"}:
+            fail(f"flow id {fid} is unpaired: phases {sorted(slot)}")
+        if slot["s"] > slot["f"] + 1e-9:
+            fail(f"flow id {fid} starts after it finishes: {slot['s']} > {slot['f']}")
+
+    if exact:
+        if n_stalls == 0:
+            fail("--exact: trace contains no stall slices at all")
+        for (pid, tid), lane in lanes.items():
+            span = lane["hi"] - lane["lo"]
+            covered = lane["busy"] + lane["stall"]
+            if span > 0 and abs(covered - span) > REL_TOL * span:
+                fail(
+                    f"--exact: lane pid={pid} tid={tid} has unattributed time: "
+                    f"busy+stall {covered} != span {span}"
+                )
+
+    n_x = sum(1 for e in doc if e["ph"] == "X")
+    print(
+        f"trace gate OK: {n_x} slices ({n_stalls} stalls) on {len(lanes)} lanes, "
+        f"{len(flows)} flow pairs{' [exact]' if exact else ''}"
+    )
+
+
+if __name__ == "__main__":
+    main()
