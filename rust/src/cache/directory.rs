@@ -132,6 +132,18 @@ impl ResidencyDirectory {
         self.tiles.get(&tile.into()).map(|e| e.clean.clone()).unwrap_or_default()
     }
 
+    /// All devices other than `dev` holding a clean copy of `tile` — the
+    /// scan behind the hybrid-repair reroute probe: when a compiled
+    /// route falls back to the host, any of these is a candidate D2D
+    /// source, to be taken when the link model says it beats the host
+    /// path.
+    pub fn clean_holders_except(&self, tile: impl Into<TileId>, dev: usize) -> Vec<usize> {
+        self.tiles
+            .get(&tile.into())
+            .map(|e| e.clean.iter().map(|&(d, _)| d).filter(|&d| d != dev).collect())
+            .unwrap_or_default()
+    }
+
     /// The dirty owner of `tile`, if a write is in flight.
     pub fn dirty_owner(&self, tile: impl Into<TileId>) -> Option<usize> {
         self.tiles.get(&tile.into()).and_then(|e| e.dirty.map(|(d, _)| d))
@@ -193,6 +205,8 @@ mod tests {
         d.record_load((3, 1), 0, P); // idempotent
         assert!(d.clean_holder((3, 1), 0) && d.clean_holder((3, 1), 1));
         assert_eq!(d.holders((3, 1)).len(), 2);
+        assert_eq!(d.clean_holders_except((3, 1), 0), vec![1]);
+        assert!(d.clean_holders_except((9, 9), 0).is_empty());
         d.record_evict((3, 1), 0);
         assert!(!d.clean_holder((3, 1), 0));
         assert!(d.clean_holder((3, 1), 1));

@@ -136,6 +136,57 @@ pub enum Mode {
     Model,
 }
 
+/// One injected DES perturbation (`--perturb SPEC`, repeatable). These
+/// are the chaos hooks the hybrid scheduler's repair layer is tested
+/// against: both are deterministic (the jitter stream is seeded through
+/// [`crate::util::rng::Rng`]), model-mode only, and compose freely.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Perturb {
+    /// `slow-dev:<dev>:<factor>` — multiply every compute span on
+    /// device `dev` by `factor` (> 1 slows it down; an injected
+    /// straggler GPU).
+    SlowDev { dev: usize, factor: f64 },
+    /// `jitter-bw:<rel>:<seed>` — scale each transfer's effective
+    /// bandwidth by an independent factor drawn uniformly from
+    /// `[1-rel, 1+rel)` (per-transfer link congestion noise).
+    JitterBw { rel: f64, seed: u64 },
+}
+
+impl Perturb {
+    /// Parse one `--perturb` spec. Format: `kind:arg:arg`.
+    pub fn parse(s: &str) -> Result<Perturb, String> {
+        let parts: Vec<&str> = s.split(':').collect();
+        let bad = || format!("bad perturb spec {s:?} (slow-dev:<dev>:<factor> | jitter-bw:<rel>:<seed>)");
+        match parts.as_slice() {
+            ["slow-dev", dev, factor] => {
+                let dev = dev.parse::<usize>().map_err(|_| bad())?;
+                let factor = factor.parse::<f64>().map_err(|_| bad())?;
+                if !(factor > 0.0) {
+                    return Err(format!("slow-dev factor must be > 0, got {factor}"));
+                }
+                Ok(Perturb::SlowDev { dev, factor })
+            }
+            ["jitter-bw", rel, seed] => {
+                let rel = rel.parse::<f64>().map_err(|_| bad())?;
+                let seed = seed.parse::<u64>().map_err(|_| bad())?;
+                if !(0.0..1.0).contains(&rel) {
+                    return Err(format!("jitter-bw rel must be in [0, 1), got {rel}"));
+                }
+                Ok(Perturb::JitterBw { rel, seed })
+            }
+            _ => Err(bad()),
+        }
+    }
+
+    /// Canonical spec string (round-trips through [`Self::parse`]).
+    pub fn canonical(&self) -> String {
+        match self {
+            Perturb::SlowDev { dev, factor } => format!("slow-dev:{dev}:{factor}"),
+            Perturb::JitterBw { rel, seed } => format!("jitter-bw:{rel}:{seed}"),
+        }
+    }
+}
+
 /// GPU SKU + interconnect description for the DES.
 #[derive(Debug, Clone)]
 pub struct HwProfile {
@@ -433,6 +484,15 @@ pub struct RunConfig {
     /// acceptance test compares against). No-op at `ndev == 1` and for
     /// versions without an operand cache.
     pub d2d_routing: bool,
+    /// hybrid static/dynamic scheduling: the trailing fraction of every
+    /// stream's compiled job queue that the runtime repair layer may
+    /// steal from (Donfack et al., arXiv:1110.2677). `0.0` = pure
+    /// static — bit-identical to the repair layer not existing; `1.0` =
+    /// the whole queue is stealable. Applies to both executors.
+    pub dynamic_fraction: f64,
+    /// injected DES perturbations (`--perturb`, repeatable; model-mode
+    /// only — the real executor rejects a non-empty list)
+    pub perturb: Vec<Perturb>,
     /// capture an event trace
     pub trace: bool,
     /// verify factor against the pure-Rust oracle (real mode, small n)
@@ -460,6 +520,8 @@ impl Default for RunConfig {
             eviction: EvictionKind::Lru,
             prefetch_depth: 0,
             d2d_routing: true,
+            dynamic_fraction: 0.0,
+            perturb: Vec::new(),
             trace: false,
             verify: false,
         }
@@ -494,6 +556,19 @@ impl RunConfig {
         }
         if matches!(self.version, Version::Sync) && self.streams_per_dev != 1 {
             return Err("sync version is single-stream by definition".into());
+        }
+        if !(0.0..=1.0).contains(&self.dynamic_fraction) {
+            return Err(format!(
+                "dynamic_fraction must be in [0, 1], got {}",
+                self.dynamic_fraction
+            ));
+        }
+        for p in &self.perturb {
+            if let Perturb::SlowDev { dev, .. } = p {
+                if *dev >= self.ndev {
+                    return Err(format!("slow-dev device {dev} out of range (ndev={})", self.ndev));
+                }
+            }
         }
         let min_tiles = 3 * (self.ts * self.ts * 8) as u64;
         if self.device_vmem() < min_tiles {
@@ -573,6 +648,14 @@ impl RunConfig {
                     other => return Err(format!("bad routing {other:?} (d2d|host)")),
                 }
             }
+            "dynamic_fraction" => self.dynamic_fraction = num()?,
+            "perturb" => {
+                let arr = v.as_arr().ok_or("perturb: expected array of spec strings")?;
+                self.perturb = arr
+                    .iter()
+                    .map(|p| p.as_str().ok_or("perturb: expected string".to_string()).and_then(Perturb::parse))
+                    .collect::<Result<_, _>>()?;
+            }
             "trace" => self.trace = v.as_bool().ok_or("trace: expected bool")?,
             "verify" => self.verify = v.as_bool().ok_or("verify: expected bool")?,
             other => return Err(format!("unknown config key {other:?}")),
@@ -609,6 +692,11 @@ impl RunConfig {
         m.insert("eviction".into(), Json::str(self.eviction.name()));
         m.insert("prefetch_depth".into(), Json::num(self.prefetch_depth as f64));
         m.insert("routing".into(), Json::str(if self.d2d_routing { "d2d" } else { "host" }));
+        m.insert("dynamic_fraction".into(), Json::num(self.dynamic_fraction));
+        m.insert(
+            "perturb".into(),
+            Json::arr(self.perturb.iter().map(|p| Json::str(p.canonical()))),
+        );
         Json::Obj(m)
     }
 }
@@ -691,6 +779,46 @@ mod tests {
         assert!(cfg.d2d_routing);
         let j = crate::util::json::parse(r#"{"routing": "bogus"}"#).unwrap();
         assert!(cfg.apply_json(&j).is_err());
+    }
+
+    #[test]
+    fn perturb_specs_parse_and_roundtrip() {
+        let p = Perturb::parse("slow-dev:1:3.5").unwrap();
+        assert_eq!(p, Perturb::SlowDev { dev: 1, factor: 3.5 });
+        let j = Perturb::parse("jitter-bw:0.3:7").unwrap();
+        assert_eq!(j, Perturb::JitterBw { rel: 0.3, seed: 7 });
+        for spec in ["slow-dev:1:3.5", "jitter-bw:0.3:7"] {
+            let p = Perturb::parse(spec).unwrap();
+            assert_eq!(Perturb::parse(&p.canonical()).unwrap(), p);
+        }
+        assert!(Perturb::parse("slow-dev:1").is_err());
+        assert!(Perturb::parse("slow-dev:1:0").is_err(), "factor must be > 0");
+        assert!(Perturb::parse("jitter-bw:1.5:7").is_err(), "rel must be < 1");
+        assert!(Perturb::parse("chaos:1:2").is_err());
+    }
+
+    #[test]
+    fn hybrid_keys_parse_and_validate() {
+        let mut cfg = RunConfig::default();
+        assert_eq!(cfg.dynamic_fraction, 0.0, "pure static is the default");
+        assert!(cfg.perturb.is_empty());
+        let j = crate::util::json::parse(
+            r#"{"dynamic_fraction": 0.5, "perturb": ["jitter-bw:0.3:7", "slow-dev:0:2"]}"#,
+        )
+        .unwrap();
+        cfg.apply_json(&j).unwrap();
+        assert_eq!(cfg.dynamic_fraction, 0.5);
+        assert_eq!(cfg.perturb.len(), 2);
+        cfg.validate().unwrap();
+        // out-of-range knob / out-of-range device are rejected
+        let bad = RunConfig { dynamic_fraction: 1.5, ..RunConfig::default() };
+        assert!(bad.validate().is_err());
+        let bad = RunConfig {
+            perturb: vec![Perturb::SlowDev { dev: 2, factor: 2.0 }],
+            ndev: 2,
+            ..RunConfig::default()
+        };
+        assert!(bad.validate().is_err());
     }
 
     #[test]

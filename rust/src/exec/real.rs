@@ -28,7 +28,7 @@
 //!  * `v2` — v1 + operand cache with LRU steal.
 //!  * `v3` — v2 + diagonal pinning until the column's TRSMs drain.
 
-use std::sync::atomic::{AtomicU32, AtomicU64, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
@@ -65,6 +65,19 @@ struct Shared<'a> {
     dir: Mutex<ResidencyDirectory>,
     /// V3: remaining TRSMs per column; at 0 the diagonal tile is unpinned
     trsm_left: Vec<AtomicU32>,
+    /// the static schedule the IR was compiled from — steal scans need
+    /// sibling streams' job lists, not just this stream's slice
+    schedule: &'a Schedule,
+    /// hybrid repair: per-(stream, position) claim table. Positions at or
+    /// past `dyn_start` are CAS-claimed before running — by the owning
+    /// stream in program order, or by an idle same-device thief. Never
+    /// touched at `--dynamic-fraction 0` (`dyn_start[g] == len`).
+    claims: Vec<Vec<AtomicBool>>,
+    /// first dynamic-tail position per global stream (`len` at F=0)
+    dyn_start: Vec<usize>,
+    /// set when any stream fails, so stealers drain out instead of
+    /// claiming leftover work of a run that is already lost
+    failed: AtomicBool,
     metrics: Metrics,
     trace: Trace,
     /// schedule-driven transfer engine (inert when prefetch_depth == 0)
@@ -120,6 +133,33 @@ impl<'a> Shared<'a> {
 
     fn keeps_accumulator(&self) -> bool {
         matches!(self.cfg.version, Version::V1 | Version::V2 | Version::V3)
+    }
+
+    fn dynamic(&self) -> bool {
+        self.cfg.dynamic_fraction > 0.0
+    }
+
+    /// Count + trace one repair decision (zero-duration marker on the
+    /// acting stream's lane). `gain_ns` is the link-model estimate for
+    /// reroutes; real-mode steals record no estimate (the DES does).
+    fn note_repair(&self, kind: EventKind, label: Label, gain_ns: u64, dev: usize, stream: usize) {
+        let counter = match kind {
+            EventKind::Steal => &self.metrics.steals,
+            _ => &self.metrics.reroutes,
+        };
+        counter.fetch_add(1, Ordering::Relaxed);
+        self.metrics.repair_gain_est_ns.fetch_add(gain_ns, Ordering::Relaxed);
+        if self.trace.enabled {
+            let t = self.now();
+            self.trace.record(Event {
+                device: dev as u16,
+                stream: stream as u16,
+                kind,
+                label,
+                t0: t,
+                t1: t,
+            });
+        }
     }
 
     /// Wait for dependency tile (i, j) of a job targeting `target_row` —
@@ -248,6 +288,35 @@ impl<'a> Shared<'a> {
         self.caches[src].lock().unwrap().peek_get(tile).map(|b| (src, b))
     }
 
+    /// Hybrid repair, reroute: the compiled route fell through to the
+    /// host (a `Host` route, or a `Peer` probe that found the copy gone)
+    /// — scan the directory for *any* device holding a clean copy whose
+    /// D2D path the link model prices below the host link, and peek its
+    /// cache. Inert at `--dynamic-fraction 0`, so pure static runs never
+    /// consult anything beyond the compiled route.
+    fn probe_reroute(
+        &self,
+        tile: (usize, usize),
+        bytes: u64,
+        owner: usize,
+        dev: usize,
+    ) -> Option<(usize, Arc<DevBuf>, u64)> {
+        if !self.dynamic() {
+            return None;
+        }
+        let host = self.ir.links.h2d_time(bytes, owner, dev);
+        let mut best: Option<(usize, f64)> = None;
+        for src in self.dir.lock().unwrap().clean_holders_except(tile, dev) {
+            let dt = self.ir.links.d2d_time(bytes, src, dev);
+            if dt < host && best.map(|(_, b)| host - dt > b).unwrap_or(true) {
+                best = Some((src, host - dt));
+            }
+        }
+        let (src, gain) = best?;
+        let buf = self.caches[src].lock().unwrap().peek_get(tile)?;
+        Some((src, buf, (gain * 1e9) as u64))
+    }
+
     /// D2D peer copy: stage the peer device's buffer through the pinned
     /// pool and upload it to `dev` — the bounce-buffer path real PCIe
     /// P2P-less systems use, counted as peer (d2d) traffic at the
@@ -318,18 +387,21 @@ impl<'a> Shared<'a> {
         // residency directory confirms the copy is still there; the
         // host (NUMA domain of the owning row) otherwise.
         let prec = self.matrix.lock(i, j).prec;
-        let route = route_read(
-            &self.ir.links,
-            self.ir.routing,
-            (self.cfg.ts * self.cfg.ts) as u64 * prec.width(),
-            device_of_row(i, self.cfg.ndev),
-            dev,
-        );
+        let tile_bytes = (self.cfg.ts * self.cfg.ts) as u64 * prec.width();
+        let owner = device_of_row(i, self.cfg.ndev);
+        let route = route_read(&self.ir.links, self.ir.routing, tile_bytes, owner, dev);
         let (buf, bytes) = match self.probe_peer(route, (i, j)) {
             Some((src, peer_buf)) => {
                 self.peer_copy_tile(&peer_buf, i, j, prec, src, dev, stream)?
             }
-            None => self.upload_tile(i, j, dev, stream)?,
+            None => match self.probe_reroute((i, j), tile_bytes, owner, dev) {
+                Some((src, peer_buf, gain_ns)) => {
+                    let label = Label::Reroute { tile: TileId::new(i, j), src: src as u16 };
+                    self.note_repair(EventKind::Reroute, label, gain_ns, dev, stream);
+                    self.peer_copy_tile(&peer_buf, i, j, prec, src, dev, stream)?
+                }
+                None => self.upload_tile(i, j, dev, stream)?,
+            },
         };
         let buf = Arc::new(buf);
         if self.uses_cache() {
@@ -397,6 +469,11 @@ impl<'a> Shared<'a> {
 pub fn run(cfg: &RunConfig, rt: &Runtime, matrix: &TileMatrix) -> Result<super::RunReport> {
     cfg.validate().map_err(|e| anyhow!("config: {e}"))?;
     anyhow::ensure!(matrix.n == cfg.n && matrix.ts == cfg.ts, "matrix/config shape mismatch");
+    anyhow::ensure!(
+        cfg.perturb.is_empty(),
+        "--perturb is a model-mode (DES) chaos hook: real execution cannot \
+         inject deterministic slowdowns or bandwidth jitter"
+    );
     let nt = cfg.nt();
 
     let schedule = match cfg.version {
@@ -433,6 +510,14 @@ pub fn run(cfg: &RunConfig, rt: &Runtime, matrix: &TileMatrix) -> Result<super::
             })
         })
         .collect();
+    let dyn_start: Vec<usize> = (0..schedule.total_streams())
+        .map(|g| ir.dynamic_tail_start(g, cfg.dynamic_fraction))
+        .collect();
+    let claims: Vec<Vec<AtomicBool>> = schedule
+        .jobs
+        .iter()
+        .map(|j| (0..j.len()).map(|_| AtomicBool::new(false)).collect())
+        .collect();
     let shared = Shared {
         cfg,
         rt,
@@ -443,6 +528,10 @@ pub fn run(cfg: &RunConfig, rt: &Runtime, matrix: &TileMatrix) -> Result<super::
         caches,
         dir: Mutex::new(ResidencyDirectory::new(cfg.ndev)),
         trsm_left: (0..nt).map(|k| AtomicU32::new((nt - k - 1) as u32)).collect(),
+        schedule: &schedule,
+        claims,
+        dyn_start,
+        failed: AtomicBool::new(false),
         metrics: Metrics::new(),
         trace: Trace::for_run(cfg.trace, cfg.ndev, cfg.streams_per_dev),
         xfer: XferEngine::new(plan, cfg.ndev, cfg.ndev * cfg.streams_per_dev),
@@ -465,6 +554,7 @@ pub fn run(cfg: &RunConfig, rt: &Runtime, matrix: &TileMatrix) -> Result<super::
                 let sid = schedule.stream_id(gid);
                 if let Err(e) = run_stream(shared, &schedule.jobs[gid], sid.device, sid.stream) {
                     panic_flag.store(1, Ordering::SeqCst);
+                    shared.failed.store(true, Ordering::SeqCst);
                     let mut slot = first_err.lock().unwrap();
                     if slot.is_none() {
                         *slot = Some(e);
@@ -536,54 +626,166 @@ fn run_stream(sh: &Shared, jobs: &[Job], dev: usize, stream: usize) -> Result<()
     for (idx, job) in jobs.iter().enumerate() {
         // hand the transfer engine this position's planned loads (the
         // operands of the job `prefetch_depth` ahead) and bump the
-        // cancellation watermark
+        // cancellation watermark — also for positions a thief stole:
+        // the stolen job's planned loads belong to this queue, and
+        // skipping the bump would leave them uncancellable
         if sh.xfer.enabled() {
             sh.xfer.on_job_start(gid, dev, idx);
         }
-        // publish this stream's position and anchor the device's Belady
-        // clock to the min active base across its streams (conservative
-        // horizon). Belady only: other policies never read the clock,
-        // and this takes the contended device cache lock
-        if sh.uses_cache() && sh.cfg.eviction == EvictionKind::Belady {
-            sh.stream_base[gid].store(sh.ir.access_base(gid, idx), Ordering::Release);
-            let dev0 = dev * sh.cfg.streams_per_dev;
-            let min_base = (dev0..dev0 + sh.cfg.streams_per_dev)
-                .map(|g| sh.stream_base[g].load(Ordering::Acquire))
-                .min()
-                .unwrap_or(0);
-            if min_base != u64::MAX {
-                sh.caches[dev].lock().unwrap().set_clock(min_base);
-            }
+        // hybrid repair: positions in the dynamic tail are claimed
+        // before running. Losing the race means a thief took the job;
+        // its output may be a *static* dependency of a later job on
+        // this stream (static deps skip the progress-table probe by
+        // program order), so block on the stolen job's target before
+        // moving past it.
+        if idx >= sh.dyn_start[gid] && sh.claims[gid][idx].swap(true, Ordering::AcqRel) {
+            let (wi, wj) = job.target();
+            sh.progress.wait_ready(wi, wj);
+            continue;
         }
-        // directory write lifecycle: the job's target is dirty on this
-        // device for the job's duration (single dirty owner); stale
-        // cached copies anywhere are dropped up front. Reads of a tile
-        // only happen after it is final, so no reader can race this.
-        let (wi, wj) = job.target();
-        {
-            let wprec = sh.matrix.lock(wi, wj).prec;
-            let stale = sh.dir.lock().unwrap().begin_write((wi, wj), dev, wprec);
-            for d in stale {
-                let mut c = sh.caches[d].lock().unwrap();
-                c.invalidate((wi, wj));
-                // the directory already dropped the write target, so its
-                // record_evict is a no-op — but syncing (rather than
-                // discarding the log) keeps any other pending removal
-                // from being silently swallowed
-                sh.sync_dir_locked(d, &mut c);
-            }
-        }
-        match *job {
-            Job::TileLL { m, k } => run_tile_ll(sh, m, k, dev, stream, &mut scratch)?,
-            Job::FactorDiagRL { k } => run_factor_diag_rl(sh, k, dev, stream, &mut scratch)?,
-            Job::FactorOffRL { m, k } => run_factor_off_rl(sh, m, k, dev, stream, &mut scratch)?,
-            Job::UpdateRL { i, j, k } => run_update_rl(sh, i, j, k, dev, stream, &mut scratch)?,
-        }
-        sh.dir.lock().unwrap().end_write((wi, wj), dev);
+        run_one_job(sh, gid, idx, *job, dev, stream, false, &mut scratch)?;
     }
     // drained: stop holding the device's Belady horizon back
     sh.stream_base[gid].store(u64::MAX, Ordering::Release);
+    // endgame: absorb still-unclaimed dynamic-tail work from sibling
+    // streams instead of idling at the join barrier
+    if sh.dynamic() {
+        steal_tail(sh, gid, dev, stream, &mut scratch)?;
+    }
     Ok(())
+}
+
+/// Execute one job on `dev`/`stream` with the full lifecycle: Belady
+/// horizon, directory write window, kernel dispatch. Shared between the
+/// static program-order path and the steal path. A `stolen` job anchors
+/// the horizon without publishing a position — `(gid, idx)` name the
+/// *victim's* queue slot, and the thief's own queue is already drained.
+#[allow(clippy::too_many_arguments)]
+fn run_one_job(
+    sh: &Shared,
+    gid: usize,
+    idx: usize,
+    job: Job,
+    dev: usize,
+    stream: usize,
+    stolen: bool,
+    scratch: &mut Vec<f64>,
+) -> Result<()> {
+    // publish this stream's position and anchor the device's Belady
+    // clock to the min active base across its streams (conservative
+    // horizon). Belady only: other policies never read the clock,
+    // and this takes the contended device cache lock
+    if sh.uses_cache() && sh.cfg.eviction == EvictionKind::Belady {
+        if !stolen {
+            sh.stream_base[gid].store(sh.ir.access_base(gid, idx), Ordering::Release);
+        }
+        let dev0 = dev * sh.cfg.streams_per_dev;
+        let min_base = (dev0..dev0 + sh.cfg.streams_per_dev)
+            .map(|g| sh.stream_base[g].load(Ordering::Acquire))
+            .min()
+            .unwrap_or(0);
+        // every sibling drained (endgame steal): the stolen job's own
+        // base is the only horizon left
+        let min_base =
+            if min_base == u64::MAX { sh.ir.access_base(gid, idx) } else { min_base };
+        sh.caches[dev].lock().unwrap().set_clock(min_base);
+    }
+    // directory write lifecycle: the job's target is dirty on this
+    // device for the job's duration (single dirty owner); stale
+    // cached copies anywhere are dropped up front. Reads of a tile
+    // only happen after it is final, so no reader can race this.
+    let (wi, wj) = job.target();
+    {
+        let wprec = sh.matrix.lock(wi, wj).prec;
+        let stale = sh.dir.lock().unwrap().begin_write((wi, wj), dev, wprec);
+        for d in stale {
+            let mut c = sh.caches[d].lock().unwrap();
+            c.invalidate((wi, wj));
+            // the directory already dropped the write target, so its
+            // record_evict is a no-op — but syncing (rather than
+            // discarding the log) keeps any other pending removal
+            // from being silently swallowed
+            sh.sync_dir_locked(d, &mut c);
+        }
+    }
+    match job {
+        Job::TileLL { m, k } => run_tile_ll(sh, m, k, dev, stream, scratch)?,
+        Job::FactorDiagRL { k } => run_factor_diag_rl(sh, k, dev, stream, scratch)?,
+        Job::FactorOffRL { m, k } => run_factor_off_rl(sh, m, k, dev, stream, scratch)?,
+        Job::UpdateRL { i, j, k } => run_update_rl(sh, i, j, k, dev, stream, scratch)?,
+    }
+    sh.dir.lock().unwrap().end_write((wi, wj), dev);
+    Ok(())
+}
+
+/// Endgame work stealing (hybrid repair): a drained stream repeatedly
+/// scans its device siblings' dynamic tails, deepest-first, for
+/// unclaimed left-looking jobs whose reads are all final, CAS-claims
+/// them and runs them on its own lane. Only `Job::TileLL` is stealable:
+/// it is the single writer of its target, whereas the right-looking
+/// kinds accumulate into their target across several jobs of the victim
+/// stream — a same-stream write chain the all-reads-final check cannot
+/// see. Exits once every stealable sibling tail position is claimed, or
+/// immediately if the run already failed.
+fn steal_tail(
+    sh: &Shared,
+    thief: usize,
+    dev: usize,
+    stream: usize,
+    scratch: &mut Vec<f64>,
+) -> Result<()> {
+    let dev0 = dev * sh.cfg.streams_per_dev;
+    loop {
+        if sh.failed.load(Ordering::Relaxed) {
+            return Ok(());
+        }
+        let mut open = false;
+        let mut ran = false;
+        for v in dev0..dev0 + sh.cfg.streams_per_dev {
+            if v == thief {
+                continue;
+            }
+            let jobs = &sh.schedule.jobs[v];
+            for idx in (sh.dyn_start[v]..jobs.len()).rev() {
+                let job = jobs[idx];
+                if !matches!(job, Job::TileLL { .. }) {
+                    continue;
+                }
+                if sh.claims[v][idx].load(Ordering::Acquire) {
+                    continue;
+                }
+                let ready = sh.ir.reads(v, idx).iter().all(|t| {
+                    let (i, j) = t.coords();
+                    sh.progress.is_ready(i, j)
+                });
+                if !ready {
+                    open = true;
+                    continue;
+                }
+                if sh.claims[v][idx].swap(true, Ordering::AcqRel) {
+                    continue; // lost the claim race
+                }
+                let (wi, wj) = job.target();
+                let vstream = (v % sh.cfg.streams_per_dev) as u16;
+                sh.note_repair(
+                    EventKind::Steal,
+                    Label::Steal { tile: TileId::new(wi, wj), victim: vstream },
+                    0,
+                    dev,
+                    stream,
+                );
+                run_one_job(sh, v, idx, job, dev, stream, true, scratch)?;
+                ran = true;
+            }
+        }
+        if !open {
+            return Ok(());
+        }
+        if !ran {
+            // nothing claimable yet but tails remain: yield briefly
+            std::thread::sleep(std::time::Duration::from_micros(50));
+        }
+    }
 }
 
 /// One device's transfer worker: drain the planned-load queue into the
@@ -631,8 +833,16 @@ fn run_xfer_worker(sh: &Shared, dev: usize) {
             }
         }
         // routed source: a peer device's cached copy when the plan says
-        // so and the directory confirms it; the host tile otherwise
-        let peer = sh.probe_peer(load.src, (i, j));
+        // so and the directory confirms it; otherwise try a dynamic
+        // reroute (hybrid repair) before falling back to the host tile
+        let peer = sh.probe_peer(load.src, (i, j)).or_else(|| {
+            let owner = device_of_row(i, sh.cfg.ndev);
+            sh.probe_reroute((i, j), bytes, owner, dev).map(|(src, buf, gain_ns)| {
+                let label = Label::Reroute { tile: TileId::new(i, j), src: src as u16 };
+                sh.note_repair(EventKind::Reroute, label, gain_ns, dev, pf_lane as usize);
+                (src, buf)
+            })
+        });
         // stage through the pinned pool (under the tile lock for host
         // sources — short), upload from the staging buffer outside it
         let t0 = sh.now();

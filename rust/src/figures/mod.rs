@@ -9,6 +9,7 @@ pub mod fig6;
 pub mod fig7;
 pub mod fig8;
 pub mod fig9;
+pub mod hybrid;
 pub mod scaling;
 
 pub use ablation::{
@@ -20,6 +21,7 @@ pub use fig6::fig6_single_gpu;
 pub use fig7::fig7_traces;
 pub use fig8::fig8_volumes;
 pub use fig9::fig9_multi_gpu;
+pub use hybrid::hybrid;
 pub use scaling::scaling;
 
 mod mxp;

@@ -10,7 +10,7 @@
 //!                        [--beta 0.078809] [--prefetch-depth 4] [--trace]
 //!                        [--verify] [--config file.json]
 //! ooc-cholesky profile   [factorize flags]   # traced run + stall/critical-path report
-//! ooc-cholesky figure <6|7|8|9|10|11|12|13|scaling|all> [--quick]
+//! ooc-cholesky figure <6|7|8|9|10|11|12|13|scaling|hybrid|all> [--quick]
 //! ooc-cholesky mle     [--n 1024] [--ts 128] [--beta ...]    # end-to-end MLE demo
 //! ooc-cholesky kl      [--n 1024] [--ts 128]                 # KL accuracy sweep
 //! ooc-cholesky artifacts                                      # list compiled kernels
@@ -20,7 +20,7 @@ use std::collections::VecDeque;
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use ooc_cholesky::config::{EvictionKind, HwProfile, Mode, RunConfig, Version};
+use ooc_cholesky::config::{EvictionKind, HwProfile, Mode, Perturb, RunConfig, Version};
 use ooc_cholesky::precision::Precision;
 use ooc_cholesky::runtime::Runtime;
 use ooc_cholesky::{figures, mle, ooc};
@@ -63,7 +63,7 @@ USAGE:
                                      (accepts every factorize flag; tracing
                                      is forced on)
   ooc-cholesky figure <id> [--quick] regenerate a paper figure (6..13,
-                                     scaling, or all)
+                                     scaling, hybrid, or all)
   ooc-cholesky mle [flags]           end-to-end geospatial MLE demo
   ooc-cholesky kl [flags]            MxP KL-divergence accuracy sweep
   ooc-cholesky export [flags]        factorize and write the factor as .npy
@@ -102,6 +102,19 @@ FACTORIZE FLAGS:
   --routing R        d2d (default): source cross-device reads from a peer
                      GPU whenever the link model says the D2D link beats
                      the host path; host: host-only routing baseline
+  --dynamic-fraction F  hybrid repair: the trailing fraction F of each
+                     stream's static job order may be stolen by idle
+                     same-device streams, and host-fallback reads may be
+                     rerouted to a cheaper confirmed peer copy at run
+                     time. 0.0 (default) = pure static, bit-identical to
+                     the repair-free executor; 1.0 = the whole order.
+  --perturb SPEC     model mode only, repeatable: inject a deterministic
+                     perturbation into the DES. slow-dev:<dev>:<factor>
+                     multiplies device <dev>'s kernel times by <factor>;
+                     jitter-bw:<rel>:<seed> scales every transfer by a
+                     seeded uniform draw from [1-rel, 1+rel).
+  --report-out F     write the full run report (config + timing + metrics)
+                     as JSON to F
   --trace            record + print the event timeline
   --verify           check the factor against the host oracle (n<=8192)
   --config FILE      JSON config (flags override)
@@ -171,6 +184,13 @@ fn parse_cfg(mut args: VecDeque<String>) -> Result<RunConfig> {
                     other => bail!("bad --routing {other:?} (d2d|host)"),
                 }
             }
+            "--dynamic-fraction" => {
+                cfg.dynamic_fraction = next(&mut args, "--dynamic-fraction")?.parse()?
+            }
+            "--perturb" => {
+                let spec = next(&mut args, "--perturb")?;
+                cfg.perturb.push(Perturb::parse(&spec).map_err(|e| anyhow!(e))?);
+            }
             "--trace" => cfg.trace = true,
             "--verify" => cfg.verify = true,
             other => bail!("unknown flag {other:?}"),
@@ -193,6 +213,7 @@ struct OutPaths {
     metrics: Option<std::path::PathBuf>,
     trace: Option<std::path::PathBuf>,
     stalls: Option<std::path::PathBuf>,
+    report: Option<std::path::PathBuf>,
 }
 
 fn peel_out_paths(mut args: VecDeque<String>) -> Result<(OutPaths, VecDeque<String>)> {
@@ -203,6 +224,7 @@ fn peel_out_paths(mut args: VecDeque<String>) -> Result<(OutPaths, VecDeque<Stri
             "--metrics-out" => &mut out.metrics,
             "--trace-out" => &mut out.trace,
             "--stalls-out" => &mut out.stalls,
+            "--report-out" => &mut out.report,
             _ => {
                 rest.push_back(a);
                 continue;
@@ -240,6 +262,11 @@ fn write_run_outputs(report: &ooc_cholesky::exec::RunReport, out: &OutPaths) -> 
             .context("--stalls-out needs a traced run (pass --trace)")?;
         std::fs::write(path, s).with_context(|| format!("writing {path:?}"))?;
         println!("(stall breakdown at {path:?})");
+    }
+    if let Some(path) = &out.report {
+        std::fs::write(path, report.to_json().pretty())
+            .with_context(|| format!("writing {path:?}"))?;
+        println!("(run report at {path:?})");
     }
     Ok(())
 }
@@ -280,6 +307,11 @@ fn cmd_profile(args: VecDeque<String>) -> Result<()> {
     let breakdown = profile::StallBreakdown::compute(tr);
     print!("\n{}", breakdown.render());
     let mut j = vec![("stall_breakdown", breakdown.to_json())];
+
+    // hybrid repair attribution (all-zero on pure-static runs)
+    let repair = profile::repair_attribution(tr);
+    print!("\n{}", repair.render());
+    j.push(("repair", repair.to_json()));
 
     let cp = profile::critical_path(tr);
     if let Some(cp) = &cp {
@@ -363,6 +395,7 @@ fn cmd_figure(mut args: VecDeque<String>) -> Result<()> {
                 figures::fig13_mxp_traces(if quick { 32 * 1024 } else { 100 * 1024 }, 2048, 100)?
             }
             "scaling" => figures::scaling(if quick { 64 * 1024 } else { 160 * 1024 }, 2048)?,
+            "hybrid" => figures::hybrid(quick)?,
             other => bail!("unknown figure {other:?}"),
         };
         // numeric ids land as fig<N>.json; named harnesses keep their name
@@ -376,7 +409,7 @@ fn cmd_figure(mut args: VecDeque<String>) -> Result<()> {
         Ok(())
     };
     if id == "all" {
-        for id in ["6", "7", "8", "9", "10", "11", "12", "13", "scaling"] {
+        for id in ["6", "7", "8", "9", "10", "11", "12", "13", "scaling", "hybrid"] {
             run_one(id)?;
         }
         Ok(())

@@ -80,6 +80,19 @@ pub struct Metrics {
     /// wall time spent spinning for device memory in the accumulator
     /// reserve loop, ns (real mode eviction pressure)
     pub evict_wait_ns: AtomicU64,
+    /// hybrid repair layer: jobs executed by a stream other than the one
+    /// the compiled schedule assigned them to (work-stealing from the
+    /// dynamic tail; `--dynamic-fraction` > 0)
+    pub steals: AtomicU64,
+    /// hybrid repair layer: reads served from a cheaper confirmed source
+    /// than the compile-time `ReadSrc` route (residency-directory scan)
+    pub reroutes: AtomicU64,
+    /// estimated time the repair decisions saved, ns: per steal the
+    /// thief's clock advantage over the victim stream, per reroute the
+    /// link-time delta vs the static route. A modeled estimate, not a
+    /// measured wall delta — see the profiler's repair attribution for
+    /// the measured view.
+    pub repair_gain_est_ns: AtomicU64,
 }
 
 fn prec_slot(p: Precision) -> usize {
@@ -177,6 +190,9 @@ impl Metrics {
             deps_waited: self.deps_waited.load(Ordering::Relaxed),
             dep_wait_ns: self.dep_wait_ns.load(Ordering::Relaxed),
             evict_wait_ns: self.evict_wait_ns.load(Ordering::Relaxed),
+            steals: self.steals.load(Ordering::Relaxed),
+            reroutes: self.reroutes.load(Ordering::Relaxed),
+            repair_gain_est_ns: self.repair_gain_est_ns.load(Ordering::Relaxed),
         }
     }
 }
@@ -232,6 +248,9 @@ pub struct MetricsSnapshot {
     pub deps_waited: u64,
     pub dep_wait_ns: u64,
     pub evict_wait_ns: u64,
+    pub steals: u64,
+    pub reroutes: u64,
+    pub repair_gain_est_ns: u64,
 }
 
 impl MetricsSnapshot {
@@ -295,6 +314,9 @@ impl MetricsSnapshot {
             ("deps_waited", Json::num(self.deps_waited as f64)),
             ("dep_wait_s", Json::num(self.dep_wait_ns as f64 / 1e9)),
             ("evict_wait_s", Json::num(self.evict_wait_ns as f64 / 1e9)),
+            ("steals", Json::num(self.steals as f64)),
+            ("reroutes", Json::num(self.reroutes as f64)),
+            ("repair_gain_est_s", Json::num(self.repair_gain_est_ns as f64 / 1e9)),
         ])
     }
 }
@@ -358,6 +380,9 @@ mod tests {
         assert_eq!(j.get("d2d_by_prec").as_arr().unwrap().len(), 4);
         assert!(j.get("d2d_bytes").as_f64().is_some());
         assert!(j.get("prefetch_overlap").as_f64().is_some());
+        assert!(j.get("steals").as_f64().is_some());
+        assert!(j.get("reroutes").as_f64().is_some());
+        assert!(j.get("repair_gain_est_s").as_f64().is_some());
     }
 
     #[test]

@@ -770,6 +770,27 @@ impl CompiledSchedule {
         self.reads_of(self.job_at(gid, pos))
     }
 
+    /// First position of stream `gid`'s *dynamic tail*: the trailing
+    /// `floor(f · len)` jobs of the stream's static order that the
+    /// hybrid repair layer may steal (Donfack-style static core +
+    /// dynamic remainder). `f = 0.0` returns `len` (nothing stealable —
+    /// pure static), `f = 1.0` returns `0` (the whole queue).
+    pub fn dynamic_tail_start(&self, gid: usize, f: f64) -> usize {
+        let len = self.stream_jobs[gid].len();
+        len - ((f.clamp(0.0, 1.0) * len as f64).floor() as usize).min(len)
+    }
+
+    /// Steal-safety check: a job may run on a lane other than its
+    /// compiled stream iff **every** operand in its read set is final.
+    /// This is strictly stronger than the wait list (waits ⊆ reads: the
+    /// wait list drops same-stream deps that program order would have
+    /// guaranteed — an ordering a steal no longer preserves), so a
+    /// stolen job can never observe a stale operand. `is_final` answers
+    /// "has `tile`'s producer completed?".
+    pub fn steal_ready(&self, gid: usize, pos: usize, mut is_final: impl FnMut(TileId) -> bool) -> bool {
+        self.reads(gid, pos).iter().all(|&t| is_final(t))
+    }
+
     /// Logical byte width of `tile` (ts² · precision width) — the
     /// interned lookup that replaced the per-read `read_bytes` array.
     pub fn bytes_of(&self, tile: TileId) -> u64 {
@@ -973,6 +994,47 @@ mod tests {
             let r = Schedule::right_looking(nt, ndev, spd);
             let irr = CompiledSchedule::compile(&r, &cfg(nt * 128, 128));
             irr.validate(&r).unwrap();
+        }
+    }
+
+    #[test]
+    fn dynamic_tail_start_bounds() {
+        let s = Schedule::left_looking(8, 1, 4);
+        let ir = CompiledSchedule::compile(&s, &cfg(8 * 128, 128));
+        for gid in 0..s.jobs.len() {
+            let len = ir.stream_jobs[gid].len();
+            assert_eq!(ir.dynamic_tail_start(gid, 0.0), len, "F=0: nothing stealable");
+            assert_eq!(ir.dynamic_tail_start(gid, 1.0), 0, "F=1: whole queue");
+            let half = ir.dynamic_tail_start(gid, 0.5);
+            assert_eq!(half, len - len / 2);
+            // monotone: a larger fraction never shrinks the tail
+            let mut prev = len;
+            for i in 0..=10 {
+                let ds = ir.dynamic_tail_start(gid, i as f64 / 10.0);
+                assert!(ds <= prev);
+                prev = ds;
+            }
+        }
+    }
+
+    #[test]
+    fn steal_ready_requires_every_read_final() {
+        let s = Schedule::left_looking(6, 1, 2);
+        let ir = CompiledSchedule::compile(&s, &cfg(6 * 128, 128));
+        // pick a job with a non-empty read set
+        let (gid, pos) = (0..s.jobs.len())
+            .flat_map(|g| (0..ir.stream_jobs[g].len()).map(move |p| (g, p)))
+            .find(|&(g, p)| !ir.reads(g, p).is_empty())
+            .unwrap();
+        assert!(ir.steal_ready(gid, pos, |_| true));
+        assert!(!ir.steal_ready(gid, pos, |_| false));
+        // blocking exactly one operand blocks the steal
+        let blocked = ir.reads(gid, pos)[0];
+        assert!(!ir.steal_ready(gid, pos, |t| t != blocked));
+        // the wait list is a subset of the read set, so read-finality
+        // subsumes the compiled wait list
+        for t in ir.waits(gid, pos) {
+            assert!(ir.reads(gid, pos).contains(t));
         }
     }
 

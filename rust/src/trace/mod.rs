@@ -92,6 +92,12 @@ pub enum EventKind {
     Prefetch,
     /// attributed idle interval (the "Stal" row)
     Stall(StallCause),
+    /// zero-duration repair marker: this lane stole the next job from a
+    /// sibling stream's dynamic tail (hybrid scheduling)
+    Steal,
+    /// zero-duration repair marker: the next read was served from a
+    /// cheaper confirmed source than the compile-time route
+    Reroute,
 }
 
 impl EventKind {
@@ -105,6 +111,8 @@ impl EventKind {
             EventKind::Work => "work",
             EventKind::Prefetch => "prefetch",
             EventKind::Stall(_) => "stall",
+            EventKind::Steal => "steal",
+            EventKind::Reroute => "reroute",
         }
     }
 
@@ -134,6 +142,12 @@ pub enum Label {
     Upd { i: u32, j: u32, k: u32 },
     /// stall span; mirrors the event's `EventKind::Stall` cause
     Stall(StallCause),
+    /// steal marker: job writing `tile` stolen from sibling stream
+    /// `victim`, e.g. "steal(3,1)<-s2"
+    Steal { tile: TileId, victim: u16 },
+    /// reroute marker: read of `tile` served D2D from device `src`
+    /// instead of the compiled route, e.g. "reroute(3,1)<-1"
+    Reroute { tile: TileId, src: u16 },
     /// escape hatch for tests / one-off markers (static, so still Copy)
     Raw(&'static str),
 }
@@ -167,6 +181,12 @@ impl Label {
                 StallCause::Malloc => "malloc".into(),
                 StallCause::QueueEmpty => "idle".into(),
             },
+            Label::Steal { tile, victim } => {
+                format!("steal({},{})<-s{}", tile.row(), tile.col(), victim)
+            }
+            Label::Reroute { tile, src } => {
+                format!("reroute({},{})<-{}", tile.row(), tile.col(), src)
+            }
             Label::Raw(s) => s.into(),
         }
     }
@@ -183,7 +203,12 @@ impl Label {
             Label::Syrk { k, .. } => Some(TileId::new(k as usize, k as usize)),
             Label::Gemm { m, k, .. } => Some(TileId::new(m as usize, k as usize)),
             Label::Upd { i, j, .. } => Some(TileId::new(i as usize, j as usize)),
-            Label::D2d { .. } | Label::Pf(_) | Label::Stall(_) | Label::Raw(_) => None,
+            Label::D2d { .. }
+            | Label::Pf(_)
+            | Label::Stall(_)
+            | Label::Steal { .. }
+            | Label::Reroute { .. }
+            | Label::Raw(_) => None,
         }
     }
 }
@@ -330,6 +355,28 @@ impl Trace {
                 if let EventKind::Stall(c) = e.kind {
                     fields.push(("args", Json::obj(vec![("cause", Json::str(c.tag()))])));
                 }
+                // repair markers carry their peer lane/device in args so
+                // tools/check_trace.py can validate causality without
+                // parsing the rendered label
+                match e.label {
+                    Label::Steal { tile, victim } => fields.push((
+                        "args",
+                        Json::obj(vec![
+                            ("row", Json::num(tile.row() as f64)),
+                            ("col", Json::num(tile.col() as f64)),
+                            ("victim", Json::num(victim as f64)),
+                        ]),
+                    )),
+                    Label::Reroute { tile, src } => fields.push((
+                        "args",
+                        Json::obj(vec![
+                            ("row", Json::num(tile.row() as f64)),
+                            ("col", Json::num(tile.col() as f64)),
+                            ("src", Json::num(src as f64)),
+                        ]),
+                    )),
+                    _ => {}
+                }
                 Json::obj(fields)
             })
             .collect();
@@ -468,7 +515,7 @@ impl Trace {
                     EventKind::D2D => b'd',
                     EventKind::Work => b'#',
                     EventKind::Prefetch => b'p',
-                    EventKind::Stall(_) => b'?',
+                    EventKind::Stall(_) | EventKind::Steal | EventKind::Reroute => b'?',
                 };
                 for c in c0..=c1 {
                     line[c] = ch;
@@ -654,6 +701,34 @@ mod tests {
             Label::Stall(StallCause::WaitDep { producer: TileId::new(2, 2) }).render(),
             "wait_dep(2,2)"
         );
+        assert_eq!(
+            Label::Steal { tile: TileId::new(3, 1), victim: 2 }.render(),
+            "steal(3,1)<-s2"
+        );
+        assert_eq!(
+            Label::Reroute { tile: TileId::new(3, 1), src: 1 }.render(),
+            "reroute(3,1)<-1"
+        );
+        assert_eq!(Label::Steal { tile: TileId::new(3, 1), victim: 2 }.target_tile(), None);
+    }
+
+    #[test]
+    fn repair_markers_export_args() {
+        let t = Trace::new(true);
+        t.record(Event {
+            device: 0,
+            stream: 1,
+            kind: EventKind::Steal,
+            label: Label::Steal { tile: TileId::new(3, 1), victim: 2 },
+            t0: 1.0,
+            t1: 1.0,
+        });
+        let j = t.to_chrome_json();
+        let e = &j.as_arr().unwrap()[0];
+        assert_eq!(e.get("cat").as_str(), Some("steal"));
+        assert_eq!(e.get("dur").as_f64(), Some(0.0));
+        assert_eq!(e.get("args").get("victim").as_f64(), Some(2.0));
+        assert_eq!(e.get("args").get("row").as_f64(), Some(3.0));
     }
 
     #[test]

@@ -362,6 +362,116 @@ pub fn critical_path(trace: &Trace) -> Option<CriticalPath> {
     })
 }
 
+/// Hybrid-repair attribution: how much of the timeline ran under a
+/// repair decision. Each `Steal` marker opens a window on its lane that
+/// closes at the stolen job's write-back (the first `D2h` of the
+/// marker's tile on the same lane at or after the marker); lane time
+/// inside any such window counts as *repaired* busy/stall, everything
+/// else as *static*. Reroute markers are counted but open no window — a
+/// reroute replaces a single transfer in place (its estimated saving is
+/// in `repair_gain_est_s` of the metrics).
+#[derive(Debug, Clone, Default)]
+pub struct RepairAttribution {
+    pub steals: usize,
+    pub reroutes: usize,
+    /// busy seconds inside steal windows (work absorbed by thieves)
+    pub repaired_busy_s: f64,
+    /// stall seconds inside steal windows
+    pub repaired_stall_s: f64,
+    /// stall seconds outside every steal window — what a pure-static
+    /// run's stall breakdown would have attributed anyway
+    pub static_stall_s: f64,
+}
+
+impl RepairAttribution {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("steals", Json::num(self.steals as f64)),
+            ("reroutes", Json::num(self.reroutes as f64)),
+            ("repaired_busy_s", Json::num(self.repaired_busy_s)),
+            ("repaired_stall_s", Json::num(self.repaired_stall_s)),
+            ("static_stall_s", Json::num(self.static_stall_s)),
+        ])
+    }
+
+    pub fn render(&self) -> String {
+        format!(
+            "hybrid repair: {} steals, {} reroutes; repaired busy {:.6}s, \
+             repaired stall {:.6}s, static stall {:.6}s\n",
+            self.steals,
+            self.reroutes,
+            self.repaired_busy_s,
+            self.repaired_stall_s,
+            self.static_stall_s,
+        )
+    }
+}
+
+/// Attribute lane time to repaired (inside a steal window) vs static.
+pub fn repair_attribution(trace: &Trace) -> RepairAttribution {
+    let evs = trace.events();
+    let mut out = RepairAttribution::default();
+    // steal windows per lane: [marker, end of the stolen write-back]
+    let mut windows: std::collections::HashMap<(u16, u16), Vec<(f64, f64)>> = Default::default();
+    for (i, e) in evs.iter().enumerate() {
+        match e.kind {
+            EventKind::Reroute => out.reroutes += 1,
+            EventKind::Steal => {
+                out.steals += 1;
+                let Label::Steal { tile, .. } = e.label else { continue };
+                let end = evs[i..]
+                    .iter()
+                    .find(|r| {
+                        r.device == e.device
+                            && r.stream == e.stream
+                            && r.kind == EventKind::D2H
+                            && r.label == Label::D2h(tile)
+                            && r.t0 >= e.t0
+                    })
+                    .map(|r| r.t1)
+                    .unwrap_or(e.t0);
+                windows.entry((e.device, e.stream)).or_default().push((e.t0, end));
+            }
+            _ => {}
+        }
+    }
+    // merge overlapping windows so abutting steals never double-count
+    for w in windows.values_mut() {
+        w.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mut merged: Vec<(f64, f64)> = Vec::with_capacity(w.len());
+        for &(a, b) in w.iter() {
+            match merged.last_mut() {
+                Some(m) if a <= m.1 => m.1 = m.1.max(b),
+                _ => merged.push((a, b)),
+            }
+        }
+        *w = merged;
+    }
+    let overlap = |lane: (u16, u16), t0: f64, t1: f64| -> f64 {
+        windows
+            .get(&lane)
+            .map(|w| {
+                w.iter().map(|&(a, b)| (t1.min(b) - t0.max(a)).max(0.0)).sum()
+            })
+            .unwrap_or(0.0)
+    };
+    for e in evs {
+        let dur = e.t1 - e.t0;
+        if dur <= 0.0 {
+            continue; // zero-duration markers
+        }
+        let inside = overlap((e.device, e.stream), e.t0, e.t1);
+        match e.kind {
+            EventKind::Stall(_) => {
+                out.repaired_stall_s += inside;
+                out.static_stall_s += dur - inside;
+            }
+            _ => out.repaired_busy_s += inside,
+        }
+    }
+    out
+}
+
 /// One job's plan-vs-actual start skew.
 #[derive(Debug, Clone, Copy)]
 pub struct JobDrift {
@@ -612,6 +722,56 @@ mod tests {
     #[test]
     fn critical_path_empty_trace_is_none() {
         assert!(critical_path(&Trace::new(true)).is_none());
+    }
+
+    #[test]
+    fn repair_attribution_windows_split_busy_and_stall() {
+        let t = Trace::new(true);
+        let tile = TileId::new(2, 1);
+        // static stall, then a steal window [1.0, 2.5] (work + write-back),
+        // then another static stall; a reroute marker on a sibling lane
+        t.record(ev(0, 0, K::Stall(StallCause::QueueEmpty), 0.0, 1.0));
+        t.record(Event {
+            device: 0,
+            stream: 0,
+            kind: K::Steal,
+            label: Label::Steal { tile, victim: 1 },
+            t0: 1.0,
+            t1: 1.0,
+        });
+        t.record(ev(0, 0, K::Work, 1.0, 2.0));
+        t.record(Event {
+            device: 0,
+            stream: 0,
+            kind: K::D2H,
+            label: Label::D2h(tile),
+            t0: 2.0,
+            t1: 2.5,
+        });
+        t.record(ev(0, 0, K::Stall(StallCause::QueueEmpty), 2.5, 3.0));
+        t.record(Event {
+            device: 0,
+            stream: 1,
+            kind: K::Reroute,
+            label: Label::Reroute { tile, src: 1 },
+            t0: 0.5,
+            t1: 0.5,
+        });
+        let r = repair_attribution(&t);
+        assert_eq!((r.steals, r.reroutes), (1, 1));
+        assert!((r.repaired_busy_s - 1.5).abs() < 1e-12, "{r:?}");
+        assert!(r.repaired_stall_s.abs() < 1e-12, "{r:?}");
+        assert!((r.static_stall_s - 1.5).abs() < 1e-12, "{r:?}");
+        assert!(r.render().contains("1 steals"));
+        assert_eq!(r.to_json().get("steals").as_f64(), Some(1.0));
+    }
+
+    #[test]
+    fn repair_attribution_empty_without_markers() {
+        let r = repair_attribution(&causal_trace());
+        assert_eq!((r.steals, r.reroutes), (0, 0));
+        assert!(r.repaired_busy_s == 0.0 && r.repaired_stall_s == 0.0);
+        assert!(r.static_stall_s > 0.0, "all stalls are static");
     }
 
     #[test]

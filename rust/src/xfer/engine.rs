@@ -9,6 +9,13 @@
 //! replays the same plan against a per-device virtual transfer stream
 //! (see `exec::model`). Keeping the state here lets both executors share
 //! identical cancellation and accounting semantics.
+//!
+//! Hybrid repair (work stealing) composes with the watermark without any
+//! engine-side special case: steals are same-device, so a stolen job's
+//! planned loads still land in the cache its thief reads from, and the
+//! victim's skip path calls [`XferEngine::on_job_start`] for the stolen
+//! position exactly as if it had run the job — triggers fire once per
+//! position and cancellation (`is_late`) keys off the same watermark.
 
 use std::collections::{BinaryHeap, HashSet};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
@@ -352,6 +359,22 @@ mod tests {
         e.on_job_start(0, 0, 0);
         let l = e.queues[0].try_pop().expect("one load planned");
         // compute races ahead of the consumer -> load is late
+        e.on_job_start(0, 0, l.consumer_pos + 1);
+        assert!(e.is_late(&l));
+    }
+
+    #[test]
+    fn skip_path_watermark_cancels_stolen_consumers_loads() {
+        // a victim stream skipping a stolen position still bumps the
+        // watermark via on_job_start, so planned loads for the stolen
+        // consumer cancel exactly as if the victim had run the job itself
+        let (_s, e) = engine(1);
+        e.on_job_start(0, 0, 0);
+        let l = e.queues[0].try_pop().expect("one load planned");
+        // victim skips the stolen consumer position (thief ran it) ...
+        e.on_job_start(0, 0, l.consumer_pos);
+        assert!(!e.is_late(&l), "load for the position being skipped is not yet late");
+        // ... and moves past it: the load can no longer beat demand
         e.on_job_start(0, 0, l.consumer_pos + 1);
         assert!(e.is_late(&l));
     }

@@ -56,8 +56,11 @@ pub struct PlannedLoad {
     /// logical bytes on the wire (ts² · precision width, from the
     /// compiled schedule) — what the residency budget charged this load
     pub bytes: u64,
-    /// the compiled route: where the engine should source this tile
-    /// (peer loads fall back to the host when the copy is gone)
+    /// the compiled route: where the engine should source this tile.
+    /// Peer loads fall back to the host when the copy is gone — unless a
+    /// dynamic fraction is enabled, in which case the executors first
+    /// probe the residency directory for a cheaper confirmed D2D source
+    /// (hybrid repair's reroute; the plan itself stays static)
     pub src: ReadSrc,
 }
 

@@ -75,6 +75,23 @@ fn model_smoke_run_ndev2_matches_golden() {
 }
 
 #[test]
+fn hybrid_half_dynamic_smoke_preserves_golden_metrics() {
+    // the chaos-gate invariant: with the repair layer live at
+    // --dynamic-fraction 0.5 but no perturbation injected, the ndev=1
+    // smoke counters stay byte-identical to the committed golden — on
+    // this shape (no evictions, no prefetch) every counted metric is
+    // order-invariant, so steals may reorder jobs but not move a counter
+    let cfg = RunConfig { dynamic_fraction: 0.5, ..smoke_cfg() };
+    let report = ooc::factorize(&cfg, None).unwrap();
+    let want = std::fs::read_to_string(golden_path()).unwrap();
+    assert_eq!(
+        report.golden_metrics_string(),
+        want,
+        "half-dynamic unperturbed smoke drifted from the static golden"
+    );
+}
+
+#[test]
 fn golden_run_is_deterministic_and_trace_invariant() {
     // enabling the trace (CI uploads it as an artifact) must not perturb
     // any counted metric

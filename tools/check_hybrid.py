@@ -1,0 +1,123 @@
+#!/usr/bin/env python3
+"""Chaos-gate assertions for the hybrid static/dynamic repair layer.
+
+Two independent modes, selected by the flags given:
+
+  Strict-win comparison (the Donfack-style claim: a dynamic tail absorbs
+  injected imbalance the static plan could not see):
+
+    check_hybrid.py --perturbed-static  static_report.json \\
+                    --perturbed-hybrid  hybrid_report.json \\
+                    [--require-steals] [--strict]
+
+  asserts hybrid elapsed_s <= static elapsed_s (strictly < with
+  --strict), and with --require-steals that the hybrid run actually
+  repaired (metrics.steals > 0).
+
+  Golden-match (the F-knob safety claim: repair must not move a counted
+  metric on the unperturbed smoke):
+
+    check_hybrid.py --metrics run_metrics.json \\
+                    --golden rust/tests/golden/smoke_metrics.json
+
+  asserts the metrics file is byte-identical to the committed golden
+  after both are parsed (and re-checks the raw bytes, so formatting
+  drift is caught too).
+
+Inputs are `--report-out` / `--metrics-out` files from the CLI.
+"""
+
+import argparse
+import json
+import sys
+
+
+def fail(msg):
+    print(f"check_hybrid: FAIL: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def load(path):
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except (OSError, ValueError) as e:
+        fail(f"cannot load {path}: {e}")
+
+
+def check_win(static_path, hybrid_path, require_steals, strict):
+    rs, rh = load(static_path), load(hybrid_path)
+    for name, r in (("static", rs), ("hybrid", rh)):
+        if "elapsed_s" not in r:
+            fail(f"{name} report has no elapsed_s (is this a --report-out file?)")
+    ts, th = rs["elapsed_s"], rh["elapsed_s"]
+    steals = rh.get("metrics", {}).get("steals", 0)
+    reroutes = rh.get("metrics", {}).get("reroutes", 0)
+    sf = rs.get("metrics", {}).get("steals", 0)
+    if sf != 0:
+        fail(f"static report stole {sf} times — is --dynamic-fraction really 0?")
+    if require_steals and steals <= 0:
+        fail(f"hybrid run never stole (steals={steals}) — repair layer inert")
+    if strict:
+        if not th < ts:
+            fail(f"hybrid makespan {th} did not strictly beat static {ts}")
+    elif not th <= ts:
+        fail(f"hybrid makespan {th} exceeds static {ts}")
+    gain = (1.0 - th / ts) * 100.0 if ts > 0 else 0.0
+    print(
+        f"check_hybrid: OK: hybrid {th:.9f}s vs static {ts:.9f}s "
+        f"({gain:+.2f}%), steals={steals} reroutes={reroutes}"
+    )
+
+
+def check_golden(metrics_path, golden_path):
+    got, want = load(metrics_path), load(golden_path)
+    if got != want:
+        drift = sorted(
+            k
+            for k in set(got) | set(want)
+            if got.get(k) != want.get(k)
+        )
+        for k in drift:
+            print(
+                f"  {k}: got {got.get(k)!r} want {want.get(k)!r}",
+                file=sys.stderr,
+            )
+        fail(f"{metrics_path} drifted from {golden_path} in {len(drift)} keys")
+    raw_got = open(metrics_path, "rb").read()
+    raw_want = open(golden_path, "rb").read()
+    if raw_got != raw_want:
+        fail(f"{metrics_path} semantically matches {golden_path} but bytes differ")
+    print(f"check_hybrid: OK: {metrics_path} byte-identical to {golden_path}")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--perturbed-static", help="report JSON of the F=0 perturbed run")
+    ap.add_argument("--perturbed-hybrid", help="report JSON of the F>0 perturbed run")
+    ap.add_argument("--require-steals", action="store_true",
+                    help="fail unless the hybrid run recorded steals")
+    ap.add_argument("--strict", action="store_true",
+                    help="require a strictly better hybrid makespan")
+    ap.add_argument("--metrics", help="metrics JSON of an unperturbed dynamic run")
+    ap.add_argument("--golden", help="committed golden metrics JSON")
+    args = ap.parse_args()
+
+    ran = False
+    if args.perturbed_static or args.perturbed_hybrid:
+        if not (args.perturbed_static and args.perturbed_hybrid):
+            ap.error("--perturbed-static and --perturbed-hybrid go together")
+        check_win(args.perturbed_static, args.perturbed_hybrid,
+                  args.require_steals, args.strict)
+        ran = True
+    if args.metrics or args.golden:
+        if not (args.metrics and args.golden):
+            ap.error("--metrics and --golden go together")
+        check_golden(args.metrics, args.golden)
+        ran = True
+    if not ran:
+        ap.error("nothing to check: pass the strict-win or golden-match flags")
+
+
+if __name__ == "__main__":
+    main()

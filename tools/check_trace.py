@@ -17,14 +17,49 @@ Structural checks (always):
 accounting invariant the DES guarantees: on every lane, busy + stall
 durations tile the lane's span with nothing unattributed, and the trace
 contains at least one attributed stall.
+
+Hybrid repair markers (cat "steal" / "reroute", zero-duration, emitted
+when --dynamic-fraction > 0) are validated structurally always (complete
+args, dur == 0), and causally under --exact: a stolen job's span — from
+the steal marker to the stolen tile's write-back ("d2h(r,c)") on the
+same lane — may only run kernels whose operand producers have already
+written back, i.e. each kernel slice starts no earlier than every
+operand's d2h end. Operands are derived from the kernel name:
+gemm(m,k,n) reads (m,n),(k,n); syrk(k,n) reads (k,n); trsm(m,k) reads
+(k,k); upd(i,j,k) reads (i,k),(j,k); potrf(k) reads nothing.
 """
 
 import json
+import re
 import sys
 
 CAUSES = {"dep", "xfer", "compute", "evict", "malloc", "idle"}
 # f64 summation noise over microsecond timestamps
 REL_TOL = 1e-6
+
+KERNEL_RE = re.compile(r"^(gemm|syrk|trsm|potrf|upd)\(([\d,]+)\)$")
+
+
+def kernel_operands(name):
+    """Tiles a kernel slice reads, from its rendered name (see module
+    doc); None when the name is not a kernel."""
+    m = KERNEL_RE.match(name)
+    if not m:
+        return None
+    op, idx = m.group(1), [int(x) for x in m.group(2).split(",")]
+    if op == "gemm":
+        mm, k, n = idx
+        return [(mm, n), (k, n)]
+    if op == "syrk":
+        k, n = idx
+        return [(k, n)]
+    if op == "trsm":
+        _, k = idx
+        return [(k, k)]
+    if op == "upd":
+        i, j, k = idx
+        return [(i, k), (j, k)]
+    return []  # potrf
 
 
 def fail(msg):
@@ -47,6 +82,10 @@ def main():
     lanes = {}  # (pid, tid) -> {"last_ts", "busy", "stall", "lo", "hi"}
     flows = {}  # id -> {"s": ts, "f": ts}
     n_stalls = 0
+    steals = []  # (lane, ts, row, col)
+    n_reroutes = 0
+    d2h_end = {}  # (row, col) -> write-back end ts
+    lane_slices = {}  # lane -> [(ts, dur, name, cat)]
 
     for idx, e in enumerate(doc):
         for key in ("name", "cat", "ph", "ts", "pid", "tid"):
@@ -76,8 +115,28 @@ def main():
                     fail(f"stall slice {idx} ({e['name']}) has bad cause {cause!r}")
                 lane["stall"] += e["dur"]
                 n_stalls += 1
+            elif e["cat"] in ("steal", "reroute"):
+                if e["dur"] != 0:
+                    fail(f"repair marker {idx} ({e['name']}) has dur {e['dur']} != 0")
+                a = e.get("args", {})
+                peer = "victim" if e["cat"] == "steal" else "src"
+                for key in ("row", "col", peer):
+                    if not isinstance(a.get(key), (int, float)) or a.get(key) < 0:
+                        fail(f"repair marker {idx} ({e['name']}) has bad args.{key}: {a}")
+                if e["cat"] == "steal":
+                    steals.append(((e["pid"], e["tid"]), e["ts"], int(a["row"]), int(a["col"])))
+                else:
+                    n_reroutes += 1
             else:
                 lane["busy"] += e["dur"]
+            if e["cat"] == "d2h":
+                m = re.match(r"^d2h\((\d+),(\d+)\)$", e["name"])
+                if m:
+                    tile = (int(m.group(1)), int(m.group(2)))
+                    d2h_end[tile] = max(d2h_end.get(tile, 0.0), e["ts"] + e["dur"])
+            lane_slices.setdefault((e["pid"], e["tid"]), []).append(
+                (e["ts"], e["dur"], e["name"], e["cat"])
+            )
         elif ph in ("s", "f"):
             if "id" not in e:
                 fail(f"flow event {idx} has no id")
@@ -105,11 +164,43 @@ def main():
                     f"--exact: lane pid={pid} tid={tid} has unattributed time: "
                     f"busy+stall {covered} != span {span}"
                 )
+        # stolen-span causality: from each steal marker to the stolen
+        # tile's write-back on the same lane, every kernel's operands
+        # must already be written back when the kernel starts
+        tol = max(REL_TOL * (lane["hi"] - lane["lo"]) for lane in lanes.values())
+        for lane, ts0, row, col in steals:
+            wb = [
+                s_ts + s_dur
+                for (s_ts, s_dur, s_name, s_cat) in lane_slices[lane]
+                if s_cat == "d2h" and s_name == f"d2h({row},{col})" and s_ts >= ts0
+            ]
+            if not wb:
+                fail(
+                    f"--exact: steal({row},{col}) marker at {ts0} on lane {lane} "
+                    f"has no stolen write-back on that lane"
+                )
+            t_end = min(wb)
+            for s_ts, s_dur, s_name, s_cat in lane_slices[lane]:
+                if s_cat != "work" or not (ts0 <= s_ts < t_end):
+                    continue
+                for op in kernel_operands(s_name) or []:
+                    if op not in d2h_end:
+                        fail(
+                            f"--exact: stolen-span kernel {s_name} on lane {lane} "
+                            f"reads {op} which has no write-back in the trace"
+                        )
+                    if s_ts < d2h_end[op] - tol:
+                        fail(
+                            f"--exact: stolen-span kernel {s_name} on lane {lane} "
+                            f"starts at {s_ts} before operand {op} was written "
+                            f"back at {d2h_end[op]} — steal violated a dependency"
+                        )
 
     n_x = sum(1 for e in doc if e["ph"] == "X")
+    repair = f", {len(steals)} steals/{n_reroutes} reroutes" if steals or n_reroutes else ""
     print(
         f"trace gate OK: {n_x} slices ({n_stalls} stalls) on {len(lanes)} lanes, "
-        f"{len(flows)} flow pairs{' [exact]' if exact else ''}"
+        f"{len(flows)} flow pairs{repair}{' [exact]' if exact else ''}"
     )
 
 
