@@ -181,12 +181,21 @@ impl RunReport {
             ("prefetch_late", m.prefetch_late),
             ("total_bytes", m.total_bytes()),
         ];
-        let mut s = String::from("{\n");
-        for (i, (k, v)) in fields.iter().enumerate() {
-            let comma = if i + 1 < fields.len() { "," } else { "" };
-            s.push_str(&format!("  \"{k}\": {v}{comma}\n"));
-        }
-        s.push_str("}\n");
-        s
+        golden_counter_block(&fields)
     }
+}
+
+/// Render a sorted `(key, counter)` list as the canonical golden JSON
+/// block: two-space indent, integers only, trailing newline — the exact
+/// byte format CI diffs. Shared by the factorize golden
+/// ([`RunReport::golden_metrics_string`]) and the serve-gate golden
+/// ([`crate::serve::ServeReport::golden_string`]).
+pub fn golden_counter_block(fields: &[(&str, u64)]) -> String {
+    let mut s = String::from("{\n");
+    for (i, (k, v)) in fields.iter().enumerate() {
+        let comma = if i + 1 < fields.len() { "," } else { "" };
+        s.push_str(&format!("  \"{k}\": {v}{comma}\n"));
+    }
+    s.push_str("}\n");
+    s
 }

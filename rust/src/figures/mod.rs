@@ -11,6 +11,7 @@ pub mod fig8;
 pub mod fig9;
 pub mod hybrid;
 pub mod scaling;
+pub mod throughput;
 
 pub use ablation::{
     ablation_all, ablation_eviction, ablation_looking, ablation_ndev, ablation_policy,
@@ -23,6 +24,7 @@ pub use fig8::fig8_volumes;
 pub use fig9::fig9_multi_gpu;
 pub use hybrid::hybrid;
 pub use scaling::scaling;
+pub use throughput::throughput;
 
 mod mxp;
 pub use mxp::{fig11_mxp_perf, fig12_mxp_volumes, fig13_mxp_traces};

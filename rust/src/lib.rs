@@ -30,7 +30,8 @@
 //! | [`exec`] | the two executors: [`exec::real`] (PJRT kernels) and [`exec::model`] (DES) |
 //! | [`metrics`] | exact counted volumes, split per precision in all three directions (h2d/d2h/d2d) |
 //! | [`ooc`] | front-door drivers: workload → precision map → factorize |
-//! | [`figures`] | paper-figure harnesses (Figs. 6–13, the gh200-quad scaling sweep) + ablations |
+//! | [`serve`] | multi-tenant serving: Poisson job queue → quota admission → per-job IR on shared engine clocks, with cross-job clean-tile reuse |
+//! | [`figures`] | paper-figure harnesses (Figs. 6–13, the gh200-quad scaling sweep, latency-vs-load) + ablations |
 //! | [`mle`], [`refine`], [`tune`], [`trace`], [`baseline`], [`runtime`], [`util`] | MLE demo, iterative refinement, tile autotuner, event traces, host oracle, PJRT/host backends, support code |
 //!
 //! **Byte-width invariant** (the paper's §IV-C data-movement economics):
@@ -56,6 +57,7 @@ pub mod precision;
 pub mod refine;
 pub mod runtime;
 pub mod sched;
+pub mod serve;
 pub mod tiles;
 pub mod trace;
 pub mod tune;

@@ -10,7 +10,8 @@
 //!                        [--beta 0.078809] [--prefetch-depth 4] [--trace]
 //!                        [--verify] [--config file.json]
 //! ooc-cholesky profile   [factorize flags]   # traced run + stall/critical-path report
-//! ooc-cholesky figure <6|7|8|9|10|11|12|13|scaling|hybrid|all> [--quick]
+//! ooc-cholesky figure <6|7|8|9|10|11|12|13|scaling|hybrid|throughput|all> [--quick]
+//! ooc-cholesky serve   [--tenants 2] [--jobs-per-tenant 3] [--rate 200] ...
 //! ooc-cholesky mle     [--n 1024] [--ts 128] [--beta ...]    # end-to-end MLE demo
 //! ooc-cholesky kl      [--n 1024] [--ts 128]                 # KL accuracy sweep
 //! ooc-cholesky artifacts                                      # list compiled kernels
@@ -39,6 +40,7 @@ fn run() -> Result<()> {
         "factorize" => cmd_factorize(args),
         "profile" => cmd_profile(args),
         "figure" => cmd_figure(args),
+        "serve" => cmd_serve(args),
         "mle" => cmd_mle(args),
         "kl" => cmd_kl(args),
         "export" => cmd_export(args),
@@ -63,7 +65,11 @@ USAGE:
                                      (accepts every factorize flag; tracing
                                      is forced on)
   ooc-cholesky figure <id> [--quick] regenerate a paper figure (6..13,
-                                     scaling, hybrid, or all)
+                                     scaling, hybrid, throughput, or all)
+  ooc-cholesky serve [flags]         multi-tenant serving DES: a seeded
+                                     Poisson mix of factorize/solve jobs
+                                     through quota admission onto shared
+                                     devices, with cross-job tile reuse
   ooc-cholesky mle [flags]           end-to-end geospatial MLE demo
   ooc-cholesky kl [flags]            MxP KL-divergence accuracy sweep
   ooc-cholesky export [flags]        factorize and write the factor as .npy
@@ -118,6 +124,27 @@ FACTORIZE FLAGS:
   --trace            record + print the event timeline
   --verify           check the factor against the host oracle (n<=8192)
   --config FILE      JSON config (flags override)
+
+SERVE FLAGS:
+  --tenants T        quota partitions sharing the box (default 2)
+  --jobs-per-tenant J jobs per tenant: first factorizes, rest solve
+                     (default 3)
+  --n N --ts T       per-job matrix/tile size (defaults 1024/128)
+  --ndev D           devices in the shared pool (default 2)
+  --streams S        streams per device per factorize job (default 4)
+  --quota-mib Q      per-tenant vmem quota per device (default 64);
+                     jobs bigger than the quota shard across all peers
+  --rate R           offered load, jobs/s, open-loop Poisson (default 200)
+  --seed S           arrival-process seed (default 42)
+  --deadline-ms D    per-job latency deadline (default none)
+  --threads N        IR compile threads; the serve DES is bit-identical
+                     for every value (default 1)
+  --no-reuse         cold-start tenant caches at every admission — the
+                     serial baseline the CI serve gate compares against
+  --hw H             a100|h100|gh200|gh200-quad profile (default gh200)
+  --metrics-out F    write the mix's counters as canonical golden JSON
+  --report-out F     write the full serve report (per-job rows, latency
+                     percentiles, totals) as JSON
 ";
 
 /// Parse `--key value` / `--flag` pairs into the config.
@@ -396,6 +423,7 @@ fn cmd_figure(mut args: VecDeque<String>) -> Result<()> {
             }
             "scaling" => figures::scaling(if quick { 64 * 1024 } else { 160 * 1024 }, 2048)?,
             "hybrid" => figures::hybrid(quick)?,
+            "throughput" => figures::throughput(quick)?,
             other => bail!("unknown figure {other:?}"),
         };
         // numeric ids land as fig<N>.json; named harnesses keep their name
@@ -409,13 +437,103 @@ fn cmd_figure(mut args: VecDeque<String>) -> Result<()> {
         Ok(())
     };
     if id == "all" {
-        for id in ["6", "7", "8", "9", "10", "11", "12", "13", "scaling", "hybrid"] {
+        for id in ["6", "7", "8", "9", "10", "11", "12", "13", "scaling", "hybrid", "throughput"] {
             run_one(id)?;
         }
         Ok(())
     } else {
         run_one(&id)
     }
+}
+
+/// `serve`: run a seeded multi-tenant job mix through the serving DES
+/// and print the per-job table + summary. `--metrics-out` writes the
+/// canonical golden counters CI diffs (serve-gate).
+fn cmd_serve(args: VecDeque<String>) -> Result<()> {
+    use ooc_cholesky::serve::{self, ServeConfig};
+
+    let (out, mut args) = peel_out_paths(args)?;
+    if out.trace.is_some() || out.stalls.is_some() {
+        bail!("serve records no trace; only --metrics-out / --report-out apply");
+    }
+    let mut scfg = ServeConfig::default();
+    let (mut tenants, mut jobs_per_tenant) = (2usize, 3usize);
+    let (mut n, mut ts) = (1024usize, 128usize);
+    let (mut rate, mut seed) = (200.0f64, 42u64);
+    let mut deadline = f64::INFINITY;
+    let next = |args: &mut VecDeque<String>, key: &str| -> Result<String> {
+        args.pop_front().ok_or_else(|| anyhow!("{key} needs a value"))
+    };
+    while let Some(a) = args.pop_front() {
+        match a.as_str() {
+            "--tenants" => tenants = next(&mut args, "--tenants")?.parse()?,
+            "--jobs-per-tenant" => {
+                jobs_per_tenant = next(&mut args, "--jobs-per-tenant")?.parse()?
+            }
+            "--n" => n = next(&mut args, "--n")?.parse()?,
+            "--ts" => ts = next(&mut args, "--ts")?.parse()?,
+            "--ndev" => scfg.ndev = next(&mut args, "--ndev")?.parse()?,
+            "--streams" => scfg.streams_per_dev = next(&mut args, "--streams")?.parse()?,
+            "--quota-mib" => {
+                scfg.quota_bytes = next(&mut args, "--quota-mib")?.parse::<u64>()? * 1024 * 1024
+            }
+            "--rate" => rate = next(&mut args, "--rate")?.parse()?,
+            "--seed" => seed = next(&mut args, "--seed")?.parse()?,
+            "--deadline-ms" => deadline = next(&mut args, "--deadline-ms")?.parse::<f64>()? / 1e3,
+            "--threads" => scfg.threads = next(&mut args, "--threads")?.parse()?,
+            "--no-reuse" => scfg.reuse = false,
+            "--hw" => {
+                scfg.hw = HwProfile::by_name(&next(&mut args, "--hw")?).context("bad --hw")?
+            }
+            other => bail!("unknown flag {other:?}"),
+        }
+    }
+    let reqs = serve::poisson_mix(tenants, jobs_per_tenant, n, ts, rate, seed, deadline);
+    let report = serve::run(&scfg, &reqs)?;
+    println!(
+        "{:<4} {:>6} {:<9} {:>8} {:>10} {:>12} {:>12} {:>10} {:>10}",
+        "job", "tenant", "kind", "devs", "arrive ms", "latency ms", "H2D", "hits", "reuse"
+    );
+    for (i, o) in report.per_job.iter().enumerate() {
+        if o.rejected {
+            println!(
+                "{i:<4} {:>6} {:<9} {:>8} {:>10.3} {:>12} {:>12} {:>10} {:>10}  REJECTED: {}",
+                o.tenant,
+                o.kind.name(),
+                "-",
+                o.arrival * 1e3,
+                "-",
+                "-",
+                "-",
+                "-",
+                o.reject_reason.as_deref().unwrap_or("?"),
+            );
+        } else {
+            println!(
+                "{i:<4} {:>6} {:<9} {:>8} {:>10.3} {:>12.3} {:>12} {:>10} {:>10}",
+                o.tenant,
+                o.kind.name(),
+                format!("{:?}", o.devices),
+                o.arrival * 1e3,
+                o.latency() * 1e3,
+                ooc_cholesky::util::human_bytes(o.metrics.h2d_bytes),
+                o.metrics.cache_hits,
+                o.cross_job_hits,
+            );
+        }
+    }
+    println!("{}", report.summary_line());
+    if let Some(path) = &out.metrics {
+        std::fs::write(path, report.golden_string())
+            .with_context(|| format!("writing {path:?}"))?;
+        println!("(serve metrics JSON at {path:?})");
+    }
+    if let Some(path) = &out.report {
+        std::fs::write(path, report.to_json().pretty())
+            .with_context(|| format!("writing {path:?}"))?;
+        println!("(serve report at {path:?})");
+    }
+    Ok(())
 }
 
 fn cmd_mle(args: VecDeque<String>) -> Result<()> {

@@ -321,6 +321,93 @@ impl MetricsSnapshot {
     }
 }
 
+impl MetricsSnapshot {
+    /// Field-wise sum of every counter in `other` into `self` — the
+    /// serve layer's per-job snapshots roll up into mix totals this way.
+    pub fn accumulate(&mut self, o: &MetricsSnapshot) {
+        self.h2d_bytes += o.h2d_bytes;
+        self.d2h_bytes += o.d2h_bytes;
+        self.d2d_bytes += o.d2d_bytes;
+        for p in 0..4 {
+            self.h2d_by_prec[p] += o.h2d_by_prec[p];
+            self.d2h_by_prec[p] += o.d2h_by_prec[p];
+            self.d2d_by_prec[p] += o.d2d_by_prec[p];
+        }
+        self.h2d_transfers += o.h2d_transfers;
+        self.d2h_transfers += o.d2h_transfers;
+        self.d2d_transfers += o.d2d_transfers;
+        self.cache_hits += o.cache_hits;
+        self.cache_misses += o.cache_misses;
+        self.cache_evictions += o.cache_evictions;
+        self.n_potrf += o.n_potrf;
+        self.n_trsm += o.n_trsm;
+        self.n_gemm += o.n_gemm;
+        self.n_syrk += o.n_syrk;
+        self.device_allocs += o.device_allocs;
+        self.device_frees += o.device_frees;
+        self.flops += o.flops;
+        self.prefetch_issued += o.prefetch_issued;
+        self.prefetch_hits += o.prefetch_hits;
+        self.prefetch_late += o.prefetch_late;
+        self.prefetch_dropped += o.prefetch_dropped;
+        self.xfer_busy_ns += o.xfer_busy_ns;
+        self.deps_static += o.deps_static;
+        self.deps_waited += o.deps_waited;
+        self.dep_wait_ns += o.dep_wait_ns;
+        self.evict_wait_ns += o.evict_wait_ns;
+        self.steals += o.steals;
+        self.reroutes += o.reroutes;
+        self.repair_gain_est_ns += o.repair_gain_est_ns;
+    }
+}
+
+/// Order statistics over a set of per-job latencies (integer ns, so the
+/// serve golden and the throughput figure stay byte-stable across
+/// platforms). Percentiles use the nearest-rank definition: p(q) is the
+/// smallest sample with at least ⌈q·N/100⌉ samples ≤ it.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct LatencyStats {
+    pub count: u64,
+    pub mean_ns: u64,
+    pub p50_ns: u64,
+    pub p99_ns: u64,
+    pub max_ns: u64,
+}
+
+impl LatencyStats {
+    pub fn from_ns(mut samples: Vec<u64>) -> LatencyStats {
+        if samples.is_empty() {
+            return LatencyStats::default();
+        }
+        samples.sort_unstable();
+        let n = samples.len();
+        LatencyStats {
+            count: n as u64,
+            mean_ns: samples.iter().sum::<u64>() / n as u64,
+            p50_ns: nearest_rank(&samples, 50.0),
+            p99_ns: nearest_rank(&samples, 99.0),
+            max_ns: samples[n - 1],
+        }
+    }
+
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        Json::obj(vec![
+            ("count", Json::num(self.count as f64)),
+            ("mean_ms", Json::num(self.mean_ns as f64 / 1e6)),
+            ("p50_ms", Json::num(self.p50_ns as f64 / 1e6)),
+            ("p99_ms", Json::num(self.p99_ns as f64 / 1e6)),
+            ("max_ms", Json::num(self.max_ns as f64 / 1e6)),
+        ])
+    }
+}
+
+/// Nearest-rank percentile over an ascending-sorted slice.
+fn nearest_rank(sorted: &[u64], q: f64) -> u64 {
+    let rank = (q / 100.0 * sorted.len() as f64).ceil() as usize;
+    sorted[rank.clamp(1, sorted.len()) - 1]
+}
+
 /// Expected task counts for an Nt-tile left-looking Cholesky — used by
 /// invariants in tests: POTRF = Nt, TRSM = Nt(Nt−1)/2,
 /// SYRK = Nt(Nt−1)/2, GEMM = Nt(Nt−1)(Nt−2)/6.
@@ -383,6 +470,43 @@ mod tests {
         assert!(j.get("steals").as_f64().is_some());
         assert!(j.get("reroutes").as_f64().is_some());
         assert!(j.get("repair_gain_est_s").as_f64().is_some());
+    }
+
+    #[test]
+    fn latency_stats_nearest_rank() {
+        let s = LatencyStats::from_ns((1..=100).collect());
+        assert_eq!(s.count, 100);
+        assert_eq!(s.p50_ns, 50, "p50 of 1..=100 is the 50th sample");
+        assert_eq!(s.p99_ns, 99);
+        assert_eq!(s.max_ns, 100);
+        assert_eq!(s.mean_ns, 50, "integer mean of 1..=100 (5050/100)");
+        // order-independence: from_ns sorts internally
+        let s2 = LatencyStats::from_ns((1..=100).rev().collect());
+        assert_eq!(s, s2);
+        // small sets: nearest-rank, never interpolated
+        let s = LatencyStats::from_ns(vec![30, 10, 20]);
+        assert_eq!(s.p50_ns, 20, "ceil(0.5*3)=2nd sample");
+        assert_eq!(s.p99_ns, 30, "ceil(0.99*3)=3rd sample");
+        // singleton and empty
+        assert_eq!(LatencyStats::from_ns(vec![7]).p99_ns, 7);
+        assert_eq!(LatencyStats::from_ns(vec![]), LatencyStats::default());
+    }
+
+    #[test]
+    fn snapshot_accumulate_sums_counters() {
+        let m = Metrics::new();
+        m.record_h2d(100, Precision::F32);
+        m.record_d2h(40, Precision::F64);
+        m.record_task(TaskOp::Syrk, 32);
+        let a = m.snapshot();
+        let mut tot = MetricsSnapshot::default();
+        tot.accumulate(&a);
+        tot.accumulate(&a);
+        assert_eq!(tot.h2d_bytes, 200);
+        assert_eq!(tot.h2d_by_prec[2], 200);
+        assert_eq!(tot.d2h_transfers, 2);
+        assert_eq!(tot.n_syrk, 2);
+        assert_eq!(tot.flops, 2 * 32 * 32 * 32);
     }
 
     #[test]

@@ -184,6 +184,53 @@ mod tests {
     }
 
     #[test]
+    fn higham_mary_bound_is_inclusive_at_the_boundary() {
+        // nt=2 with norms [2, 1, 2]: ‖A‖_F = 3 exactly, so the single
+        // off-diagonal tile's ratio Nt·‖A_10‖/‖A‖ = 2/3 is computed
+        // bit-identically here and inside the selector, and every eps is
+        // a power of two — the boundary comparisons below are exact, not
+        // approximate
+        let norms = vec![2.0, 1.0, 2.0];
+        let ratio = 2.0 * 1.0 / 3.0;
+        let next_up = |p: Precision| match p {
+            Precision::F8 => Precision::F16,
+            Precision::F16 => Precision::F32,
+            _ => Precision::F64,
+        };
+        for p in [Precision::F8, Precision::F16, Precision::F32] {
+            // ε_high exactly at the bound: ratio == ε_high/ε_p is admitted
+            // (the paper's criterion is ≤, not <)
+            let at = select_precisions(2, &norms, ratio * p.eps(), &ALL_PRECISIONS);
+            assert_eq!(at.get(1, 0), p, "inclusive boundary must admit {p:?}");
+            // anything below the bound refuses p and falls to the next
+            // precision up
+            let below = select_precisions(2, &norms, ratio * p.eps() * 0.5, &ALL_PRECISIONS);
+            assert_eq!(below.get(1, 0), next_up(p), "{p:?} admitted below its bound");
+        }
+        // below even F64's bound nothing qualifies: the selector keeps its
+        // F64 fallback rather than violating the criterion downward
+        let none =
+            select_precisions(2, &norms, ratio * Precision::F64.eps() * 0.5, &ALL_PRECISIONS);
+        assert_eq!(none.get(1, 0), Precision::F64);
+    }
+
+    #[test]
+    fn restricted_set_takes_lowest_enabled_at_the_boundary() {
+        // an accuracy loose enough for F8 must land on F16 when F8 is not
+        // in the enabled set — the bound picks the lowest *enabled*
+        // precision, never an excluded one
+        let norms = vec![2.0, 1.0, 2.0];
+        let ratio = 2.0 * 1.0 / 3.0;
+        let pm = select_precisions(
+            2,
+            &norms,
+            ratio * Precision::F8.eps(),
+            &[Precision::F16, Precision::F64],
+        );
+        assert_eq!(pm.get(1, 0), Precision::F16);
+    }
+
+    #[test]
     fn zero_matrix_stays_f64() {
         let pm = select_precisions(4, &vec![0.0; 10], 1e-5, &ALL_PRECISIONS);
         assert_eq!(pm.histogram(), [0, 0, 0, 10]);

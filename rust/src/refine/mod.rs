@@ -210,4 +210,28 @@ mod tests {
             r.residual_history
         );
     }
+
+    #[test]
+    fn refinement_contracts_every_sweep() {
+        // the per-sweep property behind the headline: while above the
+        // tolerance, every refinement sweep strictly shrinks the
+        // residual — the geometric decay iterative refinement promises
+        // whenever the factor's backward error is well below 1. (Plateaus
+        // are only legal at the f64 noise floor, which the tolerance
+        // sits far above.)
+        let (a, factor, n) = factor_pair(Some(1e-5));
+        let mut rng = crate::util::rng::Rng::new(13);
+        let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let tol = 1e-11;
+        let r = refine(&a, &factor, &b, tol, 30);
+        assert!(r.converged, "{:?}", r.residual_history);
+        let h = &r.residual_history;
+        assert!(h.len() >= 2, "MxP factor converged with no refinement sweep: {h:?}");
+        for w in h.windows(2) {
+            if w[0] <= tol {
+                break; // already converged; later entries may sit on the noise floor
+            }
+            assert!(w[1] < w[0], "sweep failed to contract the residual: {h:?}");
+        }
+    }
 }

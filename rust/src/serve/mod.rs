@@ -1,0 +1,344 @@
+//! Multi-tenant serve mode: many factorization/solve jobs sharing one
+//! box's devices, links, and tile caches.
+//!
+//! The paper's pipeline factors one matrix at a time; the serving layer
+//! generalizes it to a *traffic* model (ROADMAP open item 2): an
+//! open-loop job queue ([`poisson_mix`]) feeds an admission controller
+//! with per-tenant vmem quotas, and every admitted job is compiled
+//! through the same arena IR ([`crate::sched::CompiledSchedule`]) the
+//! single-run executors use. Jobs then interleave on **shared** engine
+//! clocks — each device's H2D/D2H/compute engines are one
+//! [`DeviceClocks`](crate::exec::model) instance serving every tenant —
+//! exactly the independent-DAG task-stream interleaving of Jacquelin et
+//! al. (arXiv:1608.00044), with the per-job plans kept static in the
+//! Donfack et al. (arXiv:1110.2677) sense.
+//!
+//! Isolation vs sharing:
+//! * every tenant gets its **own** [`CacheTable`](crate::cache) slice of
+//!   each device (capacity = its quota) and its own
+//!   [`ResidencyDirectory`](crate::cache::ResidencyDirectory) — one
+//!   tenant can never evict another's tiles;
+//! * **within** a tenant, clean factor tiles survive between jobs, so a
+//!   solve (or re-factorization) of a dataset the previous job touched
+//!   reuses resident tiles instead of re-crossing the host link. These
+//!   are the `cross_job_hits` the serve gate pins: with reuse enabled
+//!   the mix must move strictly fewer H2D bytes than the same jobs run
+//!   back-to-back with cold caches.
+//!
+//! Placement packs small jobs onto single devices (least-committed-bytes
+//! first, then dataset affinity so reuse can actually happen) and shards
+//! a job across all peers via the existing [`LinkModel`](crate::config)
+//! routing when its working set exceeds the tenant quota.
+//!
+//! The DES lives in [`sim`]; it is single-threaded and seeded, so a
+//! fixed request list is bit-identical across runs and across compiler
+//! `--threads` values (pinned by `rust/tests/serve.rs`).
+
+pub mod sim;
+
+pub use sim::run;
+
+use crate::config::HwProfile;
+use crate::exec::golden_counter_block;
+use crate::metrics::{LatencyStats, MetricsSnapshot};
+use crate::precision::Precision;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// What a request asks the box to do with its dataset.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JobKind {
+    /// Tile Cholesky of the dataset (left-looking, operand-cached).
+    Factorize,
+    /// Triangular-solve sweep against the dataset's factor tiles (the
+    /// data-movement shape of an MLE likelihood evaluation: every factor
+    /// tile is read once, nothing is written back).
+    Solve,
+}
+
+impl JobKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            JobKind::Factorize => "factorize",
+            JobKind::Solve => "solve",
+        }
+    }
+}
+
+/// One job in the queue.
+#[derive(Debug, Clone, Copy)]
+pub struct JobRequest {
+    /// quota/cache partition this job charges
+    pub tenant: usize,
+    /// tenant-local dataset id: jobs naming the same dataset share tile
+    /// identity (and therefore resident-tile reuse)
+    pub dataset: usize,
+    pub kind: JobKind,
+    /// matrix size (must be a multiple of `ts`)
+    pub n: usize,
+    /// tile edge
+    pub ts: usize,
+    /// precision target: storage precision of off-diagonal tiles
+    /// (diagonals stay F64, the paper's invariant)
+    pub offdiag: Precision,
+    /// arrival time, virtual seconds (open-loop: fixed at generation)
+    pub arrival: f64,
+    /// latency deadline in seconds (∞ = none); a finished job past it
+    /// counts as a deadline miss, it is not killed
+    pub deadline: f64,
+}
+
+/// Serve-layer knobs (per mix, not per job).
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// devices in the shared pool
+    pub ndev: usize,
+    pub streams_per_dev: usize,
+    pub hw: HwProfile,
+    /// per-tenant device-memory quota, bytes **per device** — the
+    /// capacity of each of the tenant's cache slices and the packing
+    /// threshold (a job bigger than this shards across all peers)
+    pub quota_bytes: u64,
+    /// worker-thread cap for the per-job IR compiles; the IR (and hence
+    /// the whole serve DES) is identical for every value
+    pub threads: usize,
+    /// cross-job clean-tile reuse. `false` cold-starts the tenant's
+    /// caches at every admission — each job then counts exactly what it
+    /// would have run solo (the serial baseline the CI gate compares
+    /// against).
+    pub reuse: bool,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            ndev: 2,
+            streams_per_dev: 4,
+            hw: HwProfile::gh200_nvlc2c(),
+            quota_bytes: 64 << 20,
+            threads: 1,
+            reuse: true,
+        }
+    }
+}
+
+/// Seeded open-loop request generator: one global Poisson arrival
+/// process at `rate` jobs/s, tenants drawn round-robin. Each tenant's
+/// first job factorizes its dataset 0; every later job solves against
+/// it — the steady-state MLE traffic shape. Odd tenants store
+/// off-diagonal tiles in F32 (mixed-precision traffic), even tenants in
+/// F64, so a two-tenant mix exercises both storage paths.
+pub fn poisson_mix(
+    tenants: usize,
+    jobs_per_tenant: usize,
+    n: usize,
+    ts: usize,
+    rate: f64,
+    seed: u64,
+    deadline: f64,
+) -> Vec<JobRequest> {
+    assert!(rate > 0.0, "offered load must be positive");
+    let mut rng = Rng::new(seed);
+    let mut t = 0.0f64;
+    let mut count = vec![0usize; tenants.max(1)];
+    let mut reqs = Vec::with_capacity(tenants * jobs_per_tenant);
+    for i in 0..tenants * jobs_per_tenant {
+        // exponential inter-arrival; 1-u ∈ (0,1] keeps ln finite
+        t += -(1.0 - rng.uniform()).ln() / rate;
+        let tenant = i % tenants;
+        let kind = if count[tenant] == 0 { JobKind::Factorize } else { JobKind::Solve };
+        count[tenant] += 1;
+        let offdiag = if tenant % 2 == 0 { Precision::F64 } else { Precision::F32 };
+        reqs.push(JobRequest { tenant, dataset: 0, kind, n, ts, offdiag, arrival: t, deadline });
+    }
+    reqs
+}
+
+/// Per-job result row (one per request, submission order).
+#[derive(Debug, Clone)]
+pub struct JobOutcome {
+    pub tenant: usize,
+    pub dataset: usize,
+    pub kind: JobKind,
+    /// admission controller said no (quota too small, bad shape, or a
+    /// dataset shape conflict); counters are all zero
+    pub rejected: bool,
+    pub reject_reason: Option<String>,
+    /// ran across the whole device pool instead of packed on one
+    pub sharded: bool,
+    /// physical devices the job ran on
+    pub devices: Vec<usize>,
+    pub arrival: f64,
+    /// admission instant: arrival, or the tenant's previous job's
+    /// completion if that came later (one running job per tenant)
+    pub start: f64,
+    pub done: f64,
+    /// reads served by tiles a *previous* job left in the tenant's cache
+    pub cross_job_hits: u64,
+    pub metrics: MetricsSnapshot,
+}
+
+impl JobOutcome {
+    /// Queueing + service time, seconds.
+    pub fn latency(&self) -> f64 {
+        self.done - self.arrival
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut fields = vec![
+            ("tenant", Json::num(self.tenant as f64)),
+            ("dataset", Json::num(self.dataset as f64)),
+            ("kind", Json::str(self.kind.name())),
+            ("rejected", Json::num(u64::from(self.rejected) as f64)),
+            ("sharded", Json::num(u64::from(self.sharded) as f64)),
+            ("devices", Json::arr(self.devices.iter().map(|&d| Json::num(d as f64)))),
+            ("arrival_s", Json::num(self.arrival)),
+            ("start_s", Json::num(self.start)),
+            ("done_s", Json::num(self.done)),
+            ("latency_ms", Json::num(self.latency() * 1e3)),
+            ("cross_job_hits", Json::num(self.cross_job_hits as f64)),
+            ("h2d_bytes", Json::num(self.metrics.h2d_bytes as f64)),
+            ("d2d_bytes", Json::num(self.metrics.d2d_bytes as f64)),
+            ("cache_hits", Json::num(self.metrics.cache_hits as f64)),
+            ("cache_misses", Json::num(self.metrics.cache_misses as f64)),
+        ];
+        if let Some(r) = &self.reject_reason {
+            fields.push(("reject_reason", Json::str(r)));
+        }
+        Json::obj(fields)
+    }
+}
+
+/// Everything one serve run reports.
+#[derive(Debug, Clone)]
+pub struct ServeReport {
+    /// one row per request, submission order (rejected rows included)
+    pub per_job: Vec<JobOutcome>,
+    /// field-wise sum of every completed job's counters
+    pub totals: MetricsSnapshot,
+    /// completed-job latency order statistics
+    pub latency: LatencyStats,
+    /// virtual time the last job finished
+    pub makespan: f64,
+    pub completed: usize,
+    pub rejected: usize,
+    pub deadline_misses: usize,
+    /// Σ per-job cross-job reuse hits
+    pub cross_job_hits: u64,
+    /// per tenant: max bytes resident in any single device slice — the
+    /// quota invariant the property tests pin (`≤ quota_bytes` always)
+    pub tenant_peak_resident: Vec<u64>,
+    pub tenant_quota: u64,
+}
+
+impl ServeReport {
+    pub fn submitted(&self) -> usize {
+        self.per_job.len()
+    }
+
+    /// Completed jobs per virtual second.
+    pub fn throughput_jps(&self) -> f64 {
+        if self.makespan > 0.0 {
+            self.completed as f64 / self.makespan
+        } else {
+            0.0
+        }
+    }
+
+    /// Canonical integer-only counters for the CI serve gate — same
+    /// byte format as the factorize golden (sorted keys, two-space
+    /// indent, plain-`diff`-able). Only order- and timing-invariant
+    /// counters: no latencies, no clocks.
+    pub fn golden_string(&self) -> String {
+        let t = &self.totals;
+        let fields: [(&str, u64); 16] = [
+            ("cache_evictions", t.cache_evictions),
+            ("cache_hits", t.cache_hits),
+            ("cache_misses", t.cache_misses),
+            ("cross_job_hits", self.cross_job_hits),
+            ("d2d_bytes", t.d2d_bytes),
+            ("d2h_bytes", t.d2h_bytes),
+            ("d2h_transfers", t.d2h_transfers),
+            ("h2d_bytes", t.h2d_bytes),
+            ("h2d_transfers", t.h2d_transfers),
+            ("jobs_completed", self.completed as u64),
+            ("jobs_rejected", self.rejected as u64),
+            ("jobs_submitted", self.submitted() as u64),
+            ("n_gemm", t.n_gemm),
+            ("n_potrf", t.n_potrf),
+            ("n_syrk", t.n_syrk),
+            ("n_trsm", t.n_trsm),
+        ];
+        golden_counter_block(&fields)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("jobs_submitted", Json::num(self.submitted() as f64)),
+            ("jobs_completed", Json::num(self.completed as f64)),
+            ("jobs_rejected", Json::num(self.rejected as f64)),
+            ("deadline_misses", Json::num(self.deadline_misses as f64)),
+            ("makespan_s", Json::num(self.makespan)),
+            ("throughput_jps", Json::num(self.throughput_jps())),
+            ("cross_job_hits", Json::num(self.cross_job_hits as f64)),
+            ("latency", self.latency.to_json()),
+            (
+                "tenant_peak_resident",
+                Json::arr(self.tenant_peak_resident.iter().map(|&b| Json::num(b as f64))),
+            ),
+            ("tenant_quota", Json::num(self.tenant_quota as f64)),
+            ("totals", self.totals.to_json()),
+            ("per_job", Json::arr(self.per_job.iter().map(|o| o.to_json()))),
+        ])
+    }
+
+    pub fn summary_line(&self) -> String {
+        format!(
+            "serve {} jobs ({} ok, {} rejected) | makespan {:.3}s {:.1} jobs/s | p50 {:.2}ms p99 {:.2}ms | H2D {} D2H {} D2D {} | reuse hits {} | deadline misses {}",
+            self.submitted(),
+            self.completed,
+            self.rejected,
+            self.makespan,
+            self.throughput_jps(),
+            self.latency.p50_ns as f64 / 1e6,
+            self.latency.p99_ns as f64 / 1e6,
+            crate::util::human_bytes(self.totals.h2d_bytes),
+            crate::util::human_bytes(self.totals.d2h_bytes),
+            crate::util::human_bytes(self.totals.d2d_bytes),
+            self.cross_job_hits,
+            self.deadline_misses,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poisson_mix_shape() {
+        let reqs = poisson_mix(2, 3, 1024, 128, 200.0, 42, f64::INFINITY);
+        assert_eq!(reqs.len(), 6);
+        // round-robin tenants, first job per tenant factorizes
+        assert_eq!(reqs[0].tenant, 0);
+        assert_eq!(reqs[1].tenant, 1);
+        assert_eq!(reqs[0].kind, JobKind::Factorize);
+        assert_eq!(reqs[1].kind, JobKind::Factorize);
+        assert!(reqs[2..].iter().all(|r| r.kind == JobKind::Solve));
+        // arrivals strictly increase (one global Poisson process)
+        assert!(reqs.windows(2).all(|w| w[1].arrival > w[0].arrival));
+        // precision parity: even tenants F64, odd F32
+        assert!(reqs.iter().all(|r| {
+            r.offdiag == if r.tenant % 2 == 0 { Precision::F64 } else { Precision::F32 }
+        }));
+        // seeded: regeneration is identical
+        let again = poisson_mix(2, 3, 1024, 128, 200.0, 42, f64::INFINITY);
+        assert!(reqs
+            .iter()
+            .zip(&again)
+            .all(|(a, b)| a.arrival == b.arrival && a.tenant == b.tenant));
+        // different seed, different arrivals
+        let other = poisson_mix(2, 3, 1024, 128, 200.0, 43, f64::INFINITY);
+        assert!(reqs.iter().zip(&other).any(|(a, b)| a.arrival != b.arrival));
+    }
+}

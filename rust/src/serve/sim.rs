@@ -1,0 +1,725 @@
+//! The multi-tenant DES: every active job's streams list-schedule onto
+//! one shared set of per-device engine clocks.
+//!
+//! Structure mirrors [`crate::exec::model`] (same engine semantics, same
+//! counted-not-modeled byte accounting, same directory write lifecycle)
+//! with three serve-specific twists:
+//!
+//! 1. **Shared engines, partitioned state.** All jobs contend on one
+//!    `DeviceClocks` per device, but cache/directory/landed state is
+//!    per *tenant*: tile keys are offset into a tenant-private key space
+//!    (`base + tri_idx`), so two tenants' `(0,0)` tiles never alias.
+//! 2. **Admission.** One running job per tenant, FIFO per tenant; a job
+//!    is admitted at `max(arrival, previous job's completion)`. The
+//!    controller rejects shapes the quota can never serve (same
+//!    three-tile floor as [`RunConfig::validate`]).
+//! 3. **Cross-job reuse.** A cache hit on a tile this job never touched
+//!    before is a `cross_job_hit` — a read the previous job paid for.
+//!    With `reuse` off the tenant's slices cold-start at every
+//!    admission, which makes each job's counters equal its solo run
+//!    (the serial baseline of the CI serve gate).
+//!
+//! Execution semantics per job are the operand-caching left-looking
+//! variant (the paper's V2): accumulator H2D once, operands through the
+//! tenant's LRU slice, write-back D2H. Solves stream every factor tile
+//! through the cache (TRSM on diagonals, GEMM off) with no write-back.
+//! Sharded jobs route cross-row reads over the peer link exactly like
+//! the single-run executors ([`route_read`]); packed jobs always read
+//! host-side (owner == the one device).
+
+use std::collections::VecDeque;
+use std::sync::Arc;
+
+use anyhow::{anyhow, bail, ensure, Result};
+
+use crate::cache::{CacheTable, ResidencyDirectory};
+use crate::config::{HwProfile, LinkModel, Mode, RunConfig, Version};
+use crate::exec::model::DeviceClocks;
+use crate::metrics::{LatencyStats, Metrics, MetricsSnapshot, TaskOp};
+use crate::precision::{Precision, PrecisionMap};
+use crate::sched::{device_of_row, route_read, CompiledSchedule, Job, ReadSrc, Schedule};
+use crate::tiles::{tri_idx, tri_len, TileId};
+
+use super::{JobKind, JobOutcome, JobRequest, ServeConfig, ServeReport};
+
+/// A tenant-local dataset: where its tiles live in the tenant key
+/// space, its shape, and its packing home (set by the first packed job,
+/// reused by every later one so residency can actually be re-hit).
+struct Dataset {
+    base: usize,
+    nt: usize,
+    home: Option<usize>,
+}
+
+/// Everything one tenant owns: its quota-capacity cache slice on every
+/// device, its residency directory, and its landed-time table (both over
+/// the tenant-private key space).
+struct TenantState {
+    quota: u64,
+    caches: Vec<CacheTable<()>>,
+    dir: ResidencyDirectory,
+    /// completion time of the transfer that loaded [dev][key] (∞ = not
+    /// resident) — the peer-copy causality check of the single-run DES
+    landed: Vec<Vec<f64>>,
+    datasets: Vec<Option<Dataset>>,
+    key_len: usize,
+    busy: bool,
+    last_done: f64,
+    pending: VecDeque<usize>,
+    peak_resident: u64,
+}
+
+impl TenantState {
+    fn new(cfg: &ServeConfig) -> TenantState {
+        TenantState {
+            quota: cfg.quota_bytes,
+            caches: (0..cfg.ndev).map(|_| CacheTable::new(cfg.quota_bytes, true)).collect(),
+            dir: ResidencyDirectory::new(cfg.ndev),
+            landed: vec![Vec::new(); cfg.ndev],
+            datasets: Vec::new(),
+            key_len: 0,
+            busy: false,
+            last_done: 0.0,
+            pending: VecDeque::new(),
+            peak_resident: 0,
+        }
+    }
+
+    /// Key-space base of `dataset`, registering it on first sight.
+    /// Registration is permanent (tile identity must be stable for reuse
+    /// to mean anything), so a later job naming the same dataset with a
+    /// different tile count is a shape conflict and gets rejected.
+    fn base_of(&mut self, dataset: usize, nt: usize) -> Result<usize, String> {
+        while self.datasets.len() <= dataset {
+            self.datasets.push(None);
+        }
+        match &self.datasets[dataset] {
+            Some(d) if d.nt == nt => Ok(d.base),
+            Some(d) => Err(format!("dataset {dataset} registered with nt={}, job wants nt={nt}", d.nt)),
+            None => {
+                let base = self.key_len;
+                self.key_len += tri_len(nt);
+                for l in &mut self.landed {
+                    l.resize(self.key_len, f64::INFINITY);
+                }
+                self.datasets[dataset] = Some(Dataset { base, nt, home: None });
+                Ok(base)
+            }
+        }
+    }
+
+    /// Cold-start everything resident (reuse disabled): fresh slices,
+    /// fresh directory, landed times cleared. Key bases persist — tile
+    /// identity is stable either way.
+    fn cold_start(&mut self, cfg: &ServeConfig) {
+        self.caches = (0..cfg.ndev).map(|_| CacheTable::new(cfg.quota_bytes, true)).collect();
+        self.dir = ResidencyDirectory::new(cfg.ndev);
+        for l in &mut self.landed {
+            for v in l.iter_mut() {
+                *v = f64::INFINITY;
+            }
+        }
+    }
+}
+
+/// An admitted job's compiled plan.
+enum Plan {
+    Fact { schedule: Schedule, ir: CompiledSchedule },
+    /// factor-tile sweep, single stream, row-major triangle order
+    Solve { tiles: Vec<(usize, usize)> },
+}
+
+/// One admitted, in-flight job.
+struct Running {
+    req: usize,
+    tenant: usize,
+    dataset: usize,
+    kind: JobKind,
+    base: usize,
+    ts: usize,
+    pm: PrecisionMap,
+    /// logical job device -> physical device (len 1 = packed)
+    devmap: Vec<usize>,
+    /// peer routing enabled (sharded operand-caching jobs only)
+    routing: bool,
+    plan: Plan,
+    cursor: Vec<usize>,
+    clock: Vec<f64>,
+    dep_progress: Vec<usize>,
+    /// per-tile finalization times, job-local triangle space (Fact only)
+    ready: Vec<f64>,
+    remaining: usize,
+    /// job-local triangle keys this job already referenced — a cache hit
+    /// on an untouched key was left behind by a previous job
+    touched: Vec<bool>,
+    metrics: Arc<Metrics>,
+    cross_job_hits: u64,
+    arrival: f64,
+    start: f64,
+}
+
+impl Running {
+    fn nstreams(&self) -> usize {
+        self.clock.len()
+    }
+
+    fn stream_len(&self, s: usize) -> usize {
+        match &self.plan {
+            Plan::Fact { schedule, .. } => schedule.jobs[s].len(),
+            Plan::Solve { tiles } => tiles.len(),
+        }
+    }
+}
+
+/// Is stream `s` of `job` runnable? Fact streams use the IR's resumable
+/// cross-stream wait check (same-stream deps are final by program
+/// order); solve streams have no intra-job deps at all.
+fn runnable(job: &mut Running, s: usize) -> bool {
+    let pos = job.cursor[s];
+    if pos >= job.stream_len(s) {
+        return false;
+    }
+    let (ok, progress) = match &job.plan {
+        Plan::Solve { .. } => (true, 0),
+        Plan::Fact { ir, .. } => {
+            let waits = ir.waits(s, pos);
+            let mut p = job.dep_progress[s];
+            while p < waits.len() && job.ready[waits[p].index()].is_finite() {
+                p += 1;
+            }
+            (p == waits.len(), p)
+        }
+    };
+    job.dep_progress[s] = progress;
+    ok
+}
+
+/// Borrow bundle for stepping one job: the shared engine clocks, the
+/// job's tenant state, and the job itself — three disjoint mutable
+/// regions of the serve state.
+struct Ctx<'a> {
+    hw: &'a HwProfile,
+    links: &'a LinkModel,
+    devices: &'a mut [DeviceClocks],
+    tenant: &'a mut TenantState,
+    job: &'a mut Running,
+}
+
+impl Ctx<'_> {
+    fn key(&self, i: usize, j: usize) -> TileId {
+        TileId::from_index(self.job.base + tri_idx(i, j))
+    }
+
+    fn tile_bytes(&self, i: usize, j: usize) -> u64 {
+        (self.job.ts * self.job.ts) as u64 * self.job.pm.get(i, j).width()
+    }
+
+    /// Physical device owning tile row `i` under this job's placement
+    /// (packed jobs: the one home device, so every read is host-side).
+    fn owner(&self, i: usize) -> usize {
+        self.job.devmap[device_of_row(i, self.job.devmap.len())]
+    }
+
+    fn h2d(&mut self, i: usize, j: usize, dev: usize, t: f64) -> f64 {
+        let p = self.job.pm.get(i, j);
+        let bytes = self.tile_bytes(i, j);
+        let owner = self.owner(i);
+        let dt = self.links.h2d_time(bytes, owner, dev);
+        let start = t.max(self.devices[dev].h2d_free);
+        let end = start + dt;
+        self.devices[dev].h2d_free = end;
+        self.job.metrics.record_h2d(bytes, p);
+        end
+    }
+
+    /// Peer copy onto `dev`'s inbound copy engine (shares the demand H2D
+    /// DMA, exactly like the single-run DES).
+    fn d2d(&mut self, i: usize, j: usize, src: usize, dev: usize, t: f64) -> f64 {
+        let p = self.job.pm.get(i, j);
+        let bytes = self.tile_bytes(i, j);
+        let dt = self.links.d2d_time(bytes, src, dev);
+        let start = t.max(self.devices[dev].h2d_free);
+        let end = start + dt;
+        self.devices[dev].h2d_free = end;
+        self.job.metrics.record_d2d(bytes, p);
+        end
+    }
+
+    fn d2h(&mut self, i: usize, j: usize, dev: usize, t: f64) -> f64 {
+        let p = self.job.pm.get(i, j);
+        let bytes = self.tile_bytes(i, j);
+        let owner = self.owner(i);
+        let dt = self.links.d2h_time(bytes, dev, owner);
+        let start = t.max(self.devices[dev].d2h_free);
+        let end = start + dt;
+        self.devices[dev].d2h_free = end;
+        self.job.metrics.record_d2h(bytes, p);
+        end
+    }
+
+    /// Mirror a cache slice's removals into the tenant directory.
+    fn sync_dir(&mut self, dev: usize) {
+        for tile in self.tenant.caches[dev].drain_evicted() {
+            self.tenant.dir.record_evict(tile, dev);
+            self.tenant.landed[dev][tile.index()] = f64::INFINITY;
+        }
+    }
+
+    fn peer_copy_landed(&self, key: TileId, src: usize, t: f64) -> bool {
+        self.tenant.dir.clean_holder(key, src) && self.tenant.landed[src][key.index()] <= t
+    }
+
+    /// Algorithm-3 lookup against the tenant's slice of `dev`: hit is
+    /// free (and counts as cross-job reuse if this job never touched the
+    /// key), else peer copy when routed and landed, else host H2D.
+    fn load_tile(&mut self, i: usize, j: usize, dev: usize, t: f64) -> f64 {
+        let key = self.key(i, j);
+        let local = tri_idx(i, j);
+        let m = self.job.metrics.clone();
+        self.tenant.caches[dev].advance_access();
+        if self.tenant.caches[dev].get(key, &m).is_some() {
+            if !self.job.touched[local] {
+                self.job.cross_job_hits += 1;
+            }
+            self.job.touched[local] = true;
+            return t;
+        }
+        self.job.touched[local] = true;
+        let bytes = self.tile_bytes(i, j);
+        let owner = self.owner(i);
+        let end = match route_read(self.links, self.job.routing, bytes, owner, dev) {
+            ReadSrc::Peer { src } if self.peer_copy_landed(key, src, t) => {
+                self.d2d(i, j, src, dev, t)
+            }
+            _ => self.h2d(i, j, dev, t),
+        };
+        if self.tenant.caches[dev].insert(key, bytes, Arc::new(()), &m) {
+            self.tenant.dir.record_load(key, dev, self.job.pm.get(i, j));
+            self.tenant.landed[dev][key.index()] = end;
+        }
+        self.sync_dir(dev);
+        let used = self.tenant.caches[dev].used();
+        if used > self.tenant.peak_resident {
+            self.tenant.peak_resident = used;
+        }
+        end
+    }
+
+    /// Directory write lifecycle: `dev` becomes the single dirty owner
+    /// of (i,j); every cached copy anywhere in the tenant goes stale.
+    fn begin_write(&mut self, i: usize, j: usize, dev: usize) {
+        let key = self.key(i, j);
+        let p = self.job.pm.get(i, j);
+        for stale in self.tenant.dir.begin_write(key, dev, p) {
+            self.tenant.caches[stale].invalidate(key);
+            self.sync_dir(stale);
+        }
+    }
+
+    fn end_write(&mut self, i: usize, j: usize, dev: usize) {
+        self.tenant.dir.end_write(self.key(i, j), dev);
+    }
+
+    fn kernel(&mut self, op: TaskOp, precs: &[Precision], dev: usize, t: f64) -> f64 {
+        let ts = self.job.ts;
+        let t3 = (ts as f64).powi(3);
+        let flops = match op {
+            TaskOp::Potrf => t3 / 3.0,
+            TaskOp::Trsm | TaskOp::Syrk => t3,
+            TaskOp::Gemm => 2.0 * t3,
+        };
+        let compute_prec = *precs.iter().max().unwrap_or(&Precision::F64);
+        let mut dt = self.hw.kernel_time(flops, compute_prec, ts);
+        // up-cast bandwidth for operands stored below the compute
+        // precision — same cast-engine charge as the single-run DES
+        for &p in precs {
+            if p != compute_prec {
+                dt += (ts * ts) as f64 * compute_prec.width() as f64 / (2000.0 * 1e9);
+            }
+        }
+        let start = t.max(self.devices[dev].compute_free);
+        let end = start + dt;
+        self.devices[dev].compute_free = end;
+        self.job.metrics.record_task(op, ts);
+        end
+    }
+
+    /// Advance to tile (i,j)'s job-local finalization time.
+    fn wait_ready(&self, i: usize, j: usize, t: f64) -> f64 {
+        let r = self.job.ready[tri_idx(i, j)];
+        debug_assert!(r.is_finite(), "serve: wait on non-final tile ({i},{j})");
+        r.max(t)
+    }
+
+    /// One left-looking tile job, operand-cached (the paper's V2 shape):
+    /// accumulator H2D once, k updates through the cache, factor kernel,
+    /// write-back.
+    fn run_tile_ll(&mut self, m: usize, k: usize, dev: usize, t0: f64) -> f64 {
+        let diag = m == k;
+        let c_prec = self.job.pm.get(m, k);
+        let mut t = self.h2d(m, k, dev, t0); // accumulator, once
+        self.job.touched[tri_idx(m, k)] = true;
+        for n in 0..k {
+            t = self.wait_ready(m, n, t);
+            t = self.load_tile(m, n, dev, t);
+            if diag {
+                let pa = self.job.pm.get(m, n);
+                t = self.kernel(TaskOp::Syrk, &[c_prec, pa], dev, t);
+            } else {
+                t = self.wait_ready(k, n, t);
+                t = self.load_tile(k, n, dev, t);
+                let pa = self.job.pm.get(m, n);
+                let pb = self.job.pm.get(k, n);
+                t = self.kernel(TaskOp::Gemm, &[c_prec, pa, pb], dev, t);
+            }
+        }
+        if diag {
+            t = self.kernel(TaskOp::Potrf, &[c_prec], dev, t);
+        } else {
+            t = self.wait_ready(k, k, t);
+            t = self.load_tile(k, k, dev, t);
+            let pd = self.job.pm.get(k, k);
+            t = self.kernel(TaskOp::Trsm, &[pd, c_prec], dev, t);
+        }
+        t = self.d2h(m, k, dev, t);
+        self.job.ready[tri_idx(m, k)] = t;
+        t
+    }
+
+    /// One solve-sweep tile: read the factor tile (through the cache —
+    /// this is where cross-job reuse pays), apply it to the RHS panel
+    /// (F64): TRSM on diagonals, GEMM elimination off them. No
+    /// write-back — solves produce a host-side vector, not tiles.
+    fn run_solve_tile(&mut self, i: usize, j: usize, dev: usize, t0: f64) -> f64 {
+        let t = self.load_tile(i, j, dev, t0);
+        let p = self.job.pm.get(i, j);
+        let op = if i == j { TaskOp::Trsm } else { TaskOp::Gemm };
+        self.kernel(op, &[p, Precision::F64], dev, t)
+    }
+}
+
+/// Admission controller: validate the request against the tenant quota,
+/// place it (pack on the least-committed device with dataset affinity,
+/// or shard across the pool when the working set exceeds the quota),
+/// and compile its plan. `Err` = rejected, with the reason.
+fn admit(
+    cfg: &ServeConfig,
+    tenant: &mut TenantState,
+    committed: &mut [u64],
+    req_idx: usize,
+    req: &JobRequest,
+    start: f64,
+) -> Result<Running, String> {
+    if req.n == 0 || req.ts == 0 || req.n % req.ts != 0 {
+        return Err(format!("bad shape: n={} ts={}", req.n, req.ts));
+    }
+    let nt = req.n / req.ts;
+    // the same three-tile floor RunConfig::validate enforces: below it
+    // not even one update's working set fits
+    let floor = 3 * (req.ts * req.ts * 8) as u64;
+    if tenant.quota < floor {
+        return Err(format!("quota {} below the 3-tile floor {floor}", tenant.quota));
+    }
+    let base = tenant.base_of(req.dataset, nt)?;
+
+    let mut pm = PrecisionMap::uniform(nt, Precision::F64);
+    if req.offdiag != Precision::F64 {
+        for i in 0..nt {
+            for j in 0..i {
+                pm.set(i, j, req.offdiag);
+            }
+        }
+    }
+    let total = pm.total_bytes(req.ts);
+
+    // placement: shard a factorization whose working set exceeds the
+    // quota across the whole pool; otherwise pack on the dataset's home
+    // (first packed job: the least-committed device, ties to the lowest).
+    // Bookkeeping (committed bytes, home assignment) lands only after
+    // the plan compiles — a rejected job must not skew placement.
+    let shard = req.kind == JobKind::Factorize && cfg.ndev > 1 && total > tenant.quota;
+    let devmap: Vec<usize> = if shard {
+        (0..cfg.ndev).collect()
+    } else {
+        let ds = tenant.datasets[req.dataset].as_ref().expect("registered above");
+        let home = ds
+            .home
+            .unwrap_or_else(|| (0..cfg.ndev).min_by_key(|&d| (committed[d], d)).unwrap_or(0));
+        vec![home]
+    };
+
+    let (plan, routing, nstreams, remaining) = match req.kind {
+        JobKind::Factorize => {
+            let rc = RunConfig {
+                n: req.n,
+                ts: req.ts,
+                version: Version::V2,
+                mode: Mode::Model,
+                ndev: devmap.len(),
+                streams_per_dev: cfg.streams_per_dev,
+                vmem_bytes: Some(tenant.quota),
+                hw: cfg.hw.clone(),
+                precisions: if req.offdiag == Precision::F64 {
+                    vec![Precision::F64]
+                } else {
+                    vec![req.offdiag, Precision::F64]
+                },
+                seed: req_idx as u64,
+                ..RunConfig::default()
+            };
+            rc.validate()?;
+            let schedule = Schedule::left_looking(nt, devmap.len(), cfg.streams_per_dev);
+            let ir =
+                CompiledSchedule::compile_with_precisions_threads(&schedule, &rc, &pm, cfg.threads);
+            let ns = schedule.total_streams();
+            let total_jobs = schedule.total_jobs();
+            let routing = ir.routing;
+            (Plan::Fact { schedule, ir }, routing, ns, total_jobs)
+        }
+        JobKind::Solve => {
+            let mut tiles = Vec::with_capacity(tri_len(nt));
+            for i in 0..nt {
+                for j in 0..=i {
+                    tiles.push((i, j));
+                }
+            }
+            let n = tiles.len();
+            (Plan::Solve { tiles }, false, 1, n)
+        }
+    };
+
+    if shard {
+        for c in committed.iter_mut() {
+            *c += total / cfg.ndev as u64;
+        }
+    } else {
+        committed[devmap[0]] += total;
+        tenant.datasets[req.dataset].as_mut().expect("registered above").home = Some(devmap[0]);
+    }
+
+    Ok(Running {
+        req: req_idx,
+        tenant: req.tenant,
+        dataset: req.dataset,
+        kind: req.kind,
+        base,
+        ts: req.ts,
+        pm,
+        devmap,
+        routing,
+        plan,
+        cursor: vec![0; nstreams],
+        clock: vec![start; nstreams],
+        dep_progress: vec![0; nstreams],
+        ready: vec![f64::INFINITY; tri_len(nt)],
+        remaining,
+        touched: vec![false; tri_len(nt)],
+        metrics: Arc::new(Metrics::new()),
+        cross_job_hits: 0,
+        arrival: req.arrival,
+        start,
+    })
+}
+
+/// Drain tenant `tidx`'s FIFO until one job is admitted (or the queue
+/// empties): invalid requests become rejected outcomes immediately.
+fn try_admit(
+    cfg: &ServeConfig,
+    tenants: &mut [TenantState],
+    committed: &mut [u64],
+    reqs: &[JobRequest],
+    tidx: usize,
+    outcomes: &mut [Option<JobOutcome>],
+    active: &mut Vec<Running>,
+) {
+    while !tenants[tidx].busy {
+        let Some(req_idx) = tenants[tidx].pending.pop_front() else {
+            return;
+        };
+        let req = &reqs[req_idx];
+        let start = req.arrival.max(tenants[tidx].last_done);
+        if !cfg.reuse {
+            tenants[tidx].cold_start(cfg);
+        }
+        match admit(cfg, &mut tenants[tidx], committed, req_idx, req, start) {
+            Ok(r) => {
+                tenants[tidx].busy = true;
+                active.push(r);
+                return;
+            }
+            Err(reason) => {
+                outcomes[req_idx] = Some(JobOutcome {
+                    tenant: req.tenant,
+                    dataset: req.dataset,
+                    kind: req.kind,
+                    rejected: true,
+                    reject_reason: Some(reason),
+                    sharded: false,
+                    devices: Vec::new(),
+                    arrival: req.arrival,
+                    start,
+                    done: start,
+                    cross_job_hits: 0,
+                    metrics: MetricsSnapshot::default(),
+                });
+            }
+        }
+    }
+}
+
+/// Decoded work item for one schedule position.
+enum Step {
+    Fact { m: usize, k: usize, dev: usize },
+    SolveTile { i: usize, j: usize, dev: usize },
+}
+
+/// Run a request mix to completion. Single-threaded, seeded inputs only
+/// — bit-identical across runs and across `cfg.threads`.
+pub fn run(cfg: &ServeConfig, reqs: &[JobRequest]) -> Result<ServeReport> {
+    ensure!(cfg.ndev >= 1, "serve: need at least one device");
+    ensure!(cfg.streams_per_dev >= 1, "serve: need at least one stream per device");
+    ensure!(cfg.threads >= 1, "serve: need at least one compile thread");
+    let ntenants = reqs.iter().map(|r| r.tenant + 1).max().unwrap_or(0);
+    let links = cfg.hw.link_model(cfg.ndev, true);
+    let mut devices = vec![DeviceClocks::default(); cfg.ndev];
+    let mut tenants: Vec<TenantState> = (0..ntenants).map(|_| TenantState::new(cfg)).collect();
+    let mut committed = vec![0u64; cfg.ndev];
+
+    // per-tenant FIFO in arrival order (stable on ties by index)
+    let mut order: Vec<usize> = (0..reqs.len()).collect();
+    order.sort_by(|&a, &b| {
+        reqs[a]
+            .arrival
+            .partial_cmp(&reqs[b].arrival)
+            .expect("arrival times must not be NaN")
+            .then(a.cmp(&b))
+    });
+    for idx in order {
+        tenants[reqs[idx].tenant].pending.push_back(idx);
+    }
+
+    let mut outcomes: Vec<Option<JobOutcome>> = vec![None; reqs.len()];
+    let mut active: Vec<Running> = Vec::new();
+    for t in 0..ntenants {
+        try_admit(cfg, &mut tenants, &mut committed, reqs, t, &mut outcomes, &mut active);
+    }
+
+    // list scheduling over (job, stream) pairs: run one schedule
+    // position of the runnable stream with the smallest clock (ties to
+    // the earliest-admitted job, then the lowest stream id)
+    while !active.is_empty() {
+        let mut best: Option<(usize, usize, f64)> = None;
+        for ai in 0..active.len() {
+            for s in 0..active[ai].nstreams() {
+                if !runnable(&mut active[ai], s) {
+                    continue;
+                }
+                let c = active[ai].clock[s];
+                if best.map(|(_, _, bc)| c < bc).unwrap_or(true) {
+                    best = Some((ai, s, c));
+                }
+            }
+        }
+        let (ai, s, t0) = best.ok_or_else(|| anyhow!("serve DES stalled: no runnable stream (bug)"))?;
+
+        let job = &mut active[ai];
+        let step = match &job.plan {
+            Plan::Fact { schedule, .. } => match schedule.jobs[s][job.cursor[s]] {
+                Job::TileLL { m, k } => {
+                    let sid = schedule.stream_id(s);
+                    Step::Fact { m, k, dev: job.devmap[sid.device] }
+                }
+                other => bail!("serve: left-looking schedule produced {other:?}"),
+            },
+            Plan::Solve { tiles } => {
+                let (i, j) = tiles[job.cursor[s]];
+                Step::SolveTile { i, j, dev: job.devmap[0] }
+            }
+        };
+        let tenant = &mut tenants[job.tenant];
+        let mut ctx = Ctx { hw: &cfg.hw, links: &links, devices: &mut devices, tenant, job };
+        let end = match step {
+            Step::Fact { m, k, dev } => {
+                ctx.begin_write(m, k, dev);
+                let e = ctx.run_tile_ll(m, k, dev, t0);
+                ctx.end_write(m, k, dev);
+                e
+            }
+            Step::SolveTile { i, j, dev } => ctx.run_solve_tile(i, j, dev, t0),
+        };
+        let job = &mut active[ai];
+        job.clock[s] = end;
+        job.cursor[s] += 1;
+        job.dep_progress[s] = 0;
+        job.remaining -= 1;
+
+        if job.remaining == 0 {
+            let job = active.remove(ai);
+            let tidx = job.tenant;
+            #[cfg(debug_assertions)]
+            {
+                let caches = &tenants[tidx].caches;
+                tenants[tidx]
+                    .dir
+                    .check_invariants(|dev, tile| caches[dev].peek(tile))
+                    .unwrap_or_else(|e| panic!("serve residency directory drift: {e}"));
+            }
+            let done = job.clock.iter().cloned().fold(job.start, f64::max);
+            outcomes[job.req] = Some(JobOutcome {
+                tenant: tidx,
+                dataset: job.dataset,
+                kind: job.kind,
+                rejected: false,
+                reject_reason: None,
+                sharded: job.devmap.len() > 1,
+                devices: job.devmap.clone(),
+                arrival: job.arrival,
+                start: job.start,
+                done,
+                cross_job_hits: job.cross_job_hits,
+                metrics: job.metrics.snapshot(),
+            });
+            tenants[tidx].busy = false;
+            tenants[tidx].last_done = done;
+            try_admit(cfg, &mut tenants, &mut committed, reqs, tidx, &mut outcomes, &mut active);
+        }
+    }
+    debug_assert!(tenants.iter().all(|t| t.pending.is_empty()), "serve: undrained queue");
+
+    // roll up
+    let per_job: Vec<JobOutcome> = outcomes
+        .into_iter()
+        .enumerate()
+        .map(|(i, o)| o.unwrap_or_else(|| panic!("request {i} neither completed nor rejected")))
+        .collect();
+    let mut totals = MetricsSnapshot::default();
+    let mut latencies_ns = Vec::new();
+    let (mut completed, mut rejected, mut misses, mut cross) = (0usize, 0usize, 0usize, 0u64);
+    let mut makespan = 0.0f64;
+    for (i, o) in per_job.iter().enumerate() {
+        if o.rejected {
+            rejected += 1;
+            continue;
+        }
+        completed += 1;
+        totals.accumulate(&o.metrics);
+        cross += o.cross_job_hits;
+        latencies_ns.push((o.latency() * 1e9).round() as u64);
+        makespan = makespan.max(o.done);
+        if reqs[i].deadline.is_finite() && o.latency() > reqs[i].deadline {
+            misses += 1;
+        }
+    }
+    Ok(ServeReport {
+        per_job,
+        totals,
+        latency: LatencyStats::from_ns(latencies_ns),
+        makespan,
+        completed,
+        rejected,
+        deadline_misses: misses,
+        cross_job_hits: cross,
+        tenant_peak_resident: tenants.iter().map(|t| t.peak_resident).collect(),
+        tenant_quota: cfg.quota_bytes,
+    })
+}

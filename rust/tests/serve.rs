@@ -1,0 +1,258 @@
+//! Serve-layer gate: the multi-tenant DES must honor its isolation
+//! invariants on random mixes, stay bit-identical across runs and
+//! compile thread counts, degrade to exact solo-run accounting with
+//! reuse disabled, and reproduce the committed serve golden byte for
+//! byte.
+//!
+//! Regenerate the golden after an intentional behavior change with:
+//!
+//! ```text
+//! UPDATE_GOLDEN=1 cargo test --test serve
+//! ```
+
+use ooc_cholesky::config::HwProfile;
+use ooc_cholesky::precision::Precision;
+use ooc_cholesky::serve::{self, JobKind, JobRequest, ServeConfig};
+use ooc_cholesky::util::rng::Rng;
+
+/// The CI serve-gate smoke config: `serve --tenants 2 --jobs-per-tenant 3
+/// --n 1024 --ts 128 --ndev 2 --rate 200 --seed 42 --quota-mib 64`.
+fn smoke_cfg() -> ServeConfig {
+    ServeConfig {
+        ndev: 2,
+        streams_per_dev: 4,
+        hw: HwProfile::gh200_nvlc2c(),
+        quota_bytes: 64 << 20,
+        threads: 1,
+        reuse: true,
+    }
+}
+
+fn smoke_mix() -> Vec<JobRequest> {
+    serve::poisson_mix(2, 3, 1024, 128, 200.0, 42, f64::INFINITY)
+}
+
+fn golden_path() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/golden/serve_metrics.json")
+}
+
+#[test]
+fn serve_smoke_matches_golden() {
+    let report = serve::run(&smoke_cfg(), &smoke_mix()).unwrap();
+    let got = report.golden_string();
+    let path = golden_path();
+    if std::env::var("UPDATE_GOLDEN").is_ok() {
+        std::fs::write(&path, &got).unwrap();
+        eprintln!("golden updated at {path:?}");
+        return;
+    }
+    let want = std::fs::read_to_string(&path).unwrap();
+    assert_eq!(
+        got, want,
+        "serve smoke counters drifted from {path:?} — if the change is intentional, \
+         regenerate with UPDATE_GOLDEN=1 cargo test --test serve"
+    );
+}
+
+#[test]
+fn serve_is_deterministic_across_runs_and_threads() {
+    // the compile thread count parallelizes per-device IR lowering only;
+    // the serve DES itself is single-threaded, so every observable —
+    // counters, virtual times, per-job rows — must be bit-identical
+    let base = serve::run(&smoke_cfg(), &smoke_mix()).unwrap();
+    let again = serve::run(&smoke_cfg(), &smoke_mix()).unwrap();
+    assert_eq!(base.golden_string(), again.golden_string());
+    assert_eq!(base.to_json().pretty(), again.to_json().pretty(), "re-run drifted");
+    for threads in [2, 8] {
+        let cfg = ServeConfig { threads, ..smoke_cfg() };
+        let r = serve::run(&cfg, &smoke_mix()).unwrap();
+        assert_eq!(base.golden_string(), r.golden_string(), "threads={threads} drifted");
+        assert_eq!(
+            base.to_json().pretty(),
+            r.to_json().pretty(),
+            "threads={threads} changed a latency or per-job row"
+        );
+    }
+}
+
+#[test]
+fn no_reuse_jobs_count_exactly_their_solo_runs() {
+    // with reuse disabled every admission cold-starts the tenant state,
+    // so each job's counters must equal the same request run alone on an
+    // idle box (the serial baseline the CI gate sums). The smoke mix is
+    // packed (quota >> working set), so even the byte split is identical.
+    let cfg = ServeConfig { reuse: false, ..smoke_cfg() };
+    let mix = smoke_mix();
+    let report = serve::run(&cfg, &mix).unwrap();
+    assert_eq!(report.completed, mix.len());
+    assert_eq!(report.cross_job_hits, 0, "cold caches cannot produce cross-job hits");
+    for (i, req) in mix.iter().enumerate() {
+        let solo = serve::run(&smoke_cfg(), std::slice::from_ref(req)).unwrap();
+        assert_eq!(solo.completed, 1);
+        assert_eq!(
+            report.per_job[i].metrics, solo.per_job[0].metrics,
+            "job {i} ({:?} tenant {}) drifted from its solo run",
+            req.kind, req.tenant
+        );
+        assert_eq!(report.per_job[i].cross_job_hits, 0);
+        assert_eq!(solo.per_job[0].cross_job_hits, 0);
+    }
+}
+
+#[test]
+fn reuse_strictly_reduces_host_traffic() {
+    // the serve-gate claim: cross-job clean-tile reuse moves strictly
+    // fewer H2D bytes than the same jobs on cold caches, while computing
+    // exactly the same task set
+    let warm = serve::run(&smoke_cfg(), &smoke_mix()).unwrap();
+    let cold = serve::run(&ServeConfig { reuse: false, ..smoke_cfg() }, &smoke_mix()).unwrap();
+    assert_eq!(warm.completed, cold.completed);
+    assert_eq!(warm.totals.n_potrf, cold.totals.n_potrf);
+    assert_eq!(warm.totals.n_trsm, cold.totals.n_trsm);
+    assert_eq!(warm.totals.n_syrk, cold.totals.n_syrk);
+    assert_eq!(warm.totals.n_gemm, cold.totals.n_gemm);
+    assert_eq!(warm.totals.d2h_bytes, cold.totals.d2h_bytes, "write-back volume is reuse-blind");
+    assert!(warm.cross_job_hits > 0, "warm smoke mix must re-hit factor tiles");
+    assert!(
+        warm.totals.h2d_bytes < cold.totals.h2d_bytes,
+        "reuse must win host bytes: warm {} !< cold {}",
+        warm.totals.h2d_bytes,
+        cold.totals.h2d_bytes
+    );
+}
+
+#[test]
+fn sharded_job_spans_the_pool_and_moves_peer_bytes() {
+    // a factorization whose working set exceeds the tenant quota shards
+    // across all devices and sources cross-row reads over the NVLink
+    // peer links, exactly like the single-run multi-GPU executors
+    let cfg = ServeConfig {
+        ndev: 2,
+        streams_per_dev: 4,
+        hw: HwProfile::gh200_quad(),
+        quota_bytes: 12 << 20, // < the 17.8 MiB nt=16 F64 triangle
+        threads: 1,
+        reuse: true,
+    };
+    let req = JobRequest {
+        tenant: 0,
+        dataset: 0,
+        kind: JobKind::Factorize,
+        n: 2048,
+        ts: 128,
+        offdiag: Precision::F64,
+        arrival: 0.0,
+        deadline: f64::INFINITY,
+    };
+    let report = serve::run(&cfg, &[req]).unwrap();
+    assert_eq!(report.completed, 1);
+    let job = &report.per_job[0];
+    assert!(job.sharded, "working set {} > quota must shard", 136 * 128 * 128 * 8);
+    assert_eq!(job.devices, vec![0, 1]);
+    assert!(report.totals.d2d_bytes > 0, "no peer traffic on an NVLink pair");
+    assert!(report.tenant_peak_resident[0] <= cfg.quota_bytes);
+}
+
+#[test]
+fn deadlines_are_observed_not_enforced() {
+    // a missed deadline is counted, never killed: completion counts are
+    // deadline-invariant
+    let strict = serve::run(&smoke_cfg(), &serve::poisson_mix(2, 3, 1024, 128, 200.0, 42, 1e-9))
+        .unwrap();
+    assert_eq!(strict.completed, 6);
+    assert_eq!(strict.deadline_misses, strict.completed, "1ns deadlines must all miss");
+    let lax = serve::run(&smoke_cfg(), &smoke_mix()).unwrap();
+    assert_eq!(lax.deadline_misses, 0);
+    assert_eq!(strict.golden_string(), lax.golden_string(), "deadlines must not move a counter");
+}
+
+#[test]
+fn quota_invariants_hold_over_random_mixes() {
+    // property sweep: random multi-tenant mixes over ndev ∈ {1,2,4} with
+    // eviction-forcing quotas. The debug build also runs the residency
+    // directory's single-dirty-owner/cache-coherence audit at every job
+    // completion inside the DES, so completing at all is the stronger
+    // half of this test.
+    let ts = 128usize;
+    let tile = (ts * ts * 8) as u64;
+    let mut rng = Rng::new(0xC0FFEE);
+    let mut pick = |n: usize| -> usize { (rng.uniform() * n as f64) as usize % n };
+    for ndev in [1usize, 2, 4] {
+        for _rep in 0..2 {
+            let tenants = 1 + pick(3);
+            let quota = (3 + pick(6) as u64) * tile; // 3..8 tiles: real pressure
+            let mut reqs = Vec::new();
+            let mut t = 0.0;
+            for i in 0..tenants * 3 {
+                let tenant = i % tenants;
+                t += 0.001 * (1 + pick(50)) as f64;
+                let nt = [2, 4, 6, 8][pick(4)];
+                reqs.push(JobRequest {
+                    tenant,
+                    dataset: 0,
+                    kind: if i < tenants { JobKind::Factorize } else { JobKind::Solve },
+                    n: nt * ts,
+                    ts,
+                    offdiag: [Precision::F64, Precision::F32, Precision::F16][pick(3)],
+                    arrival: t,
+                    deadline: f64::INFINITY,
+                });
+            }
+            let cfg = ServeConfig {
+                ndev,
+                streams_per_dev: 2,
+                hw: HwProfile::gh200_quad(),
+                quota_bytes: quota,
+                threads: 1,
+                reuse: true,
+            };
+            let report = serve::run(&cfg, &reqs).unwrap();
+            let tag = format!("ndev={ndev} tenants={tenants} quota={quota}");
+            assert_eq!(report.submitted(), reqs.len(), "{tag}: lost requests");
+            assert_eq!(report.completed + report.rejected, report.submitted(), "{tag}");
+            for (tid, &peak) in report.tenant_peak_resident.iter().enumerate() {
+                assert!(
+                    peak <= quota,
+                    "{tag}: tenant {tid} peak resident {peak} bytes exceeds its quota"
+                );
+            }
+            for (i, o) in report.per_job.iter().enumerate() {
+                if o.rejected {
+                    assert!(o.reject_reason.is_some(), "{tag}: job {i} rejected without reason");
+                    assert_eq!(o.metrics, Default::default(), "{tag}: rejected job {i} counted");
+                } else {
+                    assert!(o.start >= o.arrival - 1e-12, "{tag}: job {i} started early");
+                    assert!(o.done >= o.start, "{tag}: job {i} finished before starting");
+                }
+            }
+            // per-tenant FIFO: completions within a tenant never overlap
+            for tid in 0..tenants {
+                let mut prev_done = 0.0f64;
+                for o in report.per_job.iter().filter(|o| o.tenant == tid && !o.rejected) {
+                    assert!(o.start >= prev_done - 1e-12, "{tag}: tenant {tid} overlapped jobs");
+                    prev_done = o.done;
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn dataset_shape_conflicts_and_starved_quotas_reject() {
+    // same dataset id, different tile count: permanent registration makes
+    // the second shape a rejection, not silent aliasing
+    let mut reqs = smoke_mix();
+    reqs[2].n = 2048; // tenant 0's second job re-shapes dataset 0
+    let report = serve::run(&smoke_cfg(), &reqs).unwrap();
+    assert_eq!(report.rejected, 1);
+    assert!(report.per_job[2].rejected);
+    let reason = report.per_job[2].reject_reason.as_deref().unwrap();
+    assert!(reason.contains("registered"), "unexpected reason: {reason}");
+
+    // a quota below the 3-tile floor can never serve: everything rejects
+    let tiny = ServeConfig { quota_bytes: 2 * 128 * 128 * 8, ..smoke_cfg() };
+    let report = serve::run(&tiny, &smoke_mix()).unwrap();
+    assert_eq!(report.completed, 0);
+    assert_eq!(report.rejected, 6);
+    assert_eq!(report.totals.h2d_bytes, 0);
+}

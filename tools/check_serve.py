@@ -1,0 +1,72 @@
+#!/usr/bin/env python3
+"""Serve-gate assertion: cross-job reuse must strictly beat cold caches.
+
+    check_serve.py --served served_metrics.json --serial serial_metrics.json
+
+Both inputs are `serve --metrics-out` files (the flat integer-counter
+golden format). `served` is the smoke mix with reuse enabled, `serial`
+the same mix with `--no-reuse` — i.e. every job on a cold cache, which
+makes its totals exactly the sum of solo runs. The gate asserts:
+
+  * both runs completed the same jobs and computed the identical task
+    set (equal POTRF/TRSM/SYRK/GEMM counts and write-back volume);
+  * the served run moved strictly fewer H2D bytes than the serial sum
+    (the cross-job clean-tile reuse claim);
+  * reuse is the mechanism: served cross_job_hits > 0, serial == 0.
+"""
+
+import argparse
+import json
+import sys
+
+
+def fail(msg):
+    print(f"check_serve: FAIL: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def load(path):
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except (OSError, ValueError) as e:
+        fail(f"cannot load {path}: {e}")
+
+
+def check(served_path, serial_path):
+    served, serial = load(served_path), load(serial_path)
+    for name, m in (("served", served), ("serial", serial)):
+        if "cross_job_hits" not in m or "h2d_bytes" not in m:
+            fail(f"{name} file has no serve counters (is this a serve --metrics-out file?)")
+        if m.get("jobs_rejected", 0) != 0:
+            fail(f"{name} run rejected {m['jobs_rejected']} jobs — smoke mix must admit all")
+    for key in ("jobs_completed", "n_potrf", "n_trsm", "n_syrk", "n_gemm", "d2h_bytes"):
+        if served.get(key) != serial.get(key):
+            fail(
+                f"reuse changed the work itself: {key} served={served.get(key)} "
+                f"serial={serial.get(key)}"
+            )
+    if serial["cross_job_hits"] != 0:
+        fail(f"serial (cold-cache) run claims {serial['cross_job_hits']} cross-job hits")
+    if served["cross_job_hits"] <= 0:
+        fail("served run shows no cross-job reuse — the mechanism under test is inert")
+    sh, ch = served["h2d_bytes"], serial["h2d_bytes"]
+    if not sh < ch:
+        fail(f"reuse did not win host bytes: served {sh} !< serial {ch}")
+    saved = (1.0 - sh / ch) * 100.0 if ch else 0.0
+    print(
+        f"check_serve: OK: served H2D {sh} < serial {ch} ({saved:.1f}% saved), "
+        f"cross_job_hits={served['cross_job_hits']}"
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--served", required=True, help="serve --metrics-out with reuse enabled")
+    ap.add_argument("--serial", required=True, help="serve --metrics-out with --no-reuse")
+    args = ap.parse_args()
+    check(args.served, args.serial)
+
+
+if __name__ == "__main__":
+    main()
