@@ -1,12 +1,15 @@
 //! Schedule-compiler microbenchmarks: arena/CSR `sched::compile` cost vs
-//! tile count (full IR up to nt=512, O(jobs) skeleton up to nt=4096), a
+//! tile count (full IR up to nt=512, O(jobs) skeleton up to nt=16384), a
 //! live speedup measurement against the pre-arena reference compiler,
-//! and the V1–V4 cache-strategy miss rate vs cache capacity (model mode,
-//! GH200 profile — the ablation's acceptance axis).
+//! the DES-structure footprint probe at streaming scale (sparse
+//! residency tables + bounded host store, bytes per live tile), and the
+//! V1–V4 cache-strategy miss rate vs cache capacity (model mode, GH200
+//! profile — the ablation's acceptance axis).
 //!
 //! Emits `BENCH_schedule.json` at the repo root; CI's bench-gate job
-//! enforces the nt=4096 compile budget and the IR bytes/job bound from
-//! it. Run with `cargo bench --bench schedule`.
+//! enforces the nt=4096/nt=16384 compile budgets, the IR bytes/job
+//! bound, and the DES bytes-per-live-tile bound from it. Run with
+//! `cargo bench --bench schedule`.
 
 use ooc_cholesky::config::{EvictionKind, HwProfile, Mode, RunConfig, Version};
 use ooc_cholesky::figures::POLICY_AXIS;
@@ -127,6 +130,12 @@ mod legacy {
                 cost += match *src {
                     ReadSrc::Peer { src } => links.d2d_time(bytes, src, dev),
                     ReadSrc::Host => links.h2d_time(bytes, device_of_row(i, ndev), dev),
+                    // the legacy sweep never bounds host RAM, so route_read
+                    // never spills a read to disk; charge both hops anyway
+                    // so the reference stays total over ReadSrc
+                    ReadSrc::Disk => {
+                        links.disk_time(bytes) + links.h2d_time(bytes, device_of_row(i, ndev), dev)
+                    }
                 };
             }
             let est_end = clocks[gid] + cost;
@@ -243,6 +252,89 @@ fn main() {
         ]));
     }
 
+    println!("\n== streaming-scale skeleton compile (nt=16384, ~134M jobs) ==");
+    {
+        // single timed sample: the schedule alone is ~4 GiB of jobs, so
+        // repeated bench iterations would dominate CI wall time and peak
+        // RSS for no extra signal — the gate reads min_s, which a single
+        // honest sample provides
+        let nt = 16384usize;
+        let schedule = Schedule::left_looking(nt, 4, 8);
+        let t0 = std::time::Instant::now();
+        let sk = compile_skeleton(&schedule);
+        let dt = t0.elapsed().as_secs_f64();
+        let bytes_per_job = sk.heap_bytes() as f64 / sk.total_jobs().max(1) as f64;
+        println!(
+            "skeleton_nt{nt}: {dt:.3} s, {} jobs, {:.1} bytes/job",
+            sk.total_jobs(),
+            bytes_per_job
+        );
+        skeleton_points.push(Json::obj(vec![
+            ("nt", Json::num(nt as f64)),
+            ("kind", Json::str("skeleton")),
+            ("mean_s", Json::num(dt)),
+            ("min_s", Json::num(dt)),
+            ("samples", Json::num(1.0)),
+            ("jobs", Json::num(sk.total_jobs() as f64)),
+            ("reads", Json::num(sk.total_reads as f64)),
+            ("bytes_per_job", Json::num(bytes_per_job)),
+        ]));
+    }
+
+    println!("\n== DES-structure footprint at streaming scale (nt=16384 id space) ==");
+    let des_footprint = {
+        use ooc_cholesky::cache::HostStore;
+        use ooc_cholesky::config::HostPolicy;
+        use ooc_cholesky::exec::model::ResidencyTables;
+        use ooc_cholesky::tiles::{tri_len, TileId};
+        let (nt, ndev, spd) = (16384usize, 4usize, 8usize);
+        // populate the residency tables with a working-front live set —
+        // two full panel rows of operands landed + prefetched per device,
+        // the shape of a left-looking sweep's resident window — and
+        // measure what the sparse tables actually charge per live entry
+        let mut res = ResidencyTables::new(ndev);
+        for dev in 0..ndev {
+            for i in [nt - 1, nt - 2] {
+                for j in 0..=i {
+                    res.set_landed(dev, TileId::new(i, j), 1.0);
+                    res.set_prefetched(dev, TileId::new(i, j), 0.5);
+                }
+            }
+        }
+        let live = res.live();
+        let bytes_per_live = res.heap_bytes() as f64 / live.max(1) as f64;
+        // the host tier's book-keeping map at a bounded capacity: preload
+        // offers 3x the budget, the store admits exactly what fits
+        let tile = (128u64 * 128) * 8;
+        let cap_tiles = 4096usize;
+        let mut host = HostStore::bounded(cap_tiles as u64 * tile, HostPolicy::Deadline);
+        host.preload((0..3 * cap_tiles).map(|i| (TileId::from_index(i), tile)));
+        let host_bytes_per_tile = host.heap_bytes() as f64 / host.len().max(1) as f64;
+        // per-device event-lane cursors: streams + transfer lane + disk lane
+        let lane_cursor_bytes = (ndev * (spd + 2) * std::mem::size_of::<f64>()) as u64;
+        // what the pre-streaming dense Vec<f64> layout would have paid
+        let dense_bytes = (tri_len(nt) * 8 * 2 * ndev) as u64;
+        println!(
+            "residency: {live} live entries, {bytes_per_live:.1} B/entry \
+             (dense layout: {} across {ndev} devices)",
+            ooc_cholesky::util::human_bytes(dense_bytes)
+        );
+        println!(
+            "host store: {} entries at capacity, {host_bytes_per_tile:.1} B/tile; \
+             lane cursors: {lane_cursor_bytes} B",
+            host.len()
+        );
+        Json::obj(vec![
+            ("nt", Json::num(nt as f64)),
+            ("ndev", Json::num(ndev as f64)),
+            ("live_tiles", Json::num(live as f64)),
+            ("bytes_per_live_tile", Json::num(bytes_per_live)),
+            ("host_store_bytes_per_tile", Json::num(host_bytes_per_tile)),
+            ("lane_cursor_bytes", Json::num(lane_cursor_bytes as f64)),
+            ("dense_equivalent_bytes", Json::num(dense_bytes as f64)),
+        ])
+    };
+
     let doc = Json::obj(vec![
         ("bench", Json::str("schedule")),
         ("generated_by", Json::str("cargo bench --bench schedule")),
@@ -257,6 +349,7 @@ fn main() {
         ),
         ("full_ir", Json::arr(full_points)),
         ("skeleton", Json::arr(skeleton_points)),
+        ("des_footprint", des_footprint),
         ("speedup_vs_legacy_nt512", Json::num(speedup)),
     ]);
     let out = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_schedule.json");

@@ -65,7 +65,10 @@ impl Hasher for TileHasher {
     }
 }
 
-type TileMap<V> = HashMap<TileKey, V, BuildHasherDefault<TileHasher>>;
+/// Tile-keyed hash map with the fast fixed hasher. Public so sparse
+/// per-tile tables elsewhere (the DES's O(live set) residency tables)
+/// share the same keying.
+pub type TileMap<V> = HashMap<TileKey, V, BuildHasherDefault<TileHasher>>;
 
 #[derive(Debug)]
 struct Entry<T> {
@@ -238,11 +241,21 @@ impl<T> CacheTable<T> {
     }
 
     /// Drain the keys removed (stolen or invalidated) since the last
-    /// call. The executors feed these to the
-    /// [`ResidencyDirectory`] so it never claims a copy the cache no
-    /// longer holds.
-    pub fn drain_evicted(&mut self) -> Vec<TileKey> {
-        std::mem::take(&mut self.evicted_log)
+    /// call into `out`, which is cleared first. The executors feed these
+    /// to the [`ResidencyDirectory`] so it never claims a copy the cache
+    /// no longer holds. Takes a caller-supplied buffer so the per-sync
+    /// drain allocates nothing in steady state (the directory sync runs
+    /// after every job — at large nt a fresh `Vec` per call is real
+    /// allocator traffic): the buffers swap, so the caller's capacity
+    /// becomes the new log and the log's contents go to the caller.
+    pub fn drain_evicted_into(&mut self, out: &mut Vec<TileKey>) {
+        out.clear();
+        std::mem::swap(&mut self.evicted_log, out);
+    }
+
+    /// True if any removal is pending for [`Self::drain_evicted_into`].
+    pub fn has_evicted(&self) -> bool {
+        !self.evicted_log.is_empty()
     }
 
     /// Would `bytes` fit without stealing anything?
@@ -403,6 +416,215 @@ impl<T> CacheTable<T> {
         }
         if self.used() > self.capacity {
             return Err(format!("used {} > capacity {}", self.used(), self.capacity));
+        }
+        Ok(())
+    }
+}
+
+/// One host-resident tile in the [`HostStore`].
+#[derive(Debug)]
+struct HostEntry {
+    bytes: u64,
+    /// the host copy differs from whatever the NVMe tier holds (a
+    /// written-back factor tile): evicting it must write it out
+    dirty: bool,
+    /// a byte-identical copy already exists on the NVMe tier, so a clean
+    /// eviction is a free drop
+    on_disk: bool,
+    last_use: u64,
+}
+
+/// The finite host-RAM tier between the device caches and the NVMe
+/// spill tier. Tracks which tiles are host-resident under a byte
+/// capacity; on overflow it picks spill victims either by the compiled
+/// schedule's next-use deadline ([`HostPolicy::Deadline`] — host-level
+/// Belady/MIN) or by recency ([`HostPolicy::Lru`], the naive baseline).
+///
+/// The store only does the bookkeeping: it returns the set of tiles
+/// whose payloads must move to disk, and the executor charges the disk
+/// link / performs the temp-file write. An *unbounded* store (the
+/// default — the paper's infinite-host-RAM assumption) reports every
+/// tile resident and never spills, so the tier is strictly additive:
+/// no disk byte is ever counted and no behaviour changes.
+///
+/// State is O(host-resident set), never O(nt²): tiles that live on disk
+/// occupy no entry at all.
+pub struct HostStore {
+    /// `u64::MAX` when unbounded
+    capacity: u64,
+    resident_bytes: u64,
+    policy: crate::config::HostPolicy,
+    tick: u64,
+    entries: TileMap<HostEntry>,
+    bounded: bool,
+}
+
+impl HostStore {
+    /// The infinite-host-RAM default: everything is resident, nothing
+    /// ever spills.
+    pub fn unbounded() -> Self {
+        HostStore {
+            capacity: u64::MAX,
+            resident_bytes: 0,
+            policy: crate::config::HostPolicy::Deadline,
+            tick: 0,
+            entries: TileMap::default(),
+            bounded: false,
+        }
+    }
+
+    /// A host pool bounded at `capacity` bytes.
+    pub fn bounded(capacity: u64, policy: crate::config::HostPolicy) -> Self {
+        HostStore { capacity, bounded: true, policy, ..Self::unbounded() }
+    }
+
+    /// Build from a run config: bounded iff `--host-mem` was given.
+    pub fn for_run(cfg: &crate::config::RunConfig) -> Self {
+        match cfg.host_mem_bytes {
+            Some(cap) => Self::bounded(cap, cfg.host_policy),
+            None => Self::unbounded(),
+        }
+    }
+
+    pub fn is_bounded(&self) -> bool {
+        self.bounded
+    }
+    pub fn capacity(&self) -> u64 {
+        self.capacity
+    }
+    pub fn resident_bytes(&self) -> u64 {
+        self.resident_bytes
+    }
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Seed the initial residency: admit tiles *in the order given*
+    /// until the capacity is full; the rest start on the NVMe tier.
+    /// Callers pass tiles in `TileId` order, which makes the
+    /// compile-time residency estimate (`host_cutoff`) exact at t=0.
+    pub fn preload(&mut self, tiles: impl IntoIterator<Item = (TileKey, u64)>) {
+        if !self.bounded {
+            return;
+        }
+        for (key, bytes) in tiles {
+            if self.resident_bytes + bytes > self.capacity {
+                break;
+            }
+            // the initial tiles exist only in RAM: evicting one later
+            // must write it out even though it is clean
+            self.entries
+                .insert(key, HostEntry { bytes, dirty: false, on_disk: false, last_use: 0 });
+            self.resident_bytes += bytes;
+        }
+    }
+
+    /// Is this tile's payload in host RAM right now? (Always true for
+    /// the unbounded store.)
+    pub fn resident(&self, key: impl Into<TileId>) -> bool {
+        !self.bounded || self.entries.contains_key(&key.into())
+    }
+
+    /// Bump the recency clock on a host read (an H2D load served from
+    /// host RAM).
+    pub fn touch(&mut self, key: impl Into<TileId>) {
+        if !self.bounded {
+            return;
+        }
+        self.tick += 1;
+        let tick = self.tick;
+        if let Some(e) = self.entries.get_mut(&key.into()) {
+            e.last_use = tick;
+        }
+    }
+
+    /// Admit a tile into host RAM: `dirty = false` after a disk→host
+    /// read (the disk copy stays valid), `dirty = true` for a D2H
+    /// write-back (the result supersedes any disk copy). Victims that
+    /// must be written to the NVMe tier — dirty ones, and clean ones
+    /// whose only copy is in RAM — are appended to `spills` as
+    /// `(tile, bytes)`; victims with a valid disk copy are dropped
+    /// free. `next_use` is the deadline oracle for
+    /// [`HostPolicy::Deadline`] (`u64::MAX` = never used again).
+    pub fn insert(
+        &mut self,
+        key: impl Into<TileId>,
+        bytes: u64,
+        dirty: bool,
+        next_use: impl Fn(TileKey) -> u64,
+        spills: &mut Vec<(TileKey, u64)>,
+    ) {
+        if !self.bounded {
+            return;
+        }
+        let key = key.into();
+        self.tick += 1;
+        let tick = self.tick;
+        if let Some(e) = self.entries.get_mut(&key) {
+            e.last_use = tick;
+            if dirty {
+                e.dirty = true;
+                e.on_disk = false; // any disk copy is now stale
+            }
+            return;
+        }
+        while self.resident_bytes + bytes > self.capacity {
+            let victim = match self.policy {
+                // deadline-ordered spill: the tile whose next scheduled
+                // use is farthest loses (max next_use, key-max tiebreak
+                // so hash iteration order never matters)
+                crate::config::HostPolicy::Deadline => self
+                    .entries
+                    .keys()
+                    .map(|&k| (next_use(k), k))
+                    .max()
+                    .map(|(_, k)| k),
+                // naive recency spill (ticks are unique; key-min
+                // tiebreak covers untouched preloads)
+                crate::config::HostPolicy::Lru => self
+                    .entries
+                    .iter()
+                    .map(|(&k, e)| (e.last_use, k))
+                    .min()
+                    .map(|(_, k)| k),
+            };
+            let Some(v) = victim else {
+                // nothing left to evict (capacity below one tile —
+                // validate() forbids this); admit over budget rather
+                // than deadlock
+                debug_assert!(false, "host pool thrashing below one tile");
+                break;
+            };
+            let e = self.entries.remove(&v).unwrap();
+            self.resident_bytes -= e.bytes;
+            if e.dirty || !e.on_disk {
+                spills.push((v, e.bytes));
+            }
+        }
+        self.entries
+            .insert(key, HostEntry { bytes, dirty, on_disk: !dirty, last_use: tick });
+        self.resident_bytes += bytes;
+    }
+
+    /// Approximate heap footprint (the bench gate's DES-structure
+    /// probe): hash capacity × entry width.
+    pub fn heap_bytes(&self) -> usize {
+        self.entries.capacity()
+            * (std::mem::size_of::<TileKey>() + std::mem::size_of::<HostEntry>())
+    }
+
+    /// Invariant check for tests: byte accounting matches entries and
+    /// respects capacity (bounded stores only).
+    pub fn check_invariants(&self) -> Result<(), String> {
+        let sum: u64 = self.entries.values().map(|e| e.bytes).sum();
+        if sum != self.resident_bytes {
+            return Err(format!("resident_bytes {} != sum {}", self.resident_bytes, sum));
+        }
+        if self.bounded && self.resident_bytes > self.capacity {
+            return Err(format!("resident {} > capacity {}", self.resident_bytes, self.capacity));
         }
         Ok(())
     }
@@ -597,15 +819,109 @@ mod tests {
     fn eviction_log_reports_every_removal() {
         let met = m();
         let mut c: CacheTable<u32> = CacheTable::new(200, true);
+        let mut gone: Vec<TileKey> = Vec::new();
         c.insert((0, 0), 100, Arc::new(0), &met);
         c.insert((1, 0), 100, Arc::new(1), &met);
-        assert!(c.drain_evicted().is_empty(), "no removals yet");
+        assert!(!c.has_evicted(), "no removals yet");
+        c.drain_evicted_into(&mut gone);
+        assert!(gone.is_empty());
         c.insert((2, 0), 100, Arc::new(2), &met); // steals (0,0)
         c.invalidate((1, 0));
-        let mut gone = c.drain_evicted();
+        assert!(c.has_evicted());
+        c.drain_evicted_into(&mut gone);
         gone.sort_unstable();
         assert_eq!(gone, vec![TileId::new(0, 0), TileId::new(1, 0)]);
-        assert!(c.drain_evicted().is_empty(), "drain empties the log");
+        c.drain_evicted_into(&mut gone);
+        assert!(gone.is_empty(), "drain empties the log");
+    }
+
+    #[test]
+    fn drain_buffer_is_reused_not_reallocated() {
+        let met = m();
+        let mut c: CacheTable<u32> = CacheTable::new(200, true);
+        let mut gone: Vec<TileKey> = Vec::with_capacity(64);
+        c.insert((0, 0), 100, Arc::new(0), &met);
+        c.insert((1, 0), 100, Arc::new(1), &met);
+        c.insert((2, 0), 100, Arc::new(2), &met); // steals (0,0)
+        c.drain_evicted_into(&mut gone);
+        assert_eq!(gone, vec![TileId::new(0, 0)]);
+        // the swapped-in buffer's capacity now backs the log: repeated
+        // sync cycles settle into zero fresh allocations
+        c.insert((3, 0), 100, Arc::new(3), &met);
+        c.drain_evicted_into(&mut gone);
+        assert_eq!(gone.len(), 1);
+        assert!(gone.capacity() >= 1);
+    }
+
+    #[test]
+    fn unbounded_host_store_is_inert() {
+        let mut h = HostStore::unbounded();
+        assert!(!h.is_bounded());
+        assert!(h.resident((5, 3)), "everything is host-resident by default");
+        let mut spills = Vec::new();
+        h.insert((5, 3), 1 << 20, true, |_| 0, &mut spills);
+        assert!(spills.is_empty() && h.is_empty(), "no state, no spills");
+        h.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn host_preload_fills_in_order_then_stops() {
+        let mut h = HostStore::bounded(250, crate::config::HostPolicy::Lru);
+        h.preload([(TileId::new(0, 0), 100), (TileId::new(1, 0), 100), (TileId::new(1, 1), 100)]);
+        assert!(h.resident((0, 0)) && h.resident((1, 0)));
+        assert!(!h.resident((1, 1)), "third tile does not fit: starts on disk");
+        assert_eq!(h.resident_bytes(), 200);
+        h.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn lru_spill_writes_dirty_and_ram_only_victims() {
+        let mut h = HostStore::bounded(200, crate::config::HostPolicy::Lru);
+        let mut spills = Vec::new();
+        // preloaded tiles exist only in RAM: evicting one must spill it
+        h.preload([(TileId::new(0, 0), 100)]);
+        // a clean disk-read admit: its disk copy stays valid
+        h.insert((1, 0), 100, false, |_| 0, &mut spills);
+        assert!(spills.is_empty());
+        h.touch((0, 0)); // (1,0) is now LRU
+        h.insert((2, 0), 100, false, |_| 0, &mut spills);
+        assert_eq!(spills, vec![], "clean on-disk victim (1,0) drops free");
+        assert!(!h.resident((1, 0)) && h.resident((0, 0)));
+        // next admit evicts the RAM-only preload: that one must be written
+        h.insert((3, 0), 100, false, |_| 0, &mut spills);
+        assert_eq!(spills, vec![(TileId::new(0, 0), 100)]);
+        // a dirty write-back, then evict it: spills again
+        spills.clear();
+        h.insert((2, 0), 100, true, |_| 0, &mut spills); // mark dirty in place
+        h.touch((3, 0));
+        h.insert((4, 0), 100, false, |_| 0, &mut spills);
+        assert_eq!(spills, vec![(TileId::new(2, 0), 100)], "dirty victim is written out");
+        h.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn deadline_spill_victimizes_farthest_next_use() {
+        let mut h = HostStore::bounded(300, crate::config::HostPolicy::Deadline);
+        let mut spills = Vec::new();
+        let nu = |k: TileKey| -> u64 {
+            // (0,0) needed soon, (1,0) later, (1,1) never again
+            [(TileId::new(0, 0), 5), (TileId::new(1, 0), 50), (TileId::new(1, 1), u64::MAX)]
+                .iter()
+                .find(|(t, _)| *t == k)
+                .map(|(_, u)| *u)
+                .unwrap_or(0)
+        };
+        h.insert((0, 0), 100, false, nu, &mut spills);
+        h.insert((1, 0), 100, false, nu, &mut spills);
+        h.insert((1, 1), 100, false, nu, &mut spills);
+        h.insert((2, 0), 100, false, nu, &mut spills);
+        assert!(!h.resident((1, 1)), "never-again tile spills first");
+        assert!(h.resident((0, 0)) && h.resident((1, 0)));
+        h.insert((2, 1), 100, false, nu, &mut spills);
+        assert!(!h.resident((1, 0)), "then the farthest finite deadline");
+        assert!(h.resident((0, 0)), "the soonest-needed tile survives");
+        assert!(spills.is_empty(), "all victims had valid disk copies");
+        h.check_invariants().unwrap();
     }
 
     #[test]

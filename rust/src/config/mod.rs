@@ -115,6 +115,37 @@ impl EvictionKind {
     ];
 }
 
+/// Victim selection for the finite host tier's [`crate::cache::HostStore`]
+/// (`--host-policy`). Chooses which host-resident tile is spilled to the
+/// NVMe tier when a bounded host pool overflows.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum HostPolicy {
+    /// deadline-ordered spill (default): victimize the tile whose next
+    /// scheduled use is farthest away, read off the compiled schedule's
+    /// next-use tables — host-level Belady/MIN, so re-reads from disk
+    /// are minimized
+    Deadline,
+    /// naive least-recently-used spill (the baseline the acceptance
+    /// test beats)
+    Lru,
+}
+
+impl HostPolicy {
+    pub fn name(self) -> &'static str {
+        match self {
+            HostPolicy::Deadline => "deadline",
+            HostPolicy::Lru => "lru",
+        }
+    }
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "deadline" | "min" | "belady" => Some(HostPolicy::Deadline),
+            "lru" => Some(HostPolicy::Lru),
+            _ => None,
+        }
+    }
+}
+
 /// The 1- to 4-precision enabled sets of the paper's Fig. 4 variants —
 /// the `--precisions` ablation axis (every set contains F64, as
 /// [`RunConfig::validate`] requires). Order: coarsest set first, so
@@ -216,6 +247,10 @@ pub struct HwProfile {
     /// fraction of peak a ts×ts GEMM achieves (surface-to-volume):
     /// eff = ts / (ts + eff_knee)
     pub eff_knee: f64,
+    /// host↔NVMe spill-tier bandwidth, GB/s (sequential, large-block)
+    pub disk_gbps: f64,
+    /// per-transfer latency on the spill tier, µs (submission + seek)
+    pub disk_latency_us: f64,
 }
 
 /// One directed link: everything needed to time a transfer over it.
@@ -253,6 +288,9 @@ pub struct LinkModel {
     d2h: Vec<Vec<Link>>,
     /// `d2d[src][dst]`: peer link (src == dst entries are unused)
     d2d: Vec<Vec<Link>>,
+    /// host↔disk spill link (one NVMe tier shared by every NUMA domain;
+    /// only exercised when a finite `--host-mem` bound forces spills)
+    disk: Link,
 }
 
 impl LinkModel {
@@ -278,6 +316,15 @@ impl LinkModel {
     /// Seconds to copy `bytes` device-to-device over the peer link.
     pub fn d2d_time(&self, bytes: u64, src: usize, dst: usize) -> f64 {
         self.d2d[src][dst].time(bytes)
+    }
+
+    pub fn disk(&self) -> &Link {
+        &self.disk
+    }
+    /// Seconds to move `bytes` between host RAM and the NVMe spill tier
+    /// (either direction — the presets model a full-duplex drive).
+    pub fn disk_time(&self, bytes: u64) -> f64 {
+        self.disk.time(bytes)
     }
 }
 
@@ -335,7 +382,10 @@ impl HwProfile {
                     .collect()
             })
             .collect();
-        LinkModel { ndev, h2d, d2h, d2d }
+        // the spill tier is host-side DMA: neither NUMA locality nor the
+        // pageable derating applies
+        let disk = Link { gbps: self.disk_gbps, latency_us: self.disk_latency_us };
+        LinkModel { ndev, h2d, d2h, d2d, disk }
     }
 
     pub fn vmem_bytes(&self) -> u64 {
@@ -361,6 +411,9 @@ impl HwProfile {
             vmem_gib: 80.0,
             malloc_us: 120.0,
             eff_knee: 120.0,
+            // Gen4 x4 NVMe class (sequential)
+            disk_gbps: 6.5,
+            disk_latency_us: 100.0,
         }
     }
 
@@ -382,6 +435,9 @@ impl HwProfile {
             vmem_gib: 80.0,
             malloc_us: 110.0,
             eff_knee: 160.0,
+            // Gen5 x4 NVMe class (sequential)
+            disk_gbps: 12.0,
+            disk_latency_us: 80.0,
         }
     }
 
@@ -405,6 +461,9 @@ impl HwProfile {
             vmem_gib: 80.0,
             malloc_us: 100.0,
             eff_knee: 160.0,
+            // Grace-local Gen5 x8 NVMe class (sequential)
+            disk_gbps: 14.0,
+            disk_latency_us: 60.0,
         }
     }
 
@@ -458,6 +517,17 @@ pub struct RunConfig {
     /// device memory budget in bytes (None = profile default; real mode
     /// uses this to *force* OOC behaviour at small scales)
     pub vmem_bytes: Option<u64>,
+    /// host memory budget in bytes (`--host-mem-mib`/`--host-mem-gib`).
+    /// None = unbounded host RAM — the paper's assumption, and the
+    /// default: the NVMe tier is then never exercised and every counted
+    /// metric is bit-identical to the tier not existing. Some(c) bounds
+    /// the host pool at `c` bytes: tiles beyond the bound live on the
+    /// NVMe spill tier, eviction cascades HBM → host → disk, and a read
+    /// whose tile spilled is a two-hop load charged on both links
+    pub host_mem_bytes: Option<u64>,
+    /// spill victim selection for the bounded host pool (`--host-policy`;
+    /// only meaningful with a finite `host_mem_bytes`)
+    pub host_policy: HostPolicy,
     pub hw: HwProfile,
     /// enabled precisions (always contains F64); `[F64]` = uniform FP64
     pub precisions: Vec<Precision>,
@@ -509,6 +579,8 @@ impl Default for RunConfig {
             ndev: 1,
             streams_per_dev: 4,
             vmem_bytes: None,
+            host_mem_bytes: None,
+            host_policy: HostPolicy::Deadline,
             hw: HwProfile::gh200_nvlc2c(),
             precisions: vec![Precision::F64],
             accuracy: 1e-8,
@@ -578,6 +650,21 @@ impl RunConfig {
                 self.ts * self.ts * 8
             ));
         }
+        if let Some(host) = self.host_mem_bytes {
+            if host < min_tiles {
+                return Err(format!(
+                    "host-mem {} too small for even 3 tiles of {} bytes",
+                    host,
+                    self.ts * self.ts * 8
+                ));
+            }
+        }
+        if !(self.hw.disk_gbps > 0.0) || self.hw.disk_latency_us < 0.0 {
+            return Err(format!(
+                "disk link needs positive bandwidth and non-negative latency, got {} GB/s / {} us",
+                self.hw.disk_gbps, self.hw.disk_latency_us
+            ));
+        }
         Ok(())
     }
 
@@ -610,6 +697,17 @@ impl RunConfig {
             "streams" | "streams_per_dev" => self.streams_per_dev = num()? as usize,
             "vmem_mib" => self.vmem_bytes = Some((num()? * 1024.0 * 1024.0) as u64),
             "vmem_gib" => self.vmem_bytes = Some((num()? * 1024.0 * 1024.0 * 1024.0) as u64),
+            "host_mem_mib" => self.host_mem_bytes = Some((num()? * 1024.0 * 1024.0) as u64),
+            "host_mem_gib" => {
+                self.host_mem_bytes = Some((num()? * 1024.0 * 1024.0 * 1024.0) as u64)
+            }
+            "host_policy" => {
+                self.host_policy =
+                    HostPolicy::parse(st()?).ok_or_else(|| format!("bad host_policy {v}"))?
+            }
+            // NVMe spill-link overrides (the profile carries the preset)
+            "disk_gbps" => self.hw.disk_gbps = num()?,
+            "disk_latency_us" => self.hw.disk_latency_us = num()?,
             "hw" | "profile" => {
                 self.hw = HwProfile::by_name(st()?).ok_or_else(|| format!("bad hw {v}"))?
             }
@@ -679,6 +777,12 @@ impl RunConfig {
         m.insert("ndev".into(), Json::num(self.ndev as f64));
         m.insert("streams_per_dev".into(), Json::num(self.streams_per_dev as f64));
         m.insert("vmem_bytes".into(), Json::num(self.device_vmem() as f64));
+        if let Some(host) = self.host_mem_bytes {
+            m.insert("host_mem_bytes".into(), Json::num(host as f64));
+            m.insert("host_policy".into(), Json::str(self.host_policy.name()));
+            m.insert("disk_gbps".into(), Json::num(self.hw.disk_gbps));
+            m.insert("disk_latency_us".into(), Json::num(self.hw.disk_latency_us));
+        }
         m.insert("hw".into(), Json::str(self.hw.name.clone()));
         m.insert(
             "precisions".into(),
@@ -822,6 +926,37 @@ mod tests {
     }
 
     #[test]
+    fn host_tier_keys_parse_and_validate() {
+        let mut cfg = RunConfig::default();
+        assert!(cfg.host_mem_bytes.is_none(), "unbounded host RAM is the default");
+        assert_eq!(cfg.host_policy, HostPolicy::Deadline);
+        let j = crate::util::json::parse(
+            r#"{"host_mem_mib": 2, "host_policy": "lru",
+                "disk_gbps": 3.0, "disk_latency_us": 50}"#,
+        )
+        .unwrap();
+        cfg.apply_json(&j).unwrap();
+        assert_eq!(cfg.host_mem_bytes, Some(2 * 1024 * 1024));
+        assert_eq!(cfg.host_policy, HostPolicy::Lru);
+        assert_eq!(cfg.hw.disk_gbps, 3.0);
+        assert_eq!(cfg.hw.disk_latency_us, 50.0);
+        cfg.validate().unwrap();
+        let j = crate::util::json::parse(r#"{"host_mem_gib": 1}"#).unwrap();
+        cfg.apply_json(&j).unwrap();
+        assert_eq!(cfg.host_mem_bytes, Some(1 << 30));
+        // aliases accepted by the policy parser
+        assert_eq!(HostPolicy::parse("min"), Some(HostPolicy::Deadline));
+        assert_eq!(HostPolicy::parse("belady"), Some(HostPolicy::Deadline));
+        // a host bound below 3 tiles is rejected, like vmem
+        let bad = RunConfig { host_mem_bytes: Some(1024), ..RunConfig::default() };
+        assert!(bad.validate().is_err());
+        // the spill link must stay timeable
+        let mut bad = RunConfig::default();
+        bad.hw.disk_gbps = 0.0;
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
     fn unknown_key_rejected() {
         let mut cfg = RunConfig::default();
         let j = crate::util::json::parse(r#"{"bogus": 1}"#).unwrap();
@@ -846,6 +981,9 @@ mod tests {
             let hw = HwProfile::by_name(name).unwrap();
             assert!(hw.tflops[0] > 0.0 && hw.tflops[3] >= hw.tflops[2]);
             assert!(hw.h2d_gbps > 0.0 && hw.d2d_gbps > 0.0);
+            // every preset carries an NVMe tier, always the slowest link
+            assert!(hw.disk_gbps > 0.0 && hw.disk_gbps < hw.h2d_gbps.min(hw.d2d_gbps));
+            assert!(hw.disk_latency_us >= hw.latency_us);
             assert!(hw.efficiency(256) > 0.4 && hw.efficiency(256) < 1.0);
             // bigger tiles -> better efficiency
             assert!(hw.efficiency(2048) > hw.efficiency(256));
@@ -882,6 +1020,9 @@ mod tests {
             (pageable.h2d(0, 0).gbps - hw.h2d_gbps * hw.pageable_factor).abs() < 1e-12,
             "derating applied exactly once"
         );
+        // the spill link is never derated: pinning and NUMA don't apply
+        assert_eq!(pageable.disk().gbps, hw.disk_gbps);
+        assert!(pageable.disk_time(1 << 24) > pageable.disk_time(1 << 20));
         // NUMA-remote host links are capped; peer links are not derated
         let gh = HwProfile::gh200_nvlc2c().link_model(4, false);
         assert!(gh.h2d_time(1 << 24, 1, 0) > gh.h2d_time(1 << 24, 0, 0));

@@ -105,7 +105,7 @@ impl RunReport {
             )
         };
         format!(
-            "{:>12} n={:<7} ts={:<4} dev={} str={} | {:>9.3}s {:>8.2} TFlop/s | H2D {:>10} D2H {:>10} D2D {:>10} | {} | {} | {} | util {:>5.1}% ovl {:>5.1}%{}{}",
+            "{:>12} n={:<7} ts={:<4} dev={} str={} | {:>9.3}s {:>8.2} TFlop/s | H2D {:>10} D2H {:>10} D2D {:>10}{} | {} | {} | {} | util {:>5.1}% ovl {:>5.1}%{}{}",
             self.cfg.version.name(),
             self.cfg.n,
             self.cfg.ts,
@@ -116,6 +116,17 @@ impl RunReport {
             crate::util::human_bytes(self.metrics.h2d_bytes),
             crate::util::human_bytes(self.metrics.d2h_bytes),
             crate::util::human_bytes(self.metrics.d2d_bytes),
+            // tier traffic only appears when a finite host capacity put
+            // the NVMe link in play — the unbounded line is unchanged
+            if self.metrics.disk_rd_bytes + self.metrics.disk_wr_bytes > 0 {
+                format!(
+                    " DiskRd {:>10} DiskWr {:>10}",
+                    crate::util::human_bytes(self.metrics.disk_rd_bytes),
+                    crate::util::human_bytes(self.metrics.disk_wr_bytes),
+                )
+            } else {
+                String::new()
+            },
             split("h2d/prec", &self.metrics.h2d_by_prec),
             split("d2h/prec", &self.metrics.d2h_by_prec),
             split("d2d/prec", &self.metrics.d2d_by_prec),
@@ -146,7 +157,7 @@ impl RunReport {
     /// H2D/D2H/D2D byte splits (each partitions its direction's total).
     pub fn golden_metrics_string(&self) -> String {
         let m = &self.metrics;
-        let fields: [(&str, u64); 33] = [
+        let fields: [(&str, u64); 37] = [
             ("cache_evictions", m.cache_evictions),
             ("cache_hits", m.cache_hits),
             ("cache_misses", m.cache_misses),
@@ -164,6 +175,10 @@ impl RunReport {
             ("d2h_transfers", m.d2h_transfers),
             ("device_allocs", m.device_allocs),
             ("device_frees", m.device_frees),
+            ("disk_rd_bytes", m.disk_rd_bytes),
+            ("disk_rd_transfers", m.disk_rd_transfers),
+            ("disk_wr_bytes", m.disk_wr_bytes),
+            ("disk_wr_transfers", m.disk_wr_transfers),
             ("flops", m.flops),
             ("h2d_bytes", m.h2d_bytes),
             ("h2d_bytes_f16", m.h2d_by_prec[1]),

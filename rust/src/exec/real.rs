@@ -34,17 +34,130 @@ use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 
-use crate::cache::{CacheTable, ResidencyDirectory};
-use crate::config::{EvictionKind, RunConfig, Version};
+use crate::cache::{CacheTable, HostStore, ResidencyDirectory, TileKey};
+use crate::config::{EvictionKind, HostPolicy, RunConfig, Version};
 use crate::metrics::{Metrics, TaskOp};
 use crate::precision::Precision;
 use crate::runtime::{DevBuf, Kernel, Runtime};
 use crate::sched::{
     device_of_row, route_read, CompiledSchedule, Job, ProgressTable, ReadSrc, Schedule,
 };
-use crate::tiles::{TileId, TileMatrix};
+use crate::tiles::{tri_idx, TileId, TileMatrix};
 use crate::trace::{Event, EventKind, Label, StallCause, Trace};
 use crate::xfer::{XferEngine, XferPlan};
+
+/// Finite-host-RAM tier for the real executor (`--host-mem`): payloads
+/// the bounded [`HostStore`] evicts are written to a run-scoped spill
+/// file and their vectors freed; a later access faults the payload back
+/// in, charging the same disk counters the DES charges for a two-hop
+/// load. Victims with a still-valid disk copy are dropped without a
+/// write — their RAM payload is identical to the file's, so the vector
+/// doubles as a page cache and the re-fault skips the file read.
+struct HostTier {
+    store: Mutex<HostStore>,
+    /// spill file + reusable byte scratch; each tile lives at a fixed
+    /// offset (packed lower-triangle index × ts² × 8)
+    file: Mutex<(std::fs::File, Vec<u8>)>,
+    path: std::path::PathBuf,
+}
+
+impl HostTier {
+    /// `None` when the host pool is unbounded (the default): the real
+    /// executor then runs exactly as before, no file is ever created.
+    fn for_run(cfg: &RunConfig) -> Result<Option<HostTier>> {
+        if cfg.host_mem_bytes.is_none() {
+            return Ok(None);
+        }
+        static SEQ: AtomicU64 = AtomicU64::new(0);
+        let path = std::env::temp_dir().join(format!(
+            "mxp-spill-{}-{}.bin",
+            std::process::id(),
+            SEQ.fetch_add(1, Ordering::Relaxed)
+        ));
+        let file = std::fs::OpenOptions::new()
+            .create(true)
+            .truncate(true)
+            .read(true)
+            .write(true)
+            .open(&path)?;
+        Ok(Some(HostTier {
+            store: Mutex::new(HostStore::for_run(cfg)),
+            file: Mutex::new((file, Vec::new())),
+            path,
+        }))
+    }
+
+    fn offset(i: usize, j: usize, ts: usize) -> u64 {
+        (tri_idx(i, j) * ts * ts * 8) as u64
+    }
+
+    fn write_payload(&self, i: usize, j: usize, ts: usize, data: &[f64]) -> Result<()> {
+        use std::io::{Seek, SeekFrom, Write};
+        let (f, buf) = &mut *self.file.lock().unwrap();
+        buf.clear();
+        for x in data {
+            buf.extend_from_slice(&x.to_le_bytes());
+        }
+        f.seek(SeekFrom::Start(Self::offset(i, j, ts)))?;
+        f.write_all(buf)?;
+        Ok(())
+    }
+
+    fn read_payload(&self, i: usize, j: usize, ts: usize, out: &mut Vec<f64>) -> Result<()> {
+        use std::io::{Read, Seek, SeekFrom};
+        let (f, buf) = &mut *self.file.lock().unwrap();
+        buf.resize(ts * ts * 8, 0);
+        f.seek(SeekFrom::Start(Self::offset(i, j, ts)))?;
+        f.read_exact(buf)?;
+        out.clear();
+        out.extend(buf.chunks_exact(8).map(|c| f64::from_le_bytes(c.try_into().unwrap())));
+        Ok(())
+    }
+
+    /// Seed the tier: admit the compile-time resident set, then write
+    /// every other tile's payload out and free it — those tiles "start
+    /// on disk" in the compiled routes, so no disk byte is charged
+    /// (matching the DES, which charges preloading nothing).
+    fn init(&self, matrix: &TileMatrix, ir: &CompiledSchedule, ts: usize) -> Result<()> {
+        let mut store = self.store.lock().unwrap();
+        store.preload(ir.host_resident_tiles());
+        for i in 0..matrix.nt {
+            for j in 0..=i {
+                if store.resident((i, j)) {
+                    continue;
+                }
+                let mut t = matrix.lock(i, j);
+                let data = std::mem::take(&mut t.data);
+                self.write_payload(i, j, ts, &data)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Fault every spilled payload back in after the run so downstream
+    /// consumers (residual check, logdet, reassembly) see the complete
+    /// factor. Post-run restoration is outside the measured
+    /// factorization: nothing is charged.
+    fn restore_all(&self, matrix: &TileMatrix, ts: usize) -> Result<()> {
+        for i in 0..matrix.nt {
+            for j in 0..=i {
+                let mut t = matrix.lock(i, j);
+                if t.data.is_empty() {
+                    let mut data = std::mem::take(&mut t.data);
+                    self.read_payload(i, j, ts, &mut data)?;
+                    t.data = data;
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+impl Drop for HostTier {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_file(&self.path);
+    }
+}
 
 /// Shared state across streams.
 struct Shared<'a> {
@@ -78,6 +191,8 @@ struct Shared<'a> {
     /// set when any stream fails, so stealers drain out instead of
     /// claiming leftover work of a run that is already lost
     failed: AtomicBool,
+    /// finite host RAM + NVMe spill tier (`None` = unbounded default)
+    host: Option<HostTier>,
     metrics: Metrics,
     trace: Trace,
     /// schedule-driven transfer engine (inert when prefetch_depth == 0)
@@ -200,6 +315,119 @@ impl<'a> Shared<'a> {
         });
     }
 
+    /// Deadline oracle for host spill victims: the earliest next use of
+    /// `k` across devices, measured from each device's current horizon
+    /// (min active stream base — the same conservative horizon Belady
+    /// anchors the HBM clock to).
+    fn host_next_use(&self, k: TileKey) -> u64 {
+        let spd = self.cfg.streams_per_dev;
+        (0..self.cfg.ndev)
+            .map(|d| {
+                let d0 = d * spd;
+                let h = (d0..d0 + spd)
+                    .map(|g| self.stream_base[g].load(Ordering::Acquire))
+                    .min()
+                    .unwrap_or(u64::MAX);
+                self.ir.next_use_table(d).next_use(k, h)
+            })
+            .min()
+            .unwrap_or(u64::MAX)
+    }
+
+    /// Fault tile (i, j) into host RAM (bounded-tier runs only): a
+    /// spilled payload is read back from the spill file — the disk leg
+    /// of the two-hop load — and victims its admission pushes out are
+    /// written before the pool lock is released, so no concurrent fault
+    /// can read a victim's slot before its payload lands.
+    fn host_fault(&self, i: usize, j: usize, dev: usize) -> Result<()> {
+        let Some(tier) = &self.host else {
+            return Ok(());
+        };
+        let mut store = tier.store.lock().unwrap();
+        if store.resident((i, j)) {
+            store.touch((i, j));
+            return Ok(());
+        }
+        let ts = self.cfg.ts;
+        let t0 = self.now();
+        let prec = {
+            let mut t = self.matrix.lock(i, j);
+            // a drop-free victim kept its clean payload (page cache):
+            // the file read is skipped, but the fault is still counted
+            // as a disk read so the counters match the DES, which
+            // charges every non-resident fault
+            if t.data.is_empty() {
+                let mut data = std::mem::take(&mut t.data);
+                tier.read_payload(i, j, ts, &mut data)?;
+                t.data = data;
+            }
+            t.prec
+        };
+        let bytes = (ts * ts) as u64 * prec.width();
+        self.metrics.record_disk_rd(bytes);
+        self.trace.record(Event {
+            device: dev as u16,
+            stream: (self.cfg.streams_per_dev + 1) as u16,
+            kind: EventKind::DiskRd,
+            label: Label::DiskRd(TileId::new(i, j)),
+            t0,
+            t1: self.now(),
+        });
+        let mut spills = Vec::new();
+        store.insert((i, j), bytes, false, |k| self.host_next_use(k), &mut spills);
+        self.host_spill(tier, &spills, dev)?;
+        Ok(())
+    }
+
+    /// Write a factored tile back into the host pool. Unbounded: a plain
+    /// `write_tile`. Bounded: the payload lands dirty (it supersedes any
+    /// disk copy) and spill victims move to the file under the pool lock.
+    fn host_commit(&self, i: usize, j: usize, dev: usize, data: &[f64]) -> Result<()> {
+        let Some(tier) = &self.host else {
+            self.matrix.write_tile(i, j, data);
+            return Ok(());
+        };
+        let mut store = tier.store.lock().unwrap();
+        let prec = {
+            let mut t = self.matrix.lock(i, j);
+            t.data.resize(self.cfg.ts * self.cfg.ts, 0.0);
+            t.data.copy_from_slice(data);
+            t.prec
+        };
+        let bytes = (self.cfg.ts * self.cfg.ts) as u64 * prec.width();
+        let mut spills = Vec::new();
+        store.insert((i, j), bytes, true, |k| self.host_next_use(k), &mut spills);
+        self.host_spill(tier, &spills, dev)?;
+        Ok(())
+    }
+
+    /// Move spill victims' payloads to the file and free their vectors,
+    /// charging the disk-write counters. Caller holds the pool lock.
+    fn host_spill(&self, tier: &HostTier, spills: &[(TileKey, u64)], dev: usize) -> Result<()> {
+        for &(v, bytes) in spills {
+            let (vi, vj) = v.coords();
+            let t0 = self.now();
+            {
+                let mut t = self.matrix.lock(vi, vj);
+                if t.data.is_empty() {
+                    continue; // already spilled (cannot happen under the lock)
+                }
+                let data = std::mem::take(&mut t.data);
+                tier.write_payload(vi, vj, self.cfg.ts, &data)?;
+            }
+            self.metrics.record_disk_wr(bytes);
+            self.trace.record(Event {
+                device: dev as u16,
+                stream: (self.cfg.streams_per_dev + 1) as u16,
+                kind: EventKind::DiskWr,
+                label: Label::DiskWr(TileId::new(vi, vj)),
+                t0,
+                t1: self.now(),
+            });
+        }
+        Ok(())
+    }
+
     /// H2D upload with accounting + tracing. `dev`/`stream` for the trace.
     fn upload_tile(
         &self,
@@ -208,12 +436,21 @@ impl<'a> Shared<'a> {
         dev: usize,
         stream: usize,
     ) -> Result<(DevBuf, u64)> {
+        // the disk leg (if the payload spilled) runs before the H2D span
+        // starts, so the two hops trace as separate lanes like the DES
+        self.host_fault(i, j, dev)?;
         // upload straight from the locked host tile: PJRT copies into its
         // own buffer, so cloning into a temporary first would double-copy
         let t0 = self.now();
-        let (buf, prec) = {
+        let (buf, prec) = loop {
             let t = self.matrix.lock(i, j);
-            (self.rt.upload(&t.data, self.cfg.ts)?, t.prec)
+            if self.host.is_some() && t.data.is_empty() {
+                // spilled between the fault and this lock: re-fault
+                drop(t);
+                self.host_fault(i, j, dev)?;
+                continue;
+            }
+            break (self.rt.upload(&t.data, self.cfg.ts)?, t.prec);
         };
         let bytes = (self.cfg.ts * self.cfg.ts) as u64 * prec.width();
         self.metrics.record_h2d(bytes, prec);
@@ -254,7 +491,7 @@ impl<'a> Shared<'a> {
             t0,
             t1: self.now(),
         });
-        self.matrix.write_tile(i, j, scratch);
+        self.host_commit(i, j, dev, scratch)?;
         Ok(())
     }
 
@@ -263,13 +500,23 @@ impl<'a> Shared<'a> {
     /// removal is ever reported against refreshed state (lock order:
     /// cache, then directory).
     fn sync_dir_locked(&self, dev: usize, cache: &mut CacheTable<DevBuf>) {
-        let gone = cache.drain_evicted();
-        if !gone.is_empty() {
+        if !cache.has_evicted() {
+            return;
+        }
+        // reusable drain buffer: one per worker thread, so the hot path
+        // never allocates and threads never contend on a shared buffer
+        thread_local! {
+            static GONE: std::cell::RefCell<Vec<TileKey>> =
+                const { std::cell::RefCell::new(Vec::new()) };
+        }
+        GONE.with(|g| {
+            let gone = &mut *g.borrow_mut();
+            cache.drain_evicted_into(gone);
             let mut dir = self.dir.lock().unwrap();
-            for t in gone {
+            for &t in gone.iter() {
                 dir.record_evict(t, dev);
             }
-        }
+        });
     }
 
     /// The peer-sourcing probe shared by the demand path and the
@@ -532,6 +779,7 @@ pub fn run(cfg: &RunConfig, rt: &Runtime, matrix: &TileMatrix) -> Result<super::
         claims,
         dyn_start,
         failed: AtomicBool::new(false),
+        host: HostTier::for_run(cfg)?,
         metrics: Metrics::new(),
         trace: Trace::for_run(cfg.trace, cfg.ndev, cfg.streams_per_dev),
         xfer: XferEngine::new(plan, cfg.ndev, cfg.ndev * cfg.streams_per_dev),
@@ -539,6 +787,12 @@ pub fn run(cfg: &RunConfig, rt: &Runtime, matrix: &TileMatrix) -> Result<super::
         t0: Instant::now(),
         kernels,
     };
+
+    // bounded host pool: spill the compile-time non-resident set to the
+    // temp file before any stream starts (those tiles "start on disk")
+    if let Some(tier) = &shared.host {
+        tier.init(matrix, &shared.ir, cfg.ts)?;
+    }
 
     // V3 pins diagonals at load; pre-pin bookkeeping happens in load_tile.
     let first_err: Mutex<Option<anyhow::Error>> = Mutex::new(None);
@@ -596,6 +850,11 @@ pub fn run(cfg: &RunConfig, rt: &Runtime, matrix: &TileMatrix) -> Result<super::
     let _ = tile_bytes;
 
     let elapsed = shared.t0.elapsed().as_secs_f64();
+    // fault spilled payloads back in for downstream consumers (residual
+    // check, reassembly) — after the measured makespan, charging nothing
+    if let Some(tier) = &shared.host {
+        tier.restore_all(matrix, cfg.ts)?;
+    }
     let metrics = shared.metrics.snapshot();
     // utilization: kernel-busy time relative to makespan (merged-interval
     // utilization when a trace exists, busy/elapsed otherwise; the former
@@ -675,10 +934,13 @@ fn run_one_job(
     // clock to the min active base across its streams (conservative
     // horizon). Belady only: other policies never read the clock,
     // and this takes the contended device cache lock
-    if sh.uses_cache() && sh.cfg.eviction == EvictionKind::Belady {
-        if !stolen {
-            sh.stream_base[gid].store(sh.ir.access_base(gid, idx), Ordering::Release);
-        }
+    let belady = sh.uses_cache() && sh.cfg.eviction == EvictionKind::Belady;
+    // the deadline-ordered host spill policy reads the same horizon
+    let deadline_tier = sh.host.is_some() && sh.cfg.host_policy == HostPolicy::Deadline;
+    if (belady || deadline_tier) && !stolen {
+        sh.stream_base[gid].store(sh.ir.access_base(gid, idx), Ordering::Release);
+    }
+    if belady {
         let dev0 = dev * sh.cfg.streams_per_dev;
         let min_base = (dev0..dev0 + sh.cfg.streams_per_dev)
             .map(|g| sh.stream_base[g].load(Ordering::Acquire))
@@ -849,10 +1111,19 @@ fn run_xfer_worker(sh: &Shared, dev: usize) {
         let mut stage = sh.xfer.staging.acquire(ts * ts);
         let staged = match &peer {
             Some((_, peer_buf)) => sh.rt.download(peer_buf, &mut stage),
-            None => {
-                stage.copy_from_slice(&sh.matrix.lock(i, j).data);
-                Ok(())
-            }
+            None => loop {
+                // bounded-tier runs fault the payload in first — the
+                // disk→host leg of the two-stage prefetch
+                if let Err(e) = sh.host_fault(i, j, dev) {
+                    break Err(e);
+                }
+                let t = sh.matrix.lock(i, j);
+                if sh.host.is_some() && t.data.is_empty() {
+                    continue; // spilled between the fault and this lock
+                }
+                stage.copy_from_slice(&t.data);
+                break Ok(());
+            },
         };
         let uploaded = staged.and_then(|()| sh.rt.upload(&stage, ts));
         sh.xfer.staging.release(stage);

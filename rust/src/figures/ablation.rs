@@ -312,6 +312,63 @@ pub fn ablation_ndev(n: usize, ts: usize) -> Result<Json> {
     Ok(Json::obj(vec![("figure", Json::str("ablation_ndev")), ("rows", Json::Arr(rows))]))
 }
 
+/// Host-memory axis (the three-tier cascade): host capacity at ∞ / 2x /
+/// 1x / 0.5x the factored matrix's footprint, reporting the NVMe bytes
+/// each point pays and the makespan it costs. At >= 1x the matrix fits
+/// in RAM and the disk link stays silent (the tier is strictly
+/// additive); below 1x the compile-time residency split puts the tail
+/// of the triangle on disk and every touch of it is a two-hop load,
+/// with the deadline spill policy deciding what the write-back churn
+/// re-reads.
+pub fn ablation_host_mem(n: usize, ts: usize) -> Result<Json> {
+    let nt = n.div_ceil(ts);
+    let ws = (crate::tiles::tri_len(nt) * ts * ts * 8) as u64;
+    println!(
+        "\n=== Ablation: host memory (GH200, V3, n={n}, working set {}) ===",
+        crate::util::human_bytes(ws)
+    );
+    println!(
+        "{:>10} {:>12} {:>12} {:>12} {:>10}",
+        "host/ws", "DiskRd GB", "DiskWr GB", "elapsed s", "TFlop/s"
+    );
+    let mut rows = Vec::new();
+    for (label, frac) in [("inf", f64::INFINITY), ("2x", 2.0), ("1x", 1.0), ("0.5x", 0.5)] {
+        let cfg = RunConfig {
+            n,
+            ts,
+            version: Version::V3,
+            mode: Mode::Model,
+            hw: HwProfile::gh200_nvlc2c(),
+            // enough HBM pressure that spilled tiles get re-read
+            vmem_bytes: Some(ws / 4),
+            streams_per_dev: 8,
+            host_mem_bytes: frac.is_finite().then(|| (ws as f64 * frac) as u64),
+            ..Default::default()
+        };
+        let r = crate::ooc::factorize(&cfg, None)?;
+        let m = &r.metrics;
+        println!(
+            "{label:>10} {:>12.2} {:>12.2} {:>12.3} {:>10.1}",
+            m.disk_rd_bytes as f64 / 1e9,
+            m.disk_wr_bytes as f64 / 1e9,
+            r.elapsed_s,
+            r.tflops,
+        );
+        let mut row = vec![
+            ("host", Json::str(label)),
+            ("disk_rd_bytes", Json::num(m.disk_rd_bytes as f64)),
+            ("disk_wr_bytes", Json::num(m.disk_wr_bytes as f64)),
+            ("elapsed_s", Json::num(r.elapsed_s)),
+            ("tflops", Json::num(r.tflops)),
+        ];
+        if let Some(b) = cfg.host_mem_bytes {
+            row.push(("host_bytes", Json::num(b as f64)));
+        }
+        rows.push(Json::obj(row));
+    }
+    Ok(Json::obj(vec![("figure", Json::str("ablation_host_mem")), ("rows", Json::Arr(rows))]))
+}
+
 pub fn ablation_all(n: usize, ts: usize) -> Result<Json> {
     Ok(Json::obj(vec![
         ("policy", ablation_policy(n, ts)?),
@@ -321,6 +378,7 @@ pub fn ablation_all(n: usize, ts: usize) -> Result<Json> {
         ("prefetch", ablation_prefetch(n, ts)?),
         ("precisions", ablation_precisions(n, ts)?),
         ("ndev", ablation_ndev(n, ts)?),
+        ("host_mem", ablation_host_mem(n, ts)?),
     ]))
 }
 
@@ -434,6 +492,28 @@ mod tests {
                 r.get("d2d_by_prec").as_arr().unwrap().iter().map(|b| b.as_f64().unwrap()).sum();
             assert_eq!(parts, get(r, "d2d_bytes"), "{r}");
         }
+    }
+
+    #[test]
+    fn host_axis_is_silent_at_capacity_and_pays_disk_below_it() {
+        let j = ablation_host_mem(32 * 1024, 2048).unwrap();
+        let rows = j.get("rows").as_arr().unwrap();
+        let get = |r: &Json, k: &str| r.get(k).as_f64().unwrap();
+        // rows: inf, 2x, 1x, 0.5x — at >= 1x the whole triangle fits in
+        // host RAM, so the tier must be strictly additive (zero disk)
+        for r in &rows[..3] {
+            assert_eq!(get(r, "disk_rd_bytes"), 0.0, "{r}");
+            assert_eq!(get(r, "disk_wr_bytes"), 0.0, "{r}");
+        }
+        // below capacity the tail of the triangle starts on NVMe: the
+        // runs must pay real two-hop traffic and a longer makespan
+        let half = &rows[3];
+        assert!(get(half, "disk_rd_bytes") > 0.0, "{half}");
+        assert!(get(half, "disk_wr_bytes") > 0.0, "{half}");
+        assert!(
+            get(half, "elapsed_s") >= get(&rows[0], "elapsed_s"),
+            "spilling cannot beat unbounded RAM: {half}"
+        );
     }
 
     #[test]

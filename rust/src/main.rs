@@ -86,6 +86,14 @@ FACTORIZE FLAGS:
   --ndev D           number of (simulated) devices
   --streams S        streams per device
   --vmem-mib M       device memory budget (forces OOC at small scale)
+  --host-mem-mib M   finite host-RAM budget: tiles beyond it start on the
+  --host-mem-gib G   NVMe spill tier and reads become two-hop disk→host→HBM
+                     loads (default: unbounded — no disk byte is ever moved)
+  --host-policy P    spill victim selection for the bounded host pool:
+                     deadline (schedule-aware farthest-next-use, default)
+                     | lru (naive recency baseline)
+  --disk-gbps B      override the profile's NVMe bandwidth (GB/s)
+  --disk-latency-us L  override the profile's NVMe per-transfer latency
   --hw H             a100|h100|gh200|gh200-quad hardware profile (model mode)
   --precisions P,... subset of f8,f16,f32,f64 (default f64)
   --accuracy A       MxP threshold epsilon_high (default 1e-8)
@@ -180,6 +188,24 @@ fn parse_cfg(mut args: VecDeque<String>) -> Result<RunConfig> {
             "--vmem-mib" => {
                 cfg.vmem_bytes =
                     Some(next(&mut args, "--vmem-mib")?.parse::<u64>()? * 1024 * 1024)
+            }
+            "--host-mem-mib" => {
+                cfg.host_mem_bytes =
+                    Some(next(&mut args, "--host-mem-mib")?.parse::<u64>()? * 1024 * 1024)
+            }
+            "--host-mem-gib" => {
+                cfg.host_mem_bytes = Some(
+                    next(&mut args, "--host-mem-gib")?.parse::<u64>()? * 1024 * 1024 * 1024,
+                )
+            }
+            "--host-policy" => {
+                let v = next(&mut args, "--host-policy")?;
+                cfg.host_policy = ooc_cholesky::config::HostPolicy::parse(&v)
+                    .with_context(|| format!("bad --host-policy {v:?} (deadline|lru)"))?
+            }
+            "--disk-gbps" => cfg.hw.disk_gbps = next(&mut args, "--disk-gbps")?.parse()?,
+            "--disk-latency-us" => {
+                cfg.hw.disk_latency_us = next(&mut args, "--disk-latency-us")?.parse()?
             }
             "--hw" => {
                 cfg.hw = HwProfile::by_name(&next(&mut args, "--hw")?).context("bad --hw")?

@@ -41,6 +41,17 @@ pub struct Metrics {
     pub h2d_transfers: AtomicU64,
     pub d2h_transfers: AtomicU64,
     pub d2d_transfers: AtomicU64,
+    /// NVMe tier, read direction: bytes staged disk → host because a
+    /// read's home tile had spilled out of the finite host pool (the
+    /// first hop of a two-hop load). Zero whenever `--host-mem` is
+    /// unset — the tier is strictly additive.
+    pub disk_rd_bytes: AtomicU64,
+    pub disk_rd_transfers: AtomicU64,
+    /// NVMe tier, write direction: bytes the host pool spilled to disk
+    /// to admit a new tile (dirty write-backs and RAM-only residents;
+    /// clean tiles with a disk copy drop free)
+    pub disk_wr_bytes: AtomicU64,
+    pub disk_wr_transfers: AtomicU64,
     /// cache behaviour
     pub cache_hits: AtomicU64,
     pub cache_misses: AtomicU64,
@@ -127,6 +138,16 @@ impl Metrics {
         self.d2d_transfers.fetch_add(1, Ordering::Relaxed);
     }
 
+    pub fn record_disk_rd(&self, bytes: u64) {
+        self.disk_rd_bytes.fetch_add(bytes, Ordering::Relaxed);
+        self.disk_rd_transfers.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_disk_wr(&self, bytes: u64) {
+        self.disk_wr_bytes.fetch_add(bytes, Ordering::Relaxed);
+        self.disk_wr_transfers.fetch_add(1, Ordering::Relaxed);
+    }
+
     pub fn record_task(&self, op: TaskOp, ts: usize) {
         let t = ts as u64;
         let flops = match op {
@@ -171,6 +192,10 @@ impl Metrics {
             h2d_transfers: self.h2d_transfers.load(Ordering::Relaxed),
             d2h_transfers: self.d2h_transfers.load(Ordering::Relaxed),
             d2d_transfers: self.d2d_transfers.load(Ordering::Relaxed),
+            disk_rd_bytes: self.disk_rd_bytes.load(Ordering::Relaxed),
+            disk_rd_transfers: self.disk_rd_transfers.load(Ordering::Relaxed),
+            disk_wr_bytes: self.disk_wr_bytes.load(Ordering::Relaxed),
+            disk_wr_transfers: self.disk_wr_transfers.load(Ordering::Relaxed),
             cache_hits: self.cache_hits.load(Ordering::Relaxed),
             cache_misses: self.cache_misses.load(Ordering::Relaxed),
             cache_evictions: self.cache_evictions.load(Ordering::Relaxed),
@@ -229,6 +254,10 @@ pub struct MetricsSnapshot {
     pub h2d_transfers: u64,
     pub d2h_transfers: u64,
     pub d2d_transfers: u64,
+    pub disk_rd_bytes: u64,
+    pub disk_rd_transfers: u64,
+    pub disk_wr_bytes: u64,
+    pub disk_wr_transfers: u64,
     pub cache_hits: u64,
     pub cache_misses: u64,
     pub cache_evictions: u64,
@@ -295,6 +324,10 @@ impl MetricsSnapshot {
             ("h2d_transfers", Json::num(self.h2d_transfers as f64)),
             ("d2h_transfers", Json::num(self.d2h_transfers as f64)),
             ("d2d_transfers", Json::num(self.d2d_transfers as f64)),
+            ("disk_rd_bytes", Json::num(self.disk_rd_bytes as f64)),
+            ("disk_rd_transfers", Json::num(self.disk_rd_transfers as f64)),
+            ("disk_wr_bytes", Json::num(self.disk_wr_bytes as f64)),
+            ("disk_wr_transfers", Json::num(self.disk_wr_transfers as f64)),
             ("cache_hits", Json::num(self.cache_hits as f64)),
             ("cache_misses", Json::num(self.cache_misses as f64)),
             ("cache_evictions", Json::num(self.cache_evictions as f64)),
@@ -336,6 +369,10 @@ impl MetricsSnapshot {
         self.h2d_transfers += o.h2d_transfers;
         self.d2h_transfers += o.d2h_transfers;
         self.d2d_transfers += o.d2d_transfers;
+        self.disk_rd_bytes += o.disk_rd_bytes;
+        self.disk_rd_transfers += o.disk_rd_transfers;
+        self.disk_wr_bytes += o.disk_wr_bytes;
+        self.disk_wr_transfers += o.disk_wr_transfers;
         self.cache_hits += o.cache_hits;
         self.cache_misses += o.cache_misses;
         self.cache_evictions += o.cache_evictions;
@@ -466,6 +503,8 @@ mod tests {
         assert_eq!(j.get("d2h_by_prec").as_arr().unwrap().len(), 4);
         assert_eq!(j.get("d2d_by_prec").as_arr().unwrap().len(), 4);
         assert!(j.get("d2d_bytes").as_f64().is_some());
+        assert!(j.get("disk_rd_bytes").as_f64().is_some());
+        assert!(j.get("disk_wr_transfers").as_f64().is_some());
         assert!(j.get("prefetch_overlap").as_f64().is_some());
         assert!(j.get("steals").as_f64().is_some());
         assert!(j.get("reroutes").as_f64().is_some());
@@ -507,6 +546,27 @@ mod tests {
         assert_eq!(tot.d2h_transfers, 2);
         assert_eq!(tot.n_syrk, 2);
         assert_eq!(tot.flops, 2 * 32 * 32 * 32);
+    }
+
+    #[test]
+    fn disk_tier_counters_accumulate_but_stay_off_the_link_total() {
+        let m = Metrics::new();
+        m.record_disk_rd(100);
+        m.record_disk_rd(50);
+        m.record_disk_wr(30);
+        let s = m.snapshot();
+        assert_eq!(s.disk_rd_bytes, 150);
+        assert_eq!(s.disk_rd_transfers, 2);
+        assert_eq!(s.disk_wr_bytes, 30);
+        assert_eq!(s.disk_wr_transfers, 1);
+        // the disk link is host-side: its traffic never enters the
+        // interconnect total the existing goldens pin
+        assert_eq!(s.total_bytes(), 0);
+        let mut tot = MetricsSnapshot::default();
+        tot.accumulate(&s);
+        tot.accumulate(&s);
+        assert_eq!(tot.disk_rd_bytes, 300);
+        assert_eq!(tot.disk_wr_transfers, 2);
     }
 
     #[test]

@@ -23,7 +23,11 @@
 //!   stream's own program order and need no runtime check at all;
 //! * **read routes** — each read's *source device*, resolved against the
 //!   run's [`crate::config::LinkModel`] via [`route_read`] (see
-//!   [`CompiledSchedule::read_src_of`]);
+//!   [`CompiledSchedule::read_src_of`]). Under a finite `--host-mem`
+//!   pool the compiler also carries a host-residency estimate
+//!   (`host_cutoff`): tiles past it start on the NVMe spill tier and
+//!   their reads lower to [`ReadSrc::Disk`] — a two-hop load charged on
+//!   the disk link and then the owner's host link;
 //! * **per-(tile, device) next-use tables** over the device-local access
 //!   sequence, giving exact reuse distances — what makes the Belady (V4)
 //!   eviction policy implementable (`cache::policy::Policy::Belady`);
@@ -78,7 +82,7 @@ use std::collections::BinaryHeap;
 use std::sync::atomic::{AtomicU32, Ordering};
 use std::sync::Arc;
 
-use crate::config::{EvictionKind, LinkModel, RunConfig, Version};
+use crate::config::{EvictionKind, HostPolicy, LinkModel, RunConfig, Version};
 use crate::precision::{Precision, PrecisionMap};
 use crate::sched::{device_of_row, stream_of_row, Job, Schedule};
 use crate::tiles::{tri_len, TileId};
@@ -92,6 +96,13 @@ pub enum ReadSrc {
     /// executors fall back to [`ReadSrc::Host`] when the residency
     /// directory says the copy is gone
     Peer { src: usize },
+    /// the tile's home copy is estimated to start on the NVMe spill
+    /// tier (its [`TileId`] index is past the IR's host cutoff): the
+    /// load is two-hop, charged on the disk link (disk → host) and then
+    /// the owner's host link (host → HBM). The executors probe the live
+    /// [`crate::cache::HostStore`] and collapse to a plain host fetch
+    /// when the tile is already staged in host RAM
+    Disk,
 }
 
 /// The routing predicate, shared verbatim by the compiler and both
@@ -226,6 +237,55 @@ impl NextUse {
         NextUse { seq, spans, cursors, total: ids.len() as u64 }
     }
 
+    /// Build by *streaming* the access sequence instead of materializing
+    /// it: `stream` is invoked exactly twice with a sink and must emit
+    /// the same sequence both times — the first pass sizes the per-tile
+    /// spans, the second places the access indices (the counting sort of
+    /// [`NextUse::from_ids`] split into two streamed passes; cursors are
+    /// unchanged). This is the streaming-scale path: at nt ≈ 16384+ the
+    /// canonical operand sequence is Θ(nt³) and must never exist as one
+    /// `Vec<TileId>`; a caller re-walks its schedule chunk by chunk
+    /// (e.g. job by job via `Job::for_each_operand`) and the only
+    /// Θ(total) allocation left is the table's own `seq` array.
+    /// Observation-identical to `from_ids` on the same sequence
+    /// (property-tested below).
+    pub fn from_chunks(mut stream: impl FnMut(&mut dyn FnMut(TileId))) -> NextUse {
+        // pass 1: per-tile access counts (the span sizes) + the max id
+        let mut counts: Vec<u32> = Vec::new();
+        let mut total = 0u64;
+        stream(&mut |t: TileId| {
+            let idx = t.index();
+            if idx >= counts.len() {
+                counts.resize(idx + 1, 0);
+            }
+            counts[idx] += 1;
+            total += 1;
+        });
+        assert!(total < u32::MAX as u64, "access sequence overflows u32 indexing");
+        if counts.is_empty() {
+            return NextUse::default();
+        }
+        let max = counts.len() - 1;
+        let mut starts = vec![0u32; max + 2];
+        for (i, &c) in counts.iter().enumerate() {
+            starts[i + 1] = starts[i] + c;
+        }
+        // pass 2: place each access index into its tile's span
+        let mut fill: Vec<u32> = starts[..=max].to_vec();
+        let mut seq = vec![0u32; total as usize];
+        let mut at = 0u32;
+        stream(&mut |t: TileId| {
+            let c = &mut fill[t.index()];
+            seq[*c as usize] = at;
+            *c += 1;
+            at += 1;
+        });
+        assert_eq!(at as u64, total, "stream must replay the identical sequence");
+        let spans: Vec<(u32, u32)> = (0..=max).map(|t| (starts[t], starts[t + 1])).collect();
+        let cursors = spans.iter().map(|&(s, _)| AtomicU32::new(s)).collect();
+        NextUse { seq, spans, cursors, total }
+    }
+
     /// Next access of `tile` at or after `now`; `u64::MAX` if never again.
     pub fn next_use(&self, tile: impl Into<TileId>, now: u64) -> u64 {
         let idx = tile.into().index();
@@ -289,6 +349,12 @@ pub struct CompiledSchedule {
     /// whether peer routing was active at compile time (ndev > 1,
     /// `--routing d2d`, operand-caching version)
     pub routing: bool,
+    /// compile-time host-residency estimate: tiles `[0, host_cutoff)`
+    /// fit the finite host pool in [`TileId`] order, everything at or
+    /// past the cutoff starts on the NVMe spill tier and lowers its
+    /// reads to [`ReadSrc::Disk`]. Equal to the tile count when
+    /// `--host-mem` is unset — nothing ever routes through the disk
+    pub host_cutoff: usize,
     /// reads routed to a peer (D2D) across the whole schedule
     pub peer_routed: u64,
     /// jobs in canonical linear order (the schedule's creation order)
@@ -399,6 +465,7 @@ fn lower_device(
     tile_bytes: &[u32],
     flat: &[(u32, u32)],
     dev: usize,
+    host_cutoff: usize,
     wants_device_table: bool,
 ) -> DevPart {
     let (ndev, spd) = (schedule.ndev, schedule.streams_per_dev);
@@ -442,7 +509,13 @@ fn lower_device(
                 let t = TileId::new(i, j);
                 let bytes = tile_bytes[t.index()] as u64;
                 let owner = device_of_row(i, ndev);
-                let src = route_read(links, routing, bytes, owner, dev);
+                let mut src = route_read(links, routing, bytes, owner, dev);
+                // host-path reads of tiles past the residency estimate
+                // start on the spill tier; peer routes are untouched (a
+                // live peer copy short-circuits the home tier entirely)
+                if matches!(src, ReadSrc::Host) && t.index() >= host_cutoff {
+                    src = ReadSrc::Disk;
+                }
                 if matches!(src, ReadSrc::Peer { .. }) {
                     p.peer_routed += 1;
                 }
@@ -490,6 +563,8 @@ fn lower_device(
             cost += match src {
                 ReadSrc::Peer { src } => links.d2d_time(bytes, src, dev),
                 ReadSrc::Host => links.h2d_time(bytes, owner, dev),
+                // two-hop: disk → host, then the owner's host link up
+                ReadSrc::Disk => links.disk_time(bytes) + links.h2d_time(bytes, owner, dev),
             };
         }
         let clock = &mut stream_clock[gid - dev * spd];
@@ -514,7 +589,20 @@ fn lower_device(
         });
     }
     if wants_device_table {
-        part.next_use = Arc::new(NextUse::from_ids(&part.read_tiles));
+        // streamed construction: re-walk this device's projection of
+        // the canonical order job by job instead of indexing the
+        // operand arena — the same path a skeleton-scale build takes
+        // when no arena exists at all (property-tested identical to
+        // `from_ids` over `part.read_tiles`)
+        part.next_use = Arc::new(NextUse::from_chunks(|emit| {
+            for &(gid, pos) in flat {
+                if gid as usize / spd != dev {
+                    continue;
+                }
+                schedule.jobs[gid as usize][pos as usize]
+                    .for_each_operand(|i, j| emit(TileId::new(i, j)));
+            }
+        }));
     }
     part
 }
@@ -564,13 +652,33 @@ impl CompiledSchedule {
             && ndev > 1
             && matches!(cfg.version, Version::V2 | Version::V3 | Version::RightLooking);
         // next-use tables are Θ(total reads) in memory; materialize only
-        // the one the run's eviction policy consumes (access bases need
-        // just the per-device counters)
-        let wants_device_tables = cfg.eviction == EvictionKind::Belady;
+        // what the run consumes: the HBM Belady policy, or — under a
+        // finite host pool — the deadline-ordered (host-level Belady)
+        // spill policy, which victimizes by farthest next use
+        let wants_device_tables = cfg.eviction == EvictionKind::Belady
+            || (cfg.host_mem_bytes.is_some() && cfg.host_policy == HostPolicy::Deadline);
         let wants_global_table = cfg.eviction == EvictionKind::Oracle;
 
         let flat = canonical_order(schedule);
         let tile_bytes = intern_tile_bytes(nt, cfg.ts, pm);
+        // host-residency estimate: admit tiles in id order until the
+        // finite host pool is full — the exact rule `HostStore::preload`
+        // applies at run time, so routes and runtime start in agreement
+        let host_cutoff = match cfg.host_mem_bytes {
+            None => tile_bytes.len(),
+            Some(cap) => {
+                let mut acc = 0u64;
+                let mut cut = tile_bytes.len();
+                for (i, &b) in tile_bytes.iter().enumerate() {
+                    if acc + b as u64 > cap {
+                        cut = i;
+                        break;
+                    }
+                    acc += b as u64;
+                }
+                cut
+            }
+        };
 
         // lower every device's projection, in parallel when it pays
         let workers = threads.clamp(1, ndev);
@@ -586,6 +694,7 @@ impl CompiledSchedule {
                     &tile_bytes,
                     &flat,
                     dev,
+                    host_cutoff,
                     wants_device_tables,
                 )));
             }
@@ -610,6 +719,7 @@ impl CompiledSchedule {
                                         tb_ref,
                                         flat_ref,
                                         dev,
+                                        host_cutoff,
                                         wants_device_tables,
                                     ),
                                 )
@@ -692,6 +802,7 @@ impl CompiledSchedule {
             eviction: cfg.eviction,
             links,
             routing,
+            host_cutoff,
             peer_routed,
             jobs,
             stream_jobs,
@@ -802,13 +913,36 @@ impl CompiledSchedule {
     /// the IR's pinned link model (replaces the per-read `read_src`
     /// array: the route is a pure function of tile and consumer).
     pub fn read_src_of(&self, tile: TileId, device: usize) -> ReadSrc {
-        route_read(
+        let src = route_read(
             &self.links,
             self.routing,
             self.bytes_of(tile),
             device_of_row(tile.row(), self.ndev),
             device,
-        )
+        );
+        if matches!(src, ReadSrc::Host) && tile.index() >= self.host_cutoff {
+            ReadSrc::Disk
+        } else {
+            src
+        }
+    }
+
+    /// Whether the compile-time residency estimate starts `tile` on the
+    /// NVMe spill tier (see `host_cutoff`). Always `false` when the run
+    /// has no `--host-mem` bound.
+    pub fn starts_on_disk(&self, tile: TileId) -> bool {
+        tile.index() >= self.host_cutoff
+    }
+
+    /// The compile-time host-resident set, in admission (id) order with
+    /// logical byte widths — exactly what the executors feed
+    /// [`crate::cache::HostStore::preload`], so the runtime tier starts
+    /// from the same estimate the read routes were lowered against.
+    pub fn host_resident_tiles(&self) -> impl Iterator<Item = (TileId, u64)> + '_ {
+        self.tile_bytes[..self.host_cutoff]
+            .iter()
+            .enumerate()
+            .map(|(i, &b)| (TileId::from_index(i), b as u64))
     }
 
     /// First device-local access index of (gid, pos)'s reads.
@@ -875,7 +1009,16 @@ impl CompiledSchedule {
                 for &tile in self.reads_of(cj) {
                     let owner = device_of_row(tile.row(), self.ndev);
                     match self.read_src_of(tile, cj.device) {
-                        ReadSrc::Host => {}
+                        ReadSrc::Host => {
+                            if tile.index() >= self.host_cutoff {
+                                return Err(format!("host route past the cutoff in {cj:?}"));
+                            }
+                        }
+                        ReadSrc::Disk => {
+                            if tile.index() < self.host_cutoff {
+                                return Err(format!("disk route below the cutoff in {cj:?}"));
+                            }
+                        }
                         ReadSrc::Peer { src } => {
                             peer += 1;
                             if src == cj.device || src != owner {
@@ -1163,6 +1306,150 @@ mod tests {
         assert_eq!(nu.next_use((0, 0), 0), 0);
         assert_eq!(nu.next_use((0, 0), 250), 250);
         assert_eq!(nu.next_use((0, 0), 500), u64::MAX);
+    }
+
+    #[test]
+    fn next_use_fallback_handles_non_monotone_clock_jumps() {
+        // one tile with a long span: park the shared cursor at one end,
+        // then probe far past the other so both 16-step walks overflow
+        // into the partition_point fallback (backward and forward)
+        let accesses: Vec<(usize, usize)> = (0..400).map(|_| (3, 1)).collect();
+        let nu = NextUse::from_accesses(accesses);
+        assert_eq!(nu.next_use((3, 1), 399), 399); // cursor parks at the tail
+        assert_eq!(nu.next_use((3, 1), 2), 2); // ≥16 steps back: binary search
+        assert_eq!(nu.next_use((3, 1), 397), 397); // ≥16 steps forward again
+        assert_eq!(nu.next_use((3, 1), 0), 0);
+        assert_eq!(nu.next_use((3, 1), 400), u64::MAX);
+        // interleaved tiles probed in a shuffled clock order: the warm
+        // cursors must never change an answer vs a cold table
+        let trace: Vec<(usize, usize)> =
+            (0..300).map(|k| if k % 3 == 0 { (5, 0) } else { (6, 2) }).collect();
+        let warm = NextUse::from_accesses(trace.iter().copied());
+        let mut rng = crate::util::rng::Rng::new(99);
+        for _ in 0..500 {
+            let tile = if rng.below(2) == 0 { (5, 0) } else { (6, 2) };
+            let now = rng.below(310);
+            let cold = NextUse::from_accesses(trace.iter().copied());
+            assert_eq!(warm.next_use(tile, now), cold.next_use(tile, now), "{tile:?}@{now}");
+        }
+    }
+
+    #[test]
+    fn streamed_next_use_matches_from_ids_on_random_schedules() {
+        // the two-pass streamed construction must be bit-identical to
+        // the materialized counting sort on every device projection
+        let mut rng = crate::util::rng::Rng::new(0x5EED);
+        for _ in 0..15 {
+            let nt = 1 + rng.below(12) as usize;
+            let ndev = 1 + rng.below(3) as usize;
+            let spd = 1 + rng.below(3) as usize;
+            for s in [
+                Schedule::left_looking(nt, ndev, spd),
+                Schedule::right_looking(nt, ndev, spd),
+            ] {
+                let flat = canonical_order(&s);
+                for dev in 0..ndev {
+                    let mut ids = Vec::new();
+                    for &(gid, pos) in &flat {
+                        if gid as usize / spd != dev {
+                            continue;
+                        }
+                        s.jobs[gid as usize][pos as usize]
+                            .for_each_operand(|i, j| ids.push(TileId::new(i, j)));
+                    }
+                    let reference = NextUse::from_ids(&ids);
+                    let streamed = NextUse::from_chunks(|emit| {
+                        for &(gid, pos) in &flat {
+                            if gid as usize / spd != dev {
+                                continue;
+                            }
+                            s.jobs[gid as usize][pos as usize]
+                                .for_each_operand(|i, j| emit(TileId::new(i, j)));
+                        }
+                    });
+                    assert_eq!(streamed.total, reference.total);
+                    assert_eq!(streamed.seq, reference.seq);
+                    assert_eq!(streamed.spans, reference.spans);
+                    for _ in 0..50 {
+                        let tile = TileId::from_index(rng.below(tri_len(nt) as u64) as usize);
+                        let now = rng.below(ids.len() as u64 + 4);
+                        assert_eq!(
+                            streamed.next_use(tile, now),
+                            reference.next_use(tile, now),
+                            "{tile:?}@{now}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn disk_routes_follow_the_host_cutoff() {
+        let nt = 8;
+        let s = Schedule::left_looking(nt, 1, 2);
+        let mut c = cfg(nt * 128, 128);
+        // unbounded (default): nothing starts on disk, nothing routes there
+        let ir = CompiledSchedule::compile(&s, &c);
+        assert_eq!(ir.host_cutoff, tri_len(nt));
+        for cj in &ir.jobs {
+            for &t in ir.reads_of(cj) {
+                assert!(!ir.starts_on_disk(t));
+                assert_ne!(ir.read_src_of(t, cj.device), ReadSrc::Disk);
+            }
+        }
+
+        // bound the host pool to exactly 10 tiles: ids 0..10 stay
+        // resident, everything past the cutoff two-hops through disk
+        let tile = 128u64 * 128 * 8;
+        c.host_mem_bytes = Some(10 * tile);
+        let tiered = CompiledSchedule::compile(&s, &c);
+        assert_eq!(tiered.host_cutoff, 10);
+        tiered.validate(&s).unwrap();
+        let (mut disk, mut host) = (0u64, 0u64);
+        for cj in &tiered.jobs {
+            for &t in tiered.reads_of(cj) {
+                match tiered.read_src_of(t, cj.device) {
+                    ReadSrc::Disk => {
+                        assert!(tiered.starts_on_disk(t));
+                        disk += 1;
+                    }
+                    ReadSrc::Host => {
+                        assert!(!tiered.starts_on_disk(t));
+                        host += 1;
+                    }
+                    ReadSrc::Peer { .. } => unreachable!("single device never peer-routes"),
+                }
+            }
+        }
+        assert!(disk > 0 && host > 0, "the cutoff must split the read set");
+        // the preload set is exactly the tiles below the cutoff
+        let resident: Vec<_> = tiered.host_resident_tiles().collect();
+        assert_eq!(resident.len(), 10);
+        assert!(resident.iter().all(|&(t, b)| t.index() < 10 && b == tile));
+        // two-hop reads make the estimated schedule strictly slower
+        let last = |ir: &CompiledSchedule| {
+            ir.jobs.iter().map(|c| c.est_end).fold(0.0f64, f64::max)
+        };
+        assert!(last(&tiered) > last(&ir), "disk hops must show in the estimates");
+    }
+
+    #[test]
+    fn tiered_deadline_runs_materialize_device_tables() {
+        let nt = 6;
+        let s = Schedule::left_looking(nt, 2, 1);
+        let mut c = cfg(nt * 128, 128);
+        c.eviction = EvictionKind::Lru;
+        let plain = CompiledSchedule::compile(&s, &c);
+        assert_eq!(plain.next_use_table(0).total, 0, "LRU HBM runs skip the tables");
+        // a finite host pool under the deadline spill policy needs the
+        // per-device next-use tables for its farthest-next-use victims
+        c.host_mem_bytes = Some(6 * 128 * 128 * 8);
+        let tiered = CompiledSchedule::compile(&s, &c);
+        assert!(tiered.next_use_table(0).total > 0, "deadline spill needs next-use");
+        c.host_policy = crate::config::HostPolicy::Lru;
+        let lru_host = CompiledSchedule::compile(&s, &c);
+        assert_eq!(lru_host.next_use_table(0).total, 0, "LRU host spill needs none");
     }
 
     #[test]

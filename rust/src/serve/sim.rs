@@ -67,6 +67,8 @@ struct TenantState {
     last_done: f64,
     pending: VecDeque<usize>,
     peak_resident: u64,
+    /// reusable eviction-drain buffer (no per-sync allocation)
+    evict_buf: Vec<TileId>,
 }
 
 impl TenantState {
@@ -82,6 +84,7 @@ impl TenantState {
             last_done: 0.0,
             pending: VecDeque::new(),
             peak_resident: 0,
+            evict_buf: Vec::new(),
         }
     }
 
@@ -259,9 +262,14 @@ impl Ctx<'_> {
 
     /// Mirror a cache slice's removals into the tenant directory.
     fn sync_dir(&mut self, dev: usize) {
-        for tile in self.tenant.caches[dev].drain_evicted() {
-            self.tenant.dir.record_evict(tile, dev);
-            self.tenant.landed[dev][tile.index()] = f64::INFINITY;
+        let TenantState { caches, dir, landed, evict_buf, .. } = &mut *self.tenant;
+        if !caches[dev].has_evicted() {
+            return;
+        }
+        caches[dev].drain_evicted_into(evict_buf);
+        for &tile in evict_buf.iter() {
+            dir.record_evict(tile, dev);
+            landed[dev][tile.index()] = f64::INFINITY;
         }
     }
 

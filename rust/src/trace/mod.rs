@@ -30,6 +30,11 @@ use crate::tiles::TileId;
 
 pub mod profile;
 
+/// Sentinel value for [`StallCause::WaitXfer`]'s `src`: the transfer is
+/// the disk→host hop of a two-hop load (tile had spilled past host RAM),
+/// not a peer-device copy. Device counts are `u16` but far below this.
+pub const DISK_SRC: u16 = u16::MAX;
+
 /// Why a lane was idle. Emitted by the DES coordinator at every point
 /// where virtual time jumps forward, and by the real executor's wait
 /// paths (best-effort wall-clock spans there).
@@ -39,7 +44,8 @@ pub enum StallCause {
     /// dependency; `producer` is the tile being waited on)
     WaitDep { producer: TileId },
     /// waiting for a transfer engine to free up before moving `tile`;
-    /// `src` is the peer source device for D2D routes, `None` for host
+    /// `src` is the peer source device for D2D routes, `None` for host,
+    /// [`DISK_SRC`] for the disk→host hop of a spilled tile
     WaitXfer { tile: TileId, src: Option<u16> },
     /// waiting for the compute engine to drain earlier kernels
     WaitCompute,
@@ -98,6 +104,12 @@ pub enum EventKind {
     /// zero-duration repair marker: the next read was served from a
     /// cheaper confirmed source than the compile-time route
     Reroute,
+    /// disk→host read on the per-device disk lane: first hop of a
+    /// two-hop load for a tile that spilled past host RAM
+    DiskRd,
+    /// host→disk spill write-back on the per-device disk lane (victim
+    /// of the bounded host store's eviction cascade)
+    DiskWr,
 }
 
 impl EventKind {
@@ -113,6 +125,7 @@ impl EventKind {
             EventKind::Stall(_) => "stall",
             EventKind::Steal => "steal",
             EventKind::Reroute => "reroute",
+            EventKind::DiskRd | EventKind::DiskWr => "disk",
         }
     }
 
@@ -148,6 +161,10 @@ pub enum Label {
     /// reroute marker: read of `tile` served D2D from device `src`
     /// instead of the compiled route, e.g. "reroute(3,1)<-1"
     Reroute { tile: TileId, src: u16 },
+    /// disk→host read of a spilled tile, e.g. "disk_rd(3,1)"
+    DiskRd(TileId),
+    /// host→disk spill write-back, e.g. "disk_wr(3,1)"
+    DiskWr(TileId),
     /// escape hatch for tests / one-off markers (static, so still Copy)
     Raw(&'static str),
 }
@@ -170,6 +187,9 @@ impl Label {
                 StallCause::WaitDep { producer } => {
                     format!("wait_dep({},{})", producer.row(), producer.col())
                 }
+                StallCause::WaitXfer { tile, src: Some(s) } if s == DISK_SRC => {
+                    format!("wait_xfer({},{})<-disk", tile.row(), tile.col())
+                }
                 StallCause::WaitXfer { tile, src: Some(s) } => {
                     format!("wait_xfer({},{})<-{}", tile.row(), tile.col(), s)
                 }
@@ -187,6 +207,8 @@ impl Label {
             Label::Reroute { tile, src } => {
                 format!("reroute({},{})<-{}", tile.row(), tile.col(), src)
             }
+            Label::DiskRd(t) => format!("disk_rd({},{})", t.row(), t.col()),
+            Label::DiskWr(t) => format!("disk_wr({},{})", t.row(), t.col()),
             Label::Raw(s) => s.into(),
         }
     }
@@ -208,6 +230,8 @@ impl Label {
             | Label::Stall(_)
             | Label::Steal { .. }
             | Label::Reroute { .. }
+            | Label::DiskRd(_)
+            | Label::DiskWr(_)
             | Label::Raw(_) => None,
         }
     }
@@ -228,15 +252,17 @@ pub struct Event {
 /// Append-only event sink with per-lane buffers.
 ///
 /// A *lane* is one (device, stream) pair; stream `streams_per_dev` is the
-/// dedicated transfer ("Pref") lane. Executors size the trace with
-/// [`Trace::for_run`]; events outside the declared geometry (and all
-/// events of geometry-less [`Trace::new`] traces, as used in tests) land
-/// in a spill lane, so recording never drops data.
+/// dedicated transfer ("Pref") lane and stream `streams_per_dev + 1` the
+/// disk lane (spill write-backs and disk→host reads of the third memory
+/// tier). Executors size the trace with [`Trace::for_run`]; events
+/// outside the declared geometry (and all events of geometry-less
+/// [`Trace::new`] traces, as used in tests) land in a spill lane, so
+/// recording never drops data.
 #[derive(Debug)]
 pub struct Trace {
     pub enabled: bool,
-    /// lanes per device (streams_per_dev + 1 transfer lane); 0 = no
-    /// declared geometry, everything spills
+    /// lanes per device (streams_per_dev + transfer lane + disk lane);
+    /// 0 = no declared geometry, everything spills
     lane_stride: usize,
     lanes: Vec<Mutex<Vec<Event>>>,
     spill: Mutex<Vec<Event>>,
@@ -250,10 +276,10 @@ impl Trace {
         Trace { enabled, lane_stride: 0, lanes: Vec::new(), spill: Mutex::new(Vec::new()) }
     }
 
-    /// Trace sized for a run: `ndev × (streams_per_dev + 1)` lanes (the
-    /// `+1` is the per-device transfer lane).
+    /// Trace sized for a run: `ndev × (streams_per_dev + 2)` lanes (the
+    /// `+2` are the per-device transfer lane and disk lane).
     pub fn for_run(enabled: bool, ndev: usize, streams_per_dev: usize) -> Self {
-        let stride = streams_per_dev + 1;
+        let stride = streams_per_dev + 2;
         Trace {
             enabled,
             lane_stride: stride,
@@ -516,12 +542,28 @@ impl Trace {
                     EventKind::Work => b'#',
                     EventKind::Prefetch => b'p',
                     EventKind::Stall(_) | EventKind::Steal | EventKind::Reroute => b'?',
+                    EventKind::DiskRd => b'r',
+                    EventKind::DiskWr => b'w',
                 };
                 for c in c0..=c1 {
                     line[c] = ch;
                 }
             }
             out.push_str(&format!("{name} |{}|\n", String::from_utf8(line).unwrap()));
+        }
+        if evs.iter().any(|e| matches!(e.kind, EventKind::DiskRd | EventKind::DiskWr)) {
+            let mut line = vec![b'.'; width];
+            for e in evs.iter() {
+                let ch = match e.kind {
+                    EventKind::DiskRd => b'r',
+                    EventKind::DiskWr => b'w',
+                    _ => continue,
+                };
+                for c in col(e.t0)..=col(e.t1).max(col(e.t0)) {
+                    line[c] = ch;
+                }
+            }
+            out.push_str(&format!("Disk |{}|\n", String::from_utf8(line).unwrap()));
         }
         if evs.iter().any(|e| e.kind.is_stall()) {
             let mut line = vec![b'.'; width];
@@ -710,6 +752,35 @@ mod tests {
             "reroute(3,1)<-1"
         );
         assert_eq!(Label::Steal { tile: TileId::new(3, 1), victim: 2 }.target_tile(), None);
+    }
+
+    #[test]
+    fn disk_tier_labels_and_lanes() {
+        assert_eq!(Label::DiskRd(TileId::new(3, 1)).render(), "disk_rd(3,1)");
+        assert_eq!(Label::DiskWr(TileId::new(3, 1)).render(), "disk_wr(3,1)");
+        assert_eq!(Label::DiskRd(TileId::new(3, 1)).target_tile(), None);
+        assert_eq!(EventKind::DiskRd.cat(), "disk");
+        assert_eq!(EventKind::DiskWr.cat(), "disk");
+        assert_eq!(
+            Label::Stall(StallCause::WaitXfer { tile: TileId::new(4, 2), src: Some(DISK_SRC) })
+                .render(),
+            "wait_xfer(4,2)<-disk"
+        );
+        // the disk lane (stream == streams_per_dev + 1) is part of the
+        // declared geometry, not spill
+        let t = Trace::for_run(true, 1, 2);
+        t.record(Event {
+            device: 0,
+            stream: 3, // disk lane for spd=2
+            kind: EventKind::DiskRd,
+            label: Label::DiskRd(TileId::new(1, 0)),
+            t0: 0.0,
+            t1: 1.0,
+        });
+        assert_eq!(t.len(), 1);
+        let s = t.render_ascii(20);
+        let disk_row = s.lines().find(|l| l.starts_with("Disk")).expect("disk row missing");
+        assert!(disk_row.contains('r'), "disk-read glyph missing: {disk_row}");
     }
 
     #[test]

@@ -24,7 +24,7 @@ use crate::sched::CompiledSchedule;
 use crate::tiles::TileId;
 use crate::util::json::Json;
 
-use super::{Event, EventKind, Label, StallCause, Trace, STALL_CAUSE_TAGS};
+use super::{Event, EventKind, Label, StallCause, Trace, DISK_SRC, STALL_CAUSE_TAGS};
 
 /// Busy/stall accounting for one (device, stream) lane.
 #[derive(Debug, Clone)]
@@ -322,12 +322,14 @@ pub fn critical_path(trace: &Trace) -> Option<CriticalPath> {
                     .map(|(i, _)| i)
                     .next_back()
             }
-            EventKind::Stall(StallCause::WaitXfer { .. }) => {
-                // which engine was busy: the d2h engine if the blocked
-                // op was a write-back, else the h2d/d2d engine
+            EventKind::Stall(StallCause::WaitXfer { src, .. }) => {
+                // which engine was busy: the disk engine for the
+                // disk→host hop of a spilled tile, the d2h engine if the
+                // blocked op was a write-back, else the h2d/d2d engine
                 let blocked_kind = e.kind;
-                resolver(pe.device, pe.t1, &|r| match blocked_kind {
-                    EventKind::D2H => r.kind == EventKind::D2H,
+                resolver(pe.device, pe.t1, &|r| match (src, blocked_kind) {
+                    (Some(s), _) if s == DISK_SRC => r.kind == EventKind::DiskRd,
+                    (_, EventKind::D2H) => r.kind == EventKind::D2H,
                     _ => matches!(r.kind, EventKind::H2D | EventKind::D2D),
                 })
             }
@@ -705,6 +707,44 @@ mod tests {
         let b = StallBreakdown::compute(&t);
         let max_busy = b.lanes.iter().map(|l| l.busy_s).fold(0.0, f64::max);
         assert!(cp.len_s > max_busy);
+    }
+
+    #[test]
+    fn critical_path_crosses_to_the_disk_lane_on_disk_stalls() {
+        // consumer lane stalls on a spilled tile's disk→host hop, then
+        // uploads and computes; the path must redirect to the DiskRd
+        let t = Trace::for_run(true, 1, 2);
+        let tile = TileId::new(2, 0);
+        t.record(Event {
+            device: 0,
+            stream: 3, // disk lane for spd=2
+            kind: K::DiskRd,
+            label: Label::DiskRd(tile),
+            t0: 0.0,
+            t1: 1.0,
+        });
+        let cause = StallCause::WaitXfer { tile, src: Some(DISK_SRC) };
+        t.record(Event {
+            device: 0,
+            stream: 0,
+            kind: K::Stall(cause),
+            label: Label::Stall(cause),
+            t0: 0.0,
+            t1: 1.0,
+        });
+        t.record(Event {
+            device: 0,
+            stream: 0,
+            kind: K::H2D,
+            label: Label::H2d(tile),
+            t0: 1.0,
+            t1: 1.5,
+        });
+        t.record(ev(0, 0, K::Work, 1.5, 2.5));
+        let cp = critical_path(&t).unwrap();
+        assert!((cp.len_s - cp.makespan_s).abs() < 1e-12, "len {} vs {}", cp.len_s, cp.makespan_s);
+        assert_eq!(cp.steps[0].kind, K::DiskRd, "path must start on the disk lane: {:?}", cp.steps);
+        assert!(cp.steps.iter().all(|s| !s.kind.is_stall()), "disk stall is explained");
     }
 
     #[test]

@@ -177,6 +177,17 @@ impl XferPlan {
                         ReadSrc::Host => {
                             ir.links.h2d_time(bytes, device_of_row(tile.row(), ir.ndev), cj.device)
                         }
+                        // two-hop: the NVMe→host stage must also finish
+                        // before the consumer, so the latest viable start
+                        // backs off by both link times
+                        ReadSrc::Disk => {
+                            ir.links.disk_time(bytes)
+                                + ir.links.h2d_time(
+                                    bytes,
+                                    device_of_row(tile.row(), ir.ndev),
+                                    cj.device,
+                                )
+                        }
                     };
                     let deadline_us = ((cj.est_start - dt).max(0.0) * 1e6) as u64;
                     sp.triggers[trigger].push(PlannedLoad {
@@ -408,6 +419,33 @@ mod tests {
                 assert_eq!(l.src, ReadSrc::Host);
             }
         }
+    }
+
+    #[test]
+    fn disk_routed_loads_back_off_both_hops() {
+        let nt = 16;
+        let s = Schedule::left_looking(nt, 1, 2);
+        let mut c = cfg(Version::V3, nt * 128, 128, 4);
+        // host holds 10 of the 136 triangle tiles; the rest start on disk
+        c.host_mem_bytes = Some((128 * 128 * 8) as u64 * 10);
+        let ir = CompiledSchedule::compile(&s, &c);
+        let plan = XferPlan::build(&ir, &c);
+        let mut disk = 0usize;
+        for gid in 0..s.total_streams() {
+            for pos in 0..s.jobs[gid].len() {
+                for l in plan.loads_at(gid, pos) {
+                    if l.src != ReadSrc::Disk {
+                        continue;
+                    }
+                    disk += 1;
+                    let cj = ir.job_at(gid, l.consumer_pos);
+                    let dt = ir.links.disk_time(l.bytes)
+                        + ir.links.h2d_time(l.bytes, device_of_row(l.tile.row(), 1), cj.device);
+                    assert_eq!(l.deadline_us, ((cj.est_start - dt).max(0.0) * 1e6) as u64);
+                }
+            }
+        }
+        assert!(disk > 0, "bounded host must route some planned loads via disk");
     }
 
     #[test]

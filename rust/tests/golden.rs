@@ -48,6 +48,20 @@ fn golden_path_ndev2() -> std::path::PathBuf {
     std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/golden/smoke_metrics_ndev2.json")
 }
 
+/// The three-tier smoke config: the same problem with host RAM capped at
+/// 2 MiB — exactly 16 of the 36 tiles — so the triangle's tail starts on
+/// the NVMe tier and the write-back churn spills. Every device-side
+/// counter must match the unbounded golden (the tier sits *under* the
+/// HBM cache); only the four disk counters differ. Pre-validated by the
+/// Python DES mock of the host tier.
+fn smoke_cfg_tiered() -> RunConfig {
+    RunConfig { host_mem_bytes: Some(2 * 1024 * 1024), ..smoke_cfg() }
+}
+
+fn golden_path_tiered() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/golden/smoke_metrics_tiered.json")
+}
+
 fn check_golden(cfg: &RunConfig, path: std::path::PathBuf) {
     let report = ooc::factorize(cfg, None).unwrap();
     let got = report.golden_metrics_string();
@@ -72,6 +86,11 @@ fn model_smoke_run_matches_golden() {
 #[test]
 fn model_smoke_run_ndev2_matches_golden() {
     check_golden(&smoke_cfg_ndev2(), golden_path_ndev2());
+}
+
+#[test]
+fn model_smoke_run_tiered_matches_golden() {
+    check_golden(&smoke_cfg_tiered(), golden_path_tiered());
 }
 
 #[test]

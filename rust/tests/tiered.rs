@@ -1,0 +1,127 @@
+//! Three-tier out-of-core integration tests: HBM -> host RAM -> NVMe.
+//!
+//! A bounded `--host-mem` capacity splits the triangle at compile time —
+//! the prefix that fits starts in RAM, the tail starts on disk — and
+//! every touch of a spilled tile is a two-hop load (disk -> host ->
+//! HBM) charged on both links. These tests pin down the three
+//! acceptance properties of the tier: both executors complete (and stay
+//! correct) when the matrix exceeds host RAM, the tier is strictly
+//! additive when unbounded, and the deadline spill policy moves
+//! strictly fewer disk bytes than naive LRU spill at equal capacity.
+//! The model-mode expectations were pre-validated against a Python DES
+//! mock of the host tier (per repo convention) before being asserted
+//! here.
+
+use ooc_cholesky::config::{HostPolicy, Mode, RunConfig, Version};
+use ooc_cholesky::ooc;
+use ooc_cholesky::runtime::Runtime;
+
+/// Model-mode config over `nt` tiles of `ts=128` on one device — small
+/// enough for the Python mock, big enough for real spill churn.
+fn model_cfg(nt: usize) -> RunConfig {
+    RunConfig {
+        n: nt * 128,
+        ts: 128,
+        version: Version::V3,
+        mode: Mode::Model,
+        streams_per_dev: 2,
+        ..Default::default()
+    }
+}
+
+const TILE_128: u64 = (128 * 128 * 8) as u64;
+
+#[test]
+fn model_completes_when_the_matrix_exceeds_host_ram() {
+    // 136-tile triangle, host capacity 40 tiles: the tail of the
+    // triangle starts on NVMe and the write-back churn spills
+    let mut cfg = model_cfg(16);
+    cfg.vmem_bytes = Some(16 * TILE_128);
+    let base = ooc::factorize(&cfg, None).unwrap();
+    assert_eq!(base.metrics.disk_rd_bytes, 0, "unbounded host must never touch disk");
+    assert_eq!(base.metrics.disk_wr_bytes, 0);
+
+    cfg.host_mem_bytes = Some(40 * TILE_128);
+    let tiered = ooc::factorize(&cfg, None).unwrap();
+    assert!(tiered.elapsed_s.is_finite() && tiered.elapsed_s > 0.0);
+    assert!(tiered.elapsed_s >= base.elapsed_s, "two-hop loads cannot be free");
+    assert!(tiered.metrics.disk_rd_bytes > 0, "{:?}", tiered.metrics);
+    assert!(tiered.metrics.disk_wr_bytes > 0, "{:?}", tiered.metrics);
+    // the tier sits under the HBM cache: kernel counts and write-back
+    // volume are untouched, only the sourcing of loads changes
+    assert_eq!(tiered.metrics.n_gemm, base.metrics.n_gemm);
+    assert_eq!(tiered.metrics.n_potrf, base.metrics.n_potrf);
+    assert_eq!(tiered.metrics.d2h_bytes, base.metrics.d2h_bytes);
+    assert_eq!(tiered.metrics.h2d_bytes, base.metrics.h2d_bytes);
+}
+
+#[test]
+fn real_executor_spills_faults_and_stays_correct() {
+    // 36-tile triangle at ts=64, host capacity 12 tiles: two thirds of
+    // the matrix lives in the spill file at any time. The run must
+    // complete, fault tiles back for every touch, and still produce a
+    // correct factor (verify recomputes ||LL^T - A|| from the restored
+    // host tiles, so it also covers the post-run restore path).
+    let rt = Runtime::open_default().expect("run `make artifacts` first");
+    let tile = (64 * 64 * 8) as u64;
+    let mk = |host: Option<u64>| RunConfig {
+        n: 512,
+        ts: 64,
+        version: Version::V3,
+        mode: Mode::Real,
+        streams_per_dev: 2,
+        nugget: 1e-3,
+        verify: true,
+        host_mem_bytes: host,
+        ..Default::default()
+    };
+    let base = ooc::factorize(&mk(None), Some(&rt)).unwrap();
+    let tiered = ooc::factorize(&mk(Some(12 * tile)), Some(&rt)).unwrap();
+    assert!(tiered.residual.unwrap() < 1e-12, "spill path corrupted the factor");
+    assert!(tiered.metrics.disk_rd_bytes > 0, "{:?}", tiered.metrics);
+    assert!(tiered.metrics.disk_wr_bytes > 0, "{:?}", tiered.metrics);
+    // logical disk bytes are whole tiles on both links
+    assert_eq!(tiered.metrics.disk_rd_bytes % tile, 0);
+    assert_eq!(tiered.metrics.disk_wr_bytes % tile, 0);
+    // the unbounded run is untouched by the tier's existence
+    assert_eq!(base.metrics.disk_rd_bytes, 0);
+    assert_eq!(base.metrics.disk_wr_bytes, 0);
+    assert!(base.residual.unwrap() < 1e-12);
+    // and the device-side story is identical: same kernels, same
+    // write-back volume — the tier only re-sources host reads
+    assert_eq!(tiered.metrics.n_gemm, base.metrics.n_gemm);
+    assert_eq!(tiered.metrics.d2h_bytes, base.metrics.d2h_bytes);
+}
+
+#[test]
+fn deadline_spill_moves_strictly_fewer_disk_bytes_than_lru() {
+    // the tentpole's perf claim, at equal host capacity: evicting the
+    // host-resident tile whose next compiled access is farthest away
+    // (the deadline policy, a Belady proxy the static schedule makes
+    // exact) must re-read strictly less from NVMe than recency-based
+    // spill. Pre-validated by the Python DES mock on this exact config.
+    let run = |policy: HostPolicy| {
+        let mut cfg = model_cfg(16);
+        cfg.vmem_bytes = Some(16 * TILE_128);
+        cfg.host_mem_bytes = Some(40 * TILE_128);
+        cfg.host_policy = policy;
+        ooc::factorize(&cfg, None).unwrap()
+    };
+    let deadline = run(HostPolicy::Deadline);
+    let lru = run(HostPolicy::Lru);
+    assert!(lru.metrics.disk_rd_bytes > 0, "{:?}", lru.metrics);
+    assert!(
+        deadline.metrics.disk_rd_bytes < lru.metrics.disk_rd_bytes,
+        "deadline spill must re-read strictly less than LRU: {} vs {}",
+        deadline.metrics.disk_rd_bytes,
+        lru.metrics.disk_rd_bytes,
+    );
+    // total disk traffic (spill + re-read) also improves
+    assert!(
+        deadline.metrics.disk_rd_bytes + deadline.metrics.disk_wr_bytes
+            <= lru.metrics.disk_rd_bytes + lru.metrics.disk_wr_bytes,
+        "deadline {:?} vs lru {:?}",
+        deadline.metrics,
+        lru.metrics,
+    );
+}

@@ -14,8 +14,17 @@ import json
 import sys
 
 BUDGET_S = 1.0  # nt=4096 skeleton compile must finish within this
+STREAM_BUDGET_S = 30.0  # nt=16384 (~134M jobs) skeleton compile budget
 BYTES_PER_JOB = 64.0  # amortized top-end IR footprint bound
-REQUIRED = ["bench", "config", "full_ir", "skeleton", "speedup_vs_legacy_nt512"]
+BYTES_PER_LIVE_TILE = 64.0  # DES residency-table footprint bound
+REQUIRED = [
+    "bench",
+    "config",
+    "des_footprint",
+    "full_ir",
+    "skeleton",
+    "speedup_vs_legacy_nt512",
+]
 
 
 def fail(msg):
@@ -52,7 +61,34 @@ def main():
     if top["bytes_per_job"] > BYTES_PER_JOB:
         fail(f"nt=4096 IR footprint {top['bytes_per_job']:.1f} B/job > {BYTES_PER_JOB}")
 
-    # 3) structural diff vs the committed baseline
+    # 3) streaming scale: the nt=16384 skeleton must compile within its
+    #    own budget and keep the flat O(jobs) footprint
+    xl = {int(p["nt"]): p for p in fresh["skeleton"]}.get(16384)
+    if xl is None:
+        fail("no nt=16384 skeleton point")
+    if xl["min_s"] > STREAM_BUDGET_S:
+        fail(f"nt=16384 compile took {xl['min_s']:.3f}s > {STREAM_BUDGET_S}s budget")
+    if xl["bytes_per_job"] > BYTES_PER_JOB:
+        fail(f"nt=16384 footprint {xl['bytes_per_job']:.1f} B/job > {BYTES_PER_JOB}")
+
+    # 4) DES-structure footprint: the sparse residency tables must stay
+    #    O(live set) — bytes per live tile, not per tile-id-space slot
+    fp = fresh["des_footprint"]
+    for key in ("nt", "live_tiles", "bytes_per_live_tile", "host_store_bytes_per_tile"):
+        if key not in fp:
+            fail(f"des_footprint missing key {key!r}")
+    if fp["bytes_per_live_tile"] > BYTES_PER_LIVE_TILE:
+        fail(
+            f"DES residency tables cost {fp['bytes_per_live_tile']:.1f} B/live-tile "
+            f"> {BYTES_PER_LIVE_TILE}"
+        )
+    if fp["host_store_bytes_per_tile"] > BYTES_PER_LIVE_TILE:
+        fail(
+            f"host store costs {fp['host_store_bytes_per_tile']:.1f} B/tile "
+            f"> {BYTES_PER_LIVE_TILE}"
+        )
+
+    # 5) structural diff vs the committed baseline
     for section in ("full_ir", "skeleton"):
         if nts(fresh, section) != nts(base, section):
             fail(
@@ -64,7 +100,9 @@ def main():
     speedup = fresh["speedup_vs_legacy_nt512"]
     note = "" if speedup >= 5.0 else "  (below the 5x acceptance target!)"
     print(f"bench gate ok: nt=4096 in {top['min_s']:.3f}s, "
+          f"nt=16384 in {xl['min_s']:.3f}s, "
           f"{top['bytes_per_job']:.1f} B/job, "
+          f"DES {fp['bytes_per_live_tile']:.1f} B/live-tile, "
           f"speedup_vs_legacy_nt512 = {speedup:.2f}x{note}")
 
 

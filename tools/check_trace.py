@@ -1,22 +1,30 @@
 #!/usr/bin/env python3
 """CI gate for exported chrome://tracing timelines (trace_chrome.json).
 
-Usage: check_trace.py <trace.json> [--exact]
+Usage: check_trace.py <trace.json> [--exact] [--require-disk]
 
 Structural checks (always):
   * the document is a flat JSON array of event objects
   * every event carries name/cat/ph/ts/pid/tid; ph is X (slice) or s/f
     (flow); X slices also carry a non-negative dur
   * stall slices (cat == "stall") carry args.cause from the known set
+  * disk-tier slices (cat == "disk", the per-device disk lane of a
+    bounded-host-RAM run) are named disk_rd(r,c) / disk_wr(r,c) and
+    count as busy time on their lane
   * per (pid, tid) lane, X-slice start times are monotone non-decreasing
     (the exporter emits a time-sorted timeline)
   * flow events pair up: each id appears exactly once as "s" and once as
     "f", with the start no later than the finish
 
 --exact (model-mode traces only) additionally enforces the stall
-accounting invariant the DES guarantees: on every lane, busy + stall
-durations tile the lane's span with nothing unattributed, and the trace
-contains at least one attributed stall.
+accounting invariant the DES guarantees: on every lane — the disk lane
+included — busy + stall durations tile the lane's span with nothing
+unattributed, and the trace contains at least one attributed stall.
+
+--require-disk (tiered smoke gate) fails unless the trace shows the
+NVMe tier in play: at least one disk_rd/disk_wr slice on a disk lane
+AND at least one consumer stall attributed to the disk→host hop of a
+two-hop load ("wait_xfer(r,c)<-disk").
 
 Hybrid repair markers (cat "steal" / "reroute", zero-duration, emitted
 when --dynamic-fraction > 0) are validated structurally always (complete
@@ -38,6 +46,8 @@ CAUSES = {"dep", "xfer", "compute", "evict", "malloc", "idle"}
 REL_TOL = 1e-6
 
 KERNEL_RE = re.compile(r"^(gemm|syrk|trsm|potrf|upd)\(([\d,]+)\)$")
+DISK_RE = re.compile(r"^disk_(rd|wr)\(\d+,\d+\)$")
+DISK_WAIT_RE = re.compile(r"^wait_xfer\(\d+,\d+\)<-disk$")
 
 
 def kernel_operands(name):
@@ -68,10 +78,11 @@ def fail(msg):
 
 
 def main():
-    args = [a for a in sys.argv[1:] if a != "--exact"]
+    args = [a for a in sys.argv[1:] if a not in ("--exact", "--require-disk")]
     exact = "--exact" in sys.argv[1:]
+    require_disk = "--require-disk" in sys.argv[1:]
     if len(args) != 1:
-        fail("usage: check_trace.py <trace.json> [--exact]")
+        fail("usage: check_trace.py <trace.json> [--exact] [--require-disk]")
     with open(args[0]) as f:
         doc = json.load(f)
     if not isinstance(doc, list):
@@ -82,6 +93,8 @@ def main():
     lanes = {}  # (pid, tid) -> {"last_ts", "busy", "stall", "lo", "hi"}
     flows = {}  # id -> {"s": ts, "f": ts}
     n_stalls = 0
+    n_disk = 0
+    n_disk_waits = 0
     steals = []  # (lane, ts, row, col)
     n_reroutes = 0
     d2h_end = {}  # (row, col) -> write-back end ts
@@ -113,6 +126,13 @@ def main():
                 cause = e.get("args", {}).get("cause")
                 if cause not in CAUSES:
                     fail(f"stall slice {idx} ({e['name']}) has bad cause {cause!r}")
+                if DISK_WAIT_RE.match(e["name"]):
+                    if cause != "xfer":
+                        fail(
+                            f"disk-attributed stall {idx} ({e['name']}) has "
+                            f"cause {cause!r}, want 'xfer'"
+                        )
+                    n_disk_waits += 1
                 lane["stall"] += e["dur"]
                 n_stalls += 1
             elif e["cat"] in ("steal", "reroute"):
@@ -128,6 +148,10 @@ def main():
                 else:
                     n_reroutes += 1
             else:
+                if e["cat"] == "disk":
+                    if not DISK_RE.match(e["name"]):
+                        fail(f"disk slice {idx} has bad name {e['name']!r}")
+                    n_disk += 1
                 lane["busy"] += e["dur"]
             if e["cat"] == "d2h":
                 m = re.match(r"^d2h\((\d+),(\d+)\)$", e["name"])
@@ -196,11 +220,21 @@ def main():
                             f"back at {d2h_end[op]} — steal violated a dependency"
                         )
 
+    if require_disk:
+        if n_disk == 0:
+            fail("--require-disk: trace shows no disk_rd/disk_wr slices")
+        if n_disk_waits == 0:
+            fail(
+                "--require-disk: no consumer stall attributed to the "
+                "disk->host hop (wait_xfer(r,c)<-disk)"
+            )
+
     n_x = sum(1 for e in doc if e["ph"] == "X")
     repair = f", {len(steals)} steals/{n_reroutes} reroutes" if steals or n_reroutes else ""
+    disk = f", {n_disk} disk ops/{n_disk_waits} disk waits" if n_disk or n_disk_waits else ""
     print(
         f"trace gate OK: {n_x} slices ({n_stalls} stalls) on {len(lanes)} lanes, "
-        f"{len(flows)} flow pairs{repair}{' [exact]' if exact else ''}"
+        f"{len(flows)} flow pairs{repair}{disk}{' [exact]' if exact else ''}"
     )
 
 
